@@ -1,0 +1,81 @@
+"""Shared benchmark harness: default paper setup (Table II) + result cache.
+
+Default settings: Llama 3.1 8B, b2s4 (batch 2, seq 4096), FSDP over 8
+devices, MI300X node.  Sim knobs are the calibrated defaults; closed-loop
+runs tune from halfway (paper Fig 9).
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+from functools import lru_cache
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs import get_config                        # noqa: E402
+from repro.core.backends import SimBackend                  # noqa: E402
+from repro.core.c3sim import NodeSim, SimConfig             # noqa: E402
+from repro.core.manager import ManagerConfig, run_closed_loop  # noqa: E402
+from repro.core.thermal import MI300X_PRESET                # noqa: E402
+from repro.core.workload import fsdp_llm_iteration          # noqa: E402
+
+ITERS = 200
+Row = Tuple[str, float, str]
+
+
+def make_node(arch: str = "llama3.1-8b", *, batch: int = 2, seq: int = 4096,
+              seed: int = 1, n_layers: int = 32, **sim_kw) -> NodeSim:
+    cfg = get_config(arch).replace(n_layers=n_layers)
+    wl = fsdp_llm_iteration(cfg, batch=batch, seq=seq, n_shards=8)
+    return NodeSim(wl, MI300X_PRESET, SimConfig(seed=seed, comm_gbps=40.0,
+                                                **sim_kw), 8, seed=seed)
+
+
+@lru_cache(maxsize=8)
+def settled_baseline(arch: str = "llama3.1-8b", seed: int = 1):
+    """Node settled at TDP + its last trace (shared across figures)."""
+    node = make_node(arch, seed=seed)
+    trace = None
+    for _ in range(45):
+        trace = node.step()
+    return node, trace
+
+
+def closed_loop_stats(use_case: str, *, iters: int = ITERS, seed: int = 1,
+                      arch: str = "llama3.1-8b", **mgr_kw):
+    node = make_node(arch, seed=seed)
+    kw = dict(sampling_period=2, warmup=3, window_size=2, power_cap=700.0,
+              cpu_budget=20.0)
+    kw.update(mgr_kw)
+    mc = ManagerConfig(use_case=use_case, **kw)
+    mgr = run_closed_loop(SimBackend(node), mc, iters)
+    h = node.history
+    pre = h[iters // 2 - 30: iters // 2]
+    post = h[-30:]
+    tput = (np.mean([x["throughput"] for x in post])
+            / np.mean([x["throughput"] for x in pre]))
+    power = (np.mean([np.sum(x["power"]) for x in post])
+             / np.mean([np.sum(x["power"]) for x in pre]))
+    # convergence: samples until power within 0.5% of final
+    powers = np.array([np.sum(x["power"]) for x in h[iters // 2:]])
+    final = powers[-20:].mean()
+    conv = int(np.argmax(np.abs(powers - final) / final < 0.005))
+    cv = float(np.std(powers[conv:]) / np.mean(powers[conv:]))
+    return {"node": node, "mgr": mgr, "tput": tput, "power": power,
+            "conv_samples": conv, "cv": cv,
+            "caps": h[-1]["cap"].copy()}
+
+
+@lru_cache(maxsize=16)
+def cached_case(use_case: str, seed: int = 1):
+    return closed_loop_stats(use_case, seed=seed)
+
+
+def timed(fn, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, (time.perf_counter() - t0) * 1e6

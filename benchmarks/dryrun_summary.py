@@ -1,0 +1,49 @@
+"""Summarize the dry-run/roofline cache (results/dryrun/*.json) as benchmark
+rows — the §Dry-run / §Roofline data source."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import List
+
+from benchmarks.common import Row
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                          "dryrun")
+
+
+def load_cells(tag: str = "sp"):
+    out = []
+    for p in sorted(glob.glob(os.path.join(DRYRUN_DIR, f"*-{tag}.json"))):
+        with open(p) as f:
+            out.append(json.load(f))
+    return out
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    for tag, label in (("sp", "single_pod"), ("mp", "multi_pod")):
+        cells = load_cells(tag)
+        ran = [c for c in cells if not c.get("skipped")]
+        skipped = [c for c in cells if c.get("skipped")]
+        if not ran:
+            rows.append((f"dryrun_{label}", 0.0, "missing=run dryrun --all"))
+            continue
+        fracs = [(c["roofline"]["roofline_fraction"], c["arch"], c["shape"])
+                 for c in ran]
+        fits = sum(1 for c in ran if c.get("fits_hbm"))
+        doms = {}
+        for c in ran:
+            doms[c["roofline"]["dominant"]] = \
+                doms.get(c["roofline"]["dominant"], 0) + 1
+        best = max(fracs)
+        worst = min(f for f in fracs if f[2].startswith("train"))
+        compile_s = sum(c["t_compile_s"] for c in ran)
+        rows.append((
+            f"dryrun_{label}", compile_s * 1e6 / max(len(ran), 1),
+            f"cells={len(ran)};skipped={len(skipped)};fits_hbm={fits};"
+            f"dominant={'/'.join(f'{k}:{v}' for k, v in doms.items())};"
+            f"best_frac={best[0]:.3f}({best[1]}|{best[2]});"
+            f"worst_train_frac={worst[0]:.3f}({worst[1]}|{worst[2]})"))
+    return rows

@@ -1,0 +1,88 @@
+"""Kernel microbenchmarks: oracle (jit'd XLA) wall time per call +
+interpret-mode kernel max-abs error vs the oracle as the derived check.
+
+On this CPU container the Pallas kernels run in interpret mode (Python), so
+wall-clock belongs to the XLA oracle; the kernels' contribution is verified
+numerically and their roofline comes from the dry-run analysis.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+        (out[0] if isinstance(out, tuple) else out).block_until_ready()
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run() -> List[Row]:
+    from repro.kernels.flash_attention import (flash_attention,
+                                               flash_attention_ref)
+    from repro.kernels.moe_gemm import moe_gemm, moe_gemm_ref
+    from repro.kernels.rmsnorm import rmsnorm, rmsnorm_ref
+    from repro.kernels.rwkv6_wkv import wkv6, wkv6_ref
+
+    ks = jax.random.split(jax.random.PRNGKey(0), 8)
+    rows: List[Row] = []
+
+    # flash attention (B=1, S=512, H=4, D=64)
+    B, S, H, D = 1, 512, 4, 64
+    q = jax.random.normal(ks[0], (B, S, H, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, H, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, H, D), jnp.float32)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    ref = jax.jit(lambda a, b, c: flash_attention_ref(a, b, c, causal=True))
+    us = _time(ref, qf, kf, vf)
+    out = flash_attention(q, k, v, causal=True)
+    err = float(jnp.max(jnp.abs(
+        out.transpose(0, 2, 1, 3).reshape(B * H, S, D) - ref(qf, kf, vf))))
+    rows.append(("kernel_flash_attention", us,
+                 f"S={S};allclose_err={err:.2e}"))
+
+    # rmsnorm (4096 x 4096)
+    x = jax.random.normal(ks[3], (4096, 4096), jnp.bfloat16)
+    w = jax.random.normal(ks[4], (4096,), jnp.float32)
+    ref = jax.jit(rmsnorm_ref)
+    us = _time(ref, x, w)
+    err = float(jnp.max(jnp.abs(
+        (rmsnorm(x, w) - ref(x, w)).astype(jnp.float32))))
+    rows.append(("kernel_rmsnorm", us, f"rows=4096;allclose_err={err:.2e}"))
+
+    # moe grouped gemm (E=8, C=256, d=512, h=512)
+    xg = jax.random.normal(ks[5], (8, 256, 512), jnp.bfloat16)
+    wg = jax.random.normal(ks[6], (8, 512, 512), jnp.bfloat16)
+    ref = jax.jit(moe_gemm_ref)
+    us = _time(ref, xg, wg)
+    err = float(jnp.max(jnp.abs(
+        (moe_gemm(xg, wg) - ref(xg, wg)).astype(jnp.float32))))
+    rows.append(("kernel_moe_gemm", us, f"ExCxdxh=8x256x512x512;"
+                 f"allclose_err={err:.2e}"))
+
+    # rwkv6 wkv (B=2, S=256, H=4, D=32)
+    shape = (2, 256, 4, 32)
+    r_ = jax.random.normal(ks[7], shape) * 0.5
+    k_ = jax.random.normal(ks[0], shape) * 0.5
+    v_ = jax.random.normal(ks[1], shape) * 0.5
+    wl = -jnp.exp(jax.random.normal(ks[2], shape))
+    u = jax.random.normal(ks[3], (4, 32))
+    ref = jax.jit(wkv6_ref)
+    us = _time(ref, r_, k_, v_, wl, u)
+    y1, s1 = wkv6(r_, k_, v_, wl, u)
+    y2, s2 = ref(r_, k_, v_, wl, u)
+    err = float(jnp.max(jnp.abs(y1 - y2)))
+    rows.append(("kernel_rwkv6_wkv", us, f"S=256;allclose_err={err:.2e}"))
+    return rows

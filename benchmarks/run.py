@@ -1,0 +1,34 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Sections:
+  * paper_figs     — §III characterization + §VII evaluation reproductions
+  * kernels_bench  — Pallas kernel oracles + interpret-mode correctness
+  * dryrun_summary — multi-pod dry-run / roofline aggregates
+"""
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import dryrun_summary, kernels_bench, paper_figs
+    print("name,us_per_call,derived")
+    sections = [("kernels", kernels_bench.run),
+                ("dryrun", dryrun_summary.run)]
+    sections += [(fn.__name__, fn) for fn in paper_figs.ALL]
+    failures = 0
+    for name, fn in sections:
+        try:
+            for row in fn():
+                n, us, derived = row
+                print(f"{n},{us:.1f},{derived}")
+                sys.stdout.flush()
+        except Exception as e:
+            failures += 1
+            print(f"{name},0,ERROR={type(e).__name__}:{e}")
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

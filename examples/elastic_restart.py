@@ -1,0 +1,53 @@
+"""Fault-tolerance demo: train, checkpoint, 'crash', resume — then replan
+the mesh after a simulated device failure (elastic restart).
+
+    PYTHONPATH=src python examples/elastic_restart.py
+"""
+import os
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs import (ParallelConfig, TrainConfig,       # noqa: E402
+                           get_reduced_config)
+from repro.train.data import DataConfig                       # noqa: E402
+from repro.train.fault import ElasticPlan                     # noqa: E402
+from repro.train.train_loop import Trainer, TrainerConfig     # noqa: E402
+
+
+def main():
+    cfg = get_reduced_config("llama3.1-8b")
+    with tempfile.TemporaryDirectory() as d:
+        tc = TrainerConfig(
+            model=cfg,
+            train=TrainConfig(lr=3e-3, warmup_steps=5, total_steps=60,
+                              checkpoint_every=20, checkpoint_dir=d),
+            parallel=ParallelConfig(),
+            data=DataConfig(global_batch=8, seq_len=64))
+        t1 = Trainer(tc)
+        log = t1.run(40)
+        t1.ckpt.wait()
+        print(f"phase 1: trained to step {t1.step}, "
+              f"loss {log[-1]['loss']:.3f}; checkpoint at "
+              f"{t1.ckpt.latest_step()}")
+        del t1                                    # 'crash'
+
+        t2 = Trainer(tc)
+        t2.init_or_restore()
+        print(f"phase 2: restored at step {t2.step} "
+              f"(atomic LATEST pointer)")
+        log2 = t2.run(10)
+        print(f"resumed: loss {log2[-1]['loss']:.3f} at step {t2.step}")
+
+    # elastic replanning (production mesh math; restore re-places leaves
+    # with the new mesh's shardings automatically)
+    plan = ElasticPlan.after_failure(n_devices=256, failed=5,
+                                     model_parallel=16, global_batch=256)
+    print(f"\nelastic replan after losing 5/256 chips: mesh "
+          f"{plan.mesh_shape()}, per-replica batch "
+          f"{plan.batch_per_replica()} (was (16,16) x 16)")
+
+
+if __name__ == "__main__":
+    main()

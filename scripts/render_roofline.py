@@ -1,0 +1,42 @@
+"""Render EXPERIMENTS.md roofline tables from results/dryrun/*.json."""
+import glob
+import json
+import os
+import sys
+
+DIR = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def rows(tag):
+    out = []
+    for p in sorted(glob.glob(os.path.join(DIR, f"*-{tag}.json"))):
+        out.append(json.load(open(p)))
+    return out
+
+
+def table(tag, label):
+    print(f"\n### {label}\n")
+    print("| arch | shape | dominant | T_comp s | T_mem s | T_coll s | "
+          "frac | MODEL/HLO flops | GB/dev | fits 16GB | compile s |")
+    print("|---|---|---|---|---|---|---|---|---|---|---|")
+    cells = rows(tag)
+    ran = [c for c in cells if not c.get("skipped")]
+    ran.sort(key=lambda c: (c["arch"], c["shape"]))
+    for c in ran:
+        rl = c["roofline"]
+        print(f"| {c['arch']} | {c['shape']} | {rl['dominant']} | "
+              f"{rl['t_comp']:.2f} | {rl['t_mem']:.2f} | {rl['t_coll']:.2f} | "
+              f"{rl['roofline_fraction']:.3f} | {rl['flops_ratio']:.3f} | "
+              f"{c['bytes_per_device'] / 1e9:.1f} | "
+              f"{'yes' if c['fits_hbm'] else 'NO'} | {c['t_compile_s']} |")
+    for c in cells:
+        if c.get("skipped"):
+            print(f"| {c['arch']} | {c['shape']} | — skipped: "
+                  f"{c['reason']} | | | | | | | | |")
+    print(f"\n{len(ran)} cells compiled, "
+          f"{sum(1 for c in cells if c.get('skipped'))} documented skips.")
+
+
+if __name__ == "__main__":
+    table("sp", "Single-pod mesh (16 x 16 = 256 chips)")
+    table("mp", "Multi-pod mesh (2 x 16 x 16 = 512 chips)")

@@ -1,0 +1,22 @@
+"""grok-1-314b [moe] — 64L d_model=6144 48H (GQA kv=8) d_ff=32768 vocab=131072,
+MoE 8 experts top-2.  [hf:xai-org/grok-1; unverified]"""
+from repro.configs.base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="grok-1-314b",
+    family="moe",
+    n_layers=64,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    d_head=128,
+    d_ff=32768,                      # per-expert hidden dim
+    vocab_size=131072,
+    activation="gelu",
+    gated_mlp=True,
+    logit_softcap=30.0,              # grok uses tanh soft-capping on logits
+    rope_theta=10_000.0,
+    max_seq_len=8192,
+    moe=MoEConfig(n_experts=8, top_k=2, d_expert=32768),
+    source="[hf:xai-org/grok-1; unverified]",
+)

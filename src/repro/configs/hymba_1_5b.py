@@ -1,0 +1,25 @@
+"""hymba-1.5b [hybrid] — 32L d_model=1600 25H (GQA kv=5) d_ff=5504 vocab=32001,
+ssm_state=16; parallel attention + mamba heads in each block; sliding-window
+attention except global layers {first, middle, last}.  [arXiv:2411.13676; hf]"""
+from repro.configs.base import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="hymba-1.5b",
+    family="hybrid",
+    n_layers=32,
+    d_model=1600,
+    n_heads=25,
+    n_kv_heads=5,
+    d_head=64,
+    d_ff=5504,
+    vocab_size=32001,
+    activation="silu",
+    gated_mlp=True,
+    attention="sliding",
+    window=1024,
+    global_attn_layers=(0, 15, 31),
+    rope_theta=10_000.0,
+    max_seq_len=8192,
+    ssm=SSMConfig(d_state=16, d_conv=4, expand=2),
+    source="[arXiv:2411.13676; hf]",
+)

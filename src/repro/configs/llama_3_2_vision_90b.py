@@ -1,0 +1,23 @@
+"""llama-3.2-vision-90b [vlm] — 100L (80 self + 20 cross-attn, every 5th)
+d_model=8192 64H (GQA kv=8) d_ff=28672 vocab=128256; vision frontend STUBBED:
+input_specs() provides precomputed patch embeddings.
+[hf:meta-llama/Llama-3.2-11B-Vision; unverified]"""
+from repro.configs.base import ModelConfig, VisionConfig
+
+CONFIG = ModelConfig(
+    name="llama-3.2-vision-90b",
+    family="vlm",
+    n_layers=100,                    # counts both self- and cross-attn layers
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_head=128,
+    d_ff=28672,
+    vocab_size=128256,
+    activation="silu",
+    gated_mlp=True,
+    rope_theta=500_000.0,
+    max_seq_len=8192,
+    vision=VisionConfig(vision_dim=1280, vision_seq=1601, cross_attn_every=5),
+    source="[hf:meta-llama/Llama-3.2-11B-Vision; unverified]",
+)

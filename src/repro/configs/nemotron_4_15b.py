@@ -1,0 +1,21 @@
+"""nemotron-4-15b [dense] — 32L d_model=6144 48H (GQA kv=8) d_ff=24576
+vocab=256000; squared-ReLU non-gated MLP.  [arXiv:2402.16819; unverified]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="nemotron-4-15b",
+    family="dense",
+    n_layers=32,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    d_head=128,
+    d_ff=24576,
+    vocab_size=256000,
+    activation="squared_relu",
+    gated_mlp=False,
+    norm="layernorm",
+    rope_theta=10_000.0,
+    max_seq_len=4096,
+    source="[arXiv:2402.16819; unverified]",
+)

@@ -1,0 +1,25 @@
+"""whisper-medium [audio] — enc-dec, 24L enc + 24L dec, d_model=1024 16H (MHA)
+d_ff=4096 vocab=51865; conv frontend STUBBED: input_specs() provides
+precomputed mel-frame embeddings.  [arXiv:2212.04356; unverified]"""
+from repro.configs.base import AudioConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-medium",
+    family="encdec",
+    n_layers=24,                     # decoder layers
+    enc_layers=24,                   # encoder layers
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    d_head=64,
+    d_ff=4096,
+    vocab_size=51865,
+    activation="gelu",
+    gated_mlp=False,
+    norm="layernorm",
+    pos_embedding="learned",
+    rope_theta=0.0,
+    max_seq_len=448,                 # decoder positions (whisper max target len)
+    audio=AudioConfig(frame_dim=80, frame_seq=1500),
+    source="[arXiv:2212.04356; unverified]",
+)

@@ -1,0 +1,31 @@
+"""The paper's primary contribution: Lit Silicon characterization, analytical
+models, detection (Algorithm 1), mitigation (Algorithms 2+3) and the
+node-level power-management layer, plus the calibrated thermal/DVFS/C3 node
+simulator that stands in for device physics on this CPU-only container."""
+from repro.core.backends import PowerBackend, SimBackend, TPUPlatformBackend
+from repro.core.c3sim import C3Sim, IterationTrace, NodeSim, SimConfig
+from repro.core.detect import (aggregate_lead, classify_overlap, cosine,
+                               lead_value_detect, lead_values,
+                               overlap_duration_correlation, pearson,
+                               straggler_index)
+from repro.core.manager import (USE_CASES, ManagerConfig, PowerManager,
+                                run_closed_loop)
+from repro.core.mitigate import adj_power_node, inc_power_gpu
+from repro.core.perf_model import PerfPrediction, predict_speedup, t_agg
+from repro.core.power_model import PowerPrediction, predict_power
+from repro.core.thermal import (MI300X_PRESET, PRESETS, V5E_PRESET,
+                                DevicePreset, DeviceState, ThermalModel)
+from repro.core.workload import (CommKernel, CompKernel, Workload,
+                                 fsdp_llm_iteration)
+
+__all__ = [
+    "PowerBackend", "SimBackend", "TPUPlatformBackend", "C3Sim",
+    "IterationTrace", "NodeSim", "SimConfig", "aggregate_lead",
+    "classify_overlap", "cosine", "lead_value_detect", "lead_values",
+    "overlap_duration_correlation", "pearson", "straggler_index", "USE_CASES",
+    "ManagerConfig", "PowerManager", "run_closed_loop", "adj_power_node",
+    "inc_power_gpu", "PerfPrediction", "predict_speedup", "t_agg",
+    "PowerPrediction", "predict_power", "MI300X_PRESET", "PRESETS",
+    "V5E_PRESET", "DevicePreset", "DeviceState", "ThermalModel", "CommKernel",
+    "CompKernel", "Workload", "fsdp_llm_iteration",
+]

@@ -1,0 +1,73 @@
+"""Power backends: how the manager reads telemetry and sets caps.
+
+The manager is oblivious to the telemetry source — the same property that
+makes the paper's 200-line solution deployable.  ``SimBackend`` drives the
+calibrated node simulator (this CPU container); ``TPUPlatformBackend`` is the
+real-hardware stub documenting the production integration points.
+"""
+from __future__ import annotations
+
+from typing import Optional, Protocol
+
+import numpy as np
+
+from repro.core.c3sim import IterationTrace, NodeSim
+
+
+class PowerBackend(Protocol):
+    n_devices: int
+    tdp: float
+
+    def run_iteration(self) -> IterationTrace: ...
+    def set_power_caps(self, caps: np.ndarray) -> None: ...
+    def get_power_caps(self) -> np.ndarray: ...
+    def telemetry(self) -> dict: ...
+
+
+class SimBackend:
+    """Backend over the discrete-event node simulator."""
+
+    def __init__(self, node: NodeSim):
+        self.node = node
+        self.n_devices = node.G
+        self.tdp = node.thermal.preset.tdp
+
+    def run_iteration(self) -> IterationTrace:
+        return self.node.step()
+
+    def set_power_caps(self, caps: np.ndarray) -> None:
+        self.node.set_power_caps(caps)
+
+    def get_power_caps(self) -> np.ndarray:
+        return self.node.state.cap.copy()
+
+    def telemetry(self) -> dict:
+        s = self.node.state
+        return {"temp": s.temp.copy(), "freq": s.freq.copy(),
+                "power": s.power.copy(), "cap": s.cap.copy()}
+
+
+class TPUPlatformBackend:
+    """Production stub: on a real pod the three integration points are
+
+      1. kernel-start timestamps  — from the TPU profiler (xplane) or a
+         lightweight per-step host callback around each pjit'd step;
+      2. power caps               — the platform power-management API
+         (per-chip power envelopes; OCP-style short-term TDP exceedance is
+         standardized, paper §VIII-B);
+      3. telemetry                — chip temperature/frequency counters.
+
+    Each host manages its local chips; aggregate lead vectors are reduced
+    across hosts with one small allgather per sampling period (G floats).
+    """
+
+    def __init__(self, n_devices: int, tdp: float = 250.0):
+        self.n_devices = n_devices
+        self.tdp = tdp
+
+    def run_iteration(self) -> IterationTrace:
+        raise NotImplementedError(
+            "TPUPlatformBackend requires real hardware; on this CPU "
+            "container use SimBackend (see DESIGN.md §2)")
+
+    set_power_caps = get_power_caps = telemetry = run_iteration

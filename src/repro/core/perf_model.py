@@ -1,0 +1,61 @@
+"""Analytical performance model — paper §IV-A (Eqs 1-6).
+
+Kernels split into constant-overlap (C) and varying-overlap (V) sets.  The
+baseline is straggler-bound:  t_baseline = t_max(C) + t_min(V).  Varying-
+overlap kernels are already fastest on the straggler (least overlap), so the
+only lever is frequency:  S_V = S_C and by Amdahl  S_iter = S_C  (Insight 5).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict
+
+import numpy as np
+
+from repro.core.detect import classify_overlap
+
+_AGG = {"max": np.max, "med": np.median, "min": np.min}
+
+
+def t_agg(dur: np.ndarray, agg: str) -> float:
+    """Eq 2: sum over kernels of agg-across-GPUs duration.  dur: (G, K)."""
+    if dur.shape[1] == 0:
+        return 0.0
+    return float(_AGG[agg](dur, axis=0).sum())
+
+
+@dataclass
+class PerfPrediction:
+    t_baseline: float
+    s_c: float
+    s_v: float
+    r_c: float
+    r_v: float
+    s_iter: float
+
+
+def predict_speedup(dur: np.ndarray, overlap_ratio: np.ndarray,
+                    agg: str = "med", tol: float = 0.15) -> PerfPrediction:
+    """dur/overlap_ratio: (G, K) from a baseline trace.
+
+    agg is the alignment target for the C set (Eq 4): 'max' aligns everyone
+    to the straggler (GPU-Red: no speedup), 'med'/'min' model boosting the
+    straggler toward the pack/leaders (GPU-Realloc / CPU-Slosh).
+    """
+    const_mask = classify_overlap(overlap_ratio, tol)
+    d_c = dur[:, const_mask]
+    d_v = dur[:, ~const_mask]
+    t_max_c = t_agg(d_c, "max")
+    t_min_v = t_agg(d_v, "min")
+    t_baseline = t_max_c + t_min_v                       # Eq 3
+    s_c = t_max_c / max(t_agg(d_c, agg), 1e-12)          # Eq 4
+    s_v = s_c                                            # Eq 4 (C3 term = 1)
+    r_c = t_max_c / t_baseline                           # Eq 5
+    r_v = t_min_v / t_baseline
+    s_iter = 1.0 / (r_c / s_c + r_v / s_v)               # Eq 6 -> == s_c
+    return PerfPrediction(t_baseline, s_c, s_v, r_c, r_v, s_iter)
+
+
+def insight5_identity(pred: PerfPrediction) -> float:
+    """|S_iter - S_C| — zero by Eq 6; exposed for the property tests."""
+    return abs(pred.s_iter - pred.s_c)

@@ -1,0 +1,57 @@
+"""Analytical power model — paper §IV-B (Eqs 7-16).
+
+P = P_active + P_idle with P_active = M·f (Eq 10, V²α absorbed into M), and
+runtime-frequency duality f = ρ/t (Eq 11).  Constant-overlap kernel runtimes
+are rank-sorted across devices (Eq 12) to de-noise; aligning every rank's
+runtime to t_agg(C) by a multiplicative δ gives the new rank power
+P'_r = (P_r - P_idle)/δ + P_idle (Eq 15) and the system ratio P'_sys/P_sys.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.detect import classify_overlap
+from repro.core.perf_model import t_agg
+
+
+@dataclass
+class PowerPrediction:
+    p_sys: float
+    p_sys_new: float
+
+    @property
+    def ratio(self) -> float:
+        return self.p_sys_new / self.p_sys
+
+    @property
+    def improvement(self) -> float:
+        """Paper Table III convention: >1 means power saved."""
+        return self.p_sys / self.p_sys_new
+
+
+def rank_runtimes(dur_c: np.ndarray) -> np.ndarray:
+    """Eq 12: sort each kernel's durations across devices, sum per rank.
+
+    dur_c: (G, Kc) constant-overlap kernel durations -> (G,) rank runtimes,
+    increasing (rank 0 = leader-like, rank G-1 = straggler-like).
+    """
+    return np.sort(dur_c, axis=0).sum(axis=1)
+
+
+def predict_power(dur: np.ndarray, overlap_ratio: np.ndarray,
+                  p_baseline: float, p_idle: float, agg: str = "max",
+                  tol: float = 0.15) -> PowerPrediction:
+    """Power ratio when aligning all ranks' C-runtime to t_agg(C).
+
+    p_baseline: per-device baseline power (all devices at the same cap).
+    """
+    const_mask = classify_overlap(overlap_ratio, tol)
+    d_c = dur[:, const_mask]
+    t_r = rank_runtimes(d_c)                              # (G,)
+    target = t_agg(d_c, agg)
+    delta = target / np.maximum(t_r, 1e-12)               # Eq 14
+    p_new = (p_baseline - p_idle) / delta + p_idle        # Eq 15/16
+    G = dur.shape[0]
+    return PowerPrediction(p_sys=G * p_baseline, p_sys_new=float(p_new.sum()))

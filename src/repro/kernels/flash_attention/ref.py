@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                        mask=None):
+    """q: (BH, Sq, D), k/v: (BH, Sk, D) -> (BH, Sq, D).  fp32 softmax."""
+    Sq, Sk = q.shape[1], k.shape[1]
+    D = q.shape[-1]
+    s = jnp.einsum("bqd,bkd->bqk", q, k,
+                   preferred_element_type=jnp.float32) * (D ** -0.5)
+    if mask is None:
+        qi = jnp.arange(Sq)[:, None]
+        ki = jnp.arange(Sk)[None, :]
+        m = jnp.ones((Sq, Sk), bool)
+        if causal:
+            m &= ki <= qi
+        if window:
+            m &= ki > qi - window
+        mask = m
+    s = jnp.where(mask, s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", w.astype(v.dtype), v)

@@ -1,0 +1,66 @@
+"""Pallas TPU fused RMSNorm (+ optional residual add).
+
+Grid over row blocks; each step holds an (block_rows, d) VMEM slab, computes
+the fp32 mean-square on-chip and writes the scaled rows — one HBM round trip
+instead of norm + mul + (add) separately.  The paper's Fig 4 profiles RMSNorm
+among the dominant kernels; the fused form is the standard TPU treatment.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rms_kernel(x_ref, w_ref, o_ref, *, eps):
+    x = x_ref[...].astype(jnp.float32)
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    o_ref[...] = (x * jax.lax.rsqrt(ms + eps)
+                  * w_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+def _rms_res_kernel(x_ref, r_ref, w_ref, o_ref, res_ref, *, eps):
+    x = x_ref[...].astype(jnp.float32) + r_ref[...].astype(jnp.float32)
+    res_ref[...] = x.astype(res_ref.dtype)
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    o_ref[...] = (x * jax.lax.rsqrt(ms + eps)
+                  * w_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("eps", "block_rows", "interpret"))
+def rmsnorm_fwd(x, w, residual=None, *, eps: float = 1e-5,
+                block_rows: int = 256, interpret: bool = True):
+    """x: (..., d); w: (d,).  Optional fused residual add."""
+    shape = x.shape
+    d = shape[-1]
+    xf = x.reshape(-1, d)
+    R = xf.shape[0]
+    block_rows = min(block_rows, R)
+    pad = (-R) % block_rows
+    if pad:
+        xf = jnp.pad(xf, ((0, pad), (0, 0)))
+    n = xf.shape[0] // block_rows
+    xspec = pl.BlockSpec((block_rows, d), lambda i: (i, 0))
+    wspec = pl.BlockSpec((d,), lambda i: (0,))
+
+    if residual is None:
+        out = pl.pallas_call(
+            functools.partial(_rms_kernel, eps=eps), grid=(n,),
+            in_specs=[xspec, wspec], out_specs=xspec,
+            out_shape=jax.ShapeDtypeStruct(xf.shape, x.dtype),
+            interpret=interpret)(xf, w)
+        return out[:R].reshape(shape)
+
+    rf = residual.reshape(-1, d)
+    if pad:
+        rf = jnp.pad(rf, ((0, pad), (0, 0)))
+    out, res = pl.pallas_call(
+        functools.partial(_rms_res_kernel, eps=eps), grid=(n,),
+        in_specs=[xspec, xspec, wspec], out_specs=[xspec, xspec],
+        out_shape=[jax.ShapeDtypeStruct(xf.shape, x.dtype),
+                   jax.ShapeDtypeStruct(xf.shape, x.dtype)],
+        interpret=interpret)(xf, rf, w)
+    return out[:R].reshape(shape), res[:R].reshape(shape)

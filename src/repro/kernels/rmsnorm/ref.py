@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for fused RMSNorm (optionally with residual add)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm_ref(x, w, residual=None, eps: float = 1e-5):
+    """x: (..., d).  Returns normalized x (and the post-add residual).
+
+    The residual add happens in fp32 (matching the fused kernel) and the
+    stored residual is rounded back to the input dtype.
+    """
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    if residual is not None:
+        xf = xf + residual.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    y = (y * w.astype(jnp.float32)).astype(dt)
+    if residual is not None:
+        return y, xf.astype(dt)
+    return y

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the WKV6 recurrence: exact sequential scan.
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    y_t = r_t (S_{t-1} + diag(u) k_t v_t^T)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_ref(r, k, v, w_log, u, state=None):
+    """r,k,v,w_log: (B, S, H, D); u: (H, D) -> (y (B,S,H,D), S (B,H,D,D))."""
+    B, S, H, D = r.shape
+    if state is None:
+        state = jnp.zeros((B, H, D, D), jnp.float32)
+
+    def step(Sm, inp):
+        rr, kk, vv, ww = (x.astype(jnp.float32) for x in inp)   # (B,H,D)
+        kv = kk[..., :, None] * vv[..., None, :]
+        y = jnp.einsum("bhd,bhde->bhe", rr,
+                       Sm + u.astype(jnp.float32)[None, :, :, None] * kv)
+        Sm = Sm * jnp.exp(ww)[..., None] + kv
+        return Sm, y
+
+    xs = tuple(x.transpose(1, 0, 2, 3) for x in (r, k, v, w_log))
+    state, ys = jax.lax.scan(step, state, xs)
+    return ys.transpose(1, 0, 2, 3).astype(r.dtype), state

@@ -1,0 +1,21 @@
+"""Production mesh construction (a FUNCTION, not a module-level constant, so
+importing this module never touches jax device state)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_parallel: int = 1):
+    """Mesh over whatever devices exist (tests / CPU smoke runs)."""
+    import numpy as np
+    devs = np.array(jax.devices())
+    assert devs.size % model_parallel == 0
+    return jax.sharding.Mesh(
+        devs.reshape(-1, model_parallel), ("data", "model"))

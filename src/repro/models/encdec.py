@@ -1,0 +1,205 @@
+"""Whisper-style encoder-decoder backbone.  The conv/mel frontend is a STUB
+per the assignment: inputs are precomputed frame embeddings (B, Sf, frame_dim)
+projected into d_model.  Decoder = causal self-attn + cross-attn + MLP;
+decode carries a self-KV ring/full cache plus precomputed cross-KV.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models.common import (ParamSpec, apply_norm, cross_entropy_loss,
+                                 norm_spec, pad_vocab, stack_specs,
+                                 take_embedding)
+from repro.models.mlp import mlp, mlp_specs
+from repro.parallel.act import shard_residual
+from repro.models.transformer import REMAT_POLICIES
+
+
+class EncDecLM:
+    def __init__(self, cfg, *, max_cache_len: int = 0,
+                 remat: str = "nothing", scan_layers: bool = True):
+        self.cfg = cfg
+        self.vp = pad_vocab(cfg.vocab_size)
+        self.max_cache_len = max_cache_len or cfg.max_seq_len
+        self.remat = remat
+        self.scan_layers = scan_layers
+
+    # ----------------------------------------------------------------- specs
+    def _enc_block_specs(self):
+        cfg = self.cfg
+        return {"ln1": norm_spec(cfg, cfg.d_model),
+                "attn": attn.attn_specs(cfg),
+                "ln2": norm_spec(cfg, cfg.d_model),
+                "ffn": mlp_specs(cfg, cfg.d_ff)}
+
+    def _dec_block_specs(self):
+        cfg = self.cfg
+        return {"ln1": norm_spec(cfg, cfg.d_model),
+                "self_attn": attn.attn_specs(cfg),
+                "ln_x": norm_spec(cfg, cfg.d_model),
+                "cross_attn": attn.attn_specs(cfg, kv_src_dim=cfg.d_model),
+                "ln2": norm_spec(cfg, cfg.d_model),
+                "ffn": mlp_specs(cfg, cfg.d_ff)}
+
+    def param_specs(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        a = cfg.audio
+        return {
+            "audio_proj": ParamSpec((a.frame_dim, cfg.d_model),
+                                    (None, "embed")),       # conv-stub proj
+            "enc_pos": ParamSpec((a.frame_seq, cfg.d_model), (None, "embed"),
+                                 "embed"),
+            "enc": stack_specs(self._enc_block_specs(), cfg.enc_layers),
+            "enc_norm": norm_spec(cfg, cfg.d_model),
+            "embed": ParamSpec((self.vp, cfg.d_model), ("vocab", "embed"),
+                               "embed"),
+            "dec_pos": ParamSpec((self.max_cache_len, cfg.d_model),
+                                 (None, "embed"), "embed"),
+            "dec": stack_specs(self._dec_block_specs(), cfg.n_layers),
+            "final_norm": norm_spec(cfg, cfg.d_model),
+        }
+
+    # --------------------------------------------------------------- encoder
+    def encode(self, params, frames):
+        cfg = self.cfg
+        x = frames.astype(jnp.dtype(cfg.compute_dtype)) \
+            @ params["audio_proj"].astype(jnp.dtype(cfg.compute_dtype))
+        x = x + params["enc_pos"][: x.shape[1]].astype(x.dtype)
+
+        def body(x, lp):
+            x = shard_residual(x)
+            h = apply_norm(cfg, lp["ln1"], x)
+            x = x + attn.attention(cfg, lp["attn"], h, None, None, causal=False)
+            h = apply_norm(cfg, lp["ln2"], x)
+            return shard_residual(x + mlp(cfg, lp["ffn"], h)), None
+
+        body = jax.checkpoint(body, policy=REMAT_POLICIES[self.remat],
+                              prevent_cse=False)
+        x, _ = jax.lax.scan(body, x, params["enc"])
+        return apply_norm(cfg, params["enc_norm"], x)
+
+    # --------------------------------------------------------------- decoder
+    def _dec_body(self, lp, x, enc_out, mask, pos_offset_mask=None):
+        cfg = self.cfg
+        x = shard_residual(x)
+        h = apply_norm(cfg, lp["ln1"], x)
+        x = x + attn.attention(cfg, lp["self_attn"], h, None, None,
+                               causal=True)
+        h = apply_norm(cfg, lp["ln_x"], x)
+        x = x + attn.attention(cfg, lp["cross_attn"], h, None, None,
+                               kv_x=enc_out, causal=False)
+        h = apply_norm(cfg, lp["ln2"], x)
+        return x + mlp(cfg, lp["ffn"], h)
+
+    def forward(self, params, batch) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        cfg = self.cfg
+        enc_out = self.encode(params, batch["frames"])
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = take_embedding(params["embed"], tokens).astype(enc_out.dtype)
+        x = x + params["dec_pos"][:S].astype(x.dtype)
+        def body(x, lp):
+            return self._dec_body(lp, x, enc_out, None), None
+
+        body = jax.checkpoint(body, policy=REMAT_POLICIES[self.remat],
+                              prevent_cse=False)
+        x, _ = jax.lax.scan(body, x, params["dec"])
+        return self._logits(params, x), jnp.zeros((), jnp.float32)
+
+    def _logits(self, params, x):
+        cfg = self.cfg
+        x = apply_norm(cfg, params["final_norm"], x)
+        logits = x @ params["embed"].T.astype(x.dtype)   # whisper ties head
+        if self.vp != cfg.vocab_size:
+            logits = jnp.where(jnp.arange(self.vp) < cfg.vocab_size,
+                               logits, -1e30)
+        return logits
+
+    def loss(self, params, batch):
+        logits, aux = self.forward(params, batch)
+        loss, metrics = cross_entropy_loss(logits, batch["labels"])
+        return loss, metrics
+
+    # ---------------------------------------------------------------- decode
+    def init_cache(self, batch: int, dtype=jnp.bfloat16) -> Dict[str, Any]:
+        cfg = self.cfg
+        W = self.max_cache_len
+        shape = (cfg.n_layers, batch, W, cfg.n_kv_heads, cfg.head_dim)
+        xshape = (cfg.n_layers, batch, cfg.audio.frame_seq, cfg.n_kv_heads,
+                  cfg.head_dim)
+        return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+                "xk": jnp.zeros(xshape, dtype), "xv": jnp.zeros(xshape, dtype),
+                "pos": jnp.zeros((), jnp.int32)}
+
+    def cache_axes(self):
+        kv = ("layers", "act_batch", "window", "kv_heads", None)
+        return {"k": kv, "v": kv, "xk": kv, "xv": kv, "pos": ()}
+
+    def prefill(self, params, batch, cache=None):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        if cache is None:
+            cache = self.init_cache(B)
+        enc_out = self.encode(params, batch["frames"])
+        x = take_embedding(params["embed"], tokens).astype(enc_out.dtype)
+        x = x + params["dec_pos"][:S].astype(x.dtype)
+        def body(x, lp):
+            h = apply_norm(cfg, lp["ln1"], x)
+            k, v = attn.project_kv(cfg, lp["self_attn"], h, None)
+            q = attn.project_q(cfg, lp["self_attn"], h, None)
+            a = attn.sdpa_auto(q, k, v, causal=True).reshape(B, S, cfg.q_dim)
+            x = x + a @ lp["self_attn"]["wo"].astype(x.dtype)
+            h = apply_norm(cfg, lp["ln_x"], x)
+            xk, xv = attn.project_kv(cfg, lp["cross_attn"], enc_out, None)
+            qx = attn.project_q(cfg, lp["cross_attn"], h, None)
+            a = attn.sdpa_auto(qx, xk, xv, causal=False).reshape(B, S, cfg.q_dim)
+            x = x + a @ lp["cross_attn"]["wo"].astype(x.dtype)
+            h = apply_norm(cfg, lp["ln2"], x)
+            return x + mlp(cfg, lp["ffn"], h), {"k": k, "v": v,
+                                                "xk": xk, "xv": xv}
+
+        x, ys = jax.lax.scan(body, x, params["dec"])
+        W = self.max_cache_len
+        pad = ((0, 0), (0, 0), (0, W - S), (0, 0), (0, 0))
+        cache = dict(cache)
+        cache["k"] = jnp.pad(ys["k"], pad).astype(cache["k"].dtype)
+        cache["v"] = jnp.pad(ys["v"], pad).astype(cache["v"].dtype)
+        cache["xk"] = ys["xk"].astype(cache["xk"].dtype)
+        cache["xv"] = ys["xv"].astype(cache["xv"].dtype)
+        cache["pos"] = jnp.asarray(S, jnp.int32)
+        return self._logits(params, x[:, -1:]), cache
+
+    def decode_step(self, params, tokens, cache):
+        cfg = self.cfg
+        B = tokens.shape[0]
+        pos = cache["pos"]
+        x = take_embedding(params["embed"], tokens).astype(
+            jnp.dtype(cfg.compute_dtype))
+        pe = jax.lax.dynamic_slice_in_dim(params["dec_pos"], pos, 1, 0)
+        x = x + pe.astype(x.dtype)
+
+        def body(x, xs):
+            lp, kc, vc, xk, xv = xs
+            h = apply_norm(cfg, lp["ln1"], x)
+            a, kc, vc = attn.decode_attention(cfg, lp["self_attn"], h, pos,
+                                              kc, vc, ring=False)
+            x = x + a
+            h = apply_norm(cfg, lp["ln_x"], x)
+            q = attn.project_q(cfg, lp["cross_attn"], h, None)
+            a = attn.sdpa(q, xk, xv, None).reshape(B, 1, cfg.q_dim)
+            x = x + a @ lp["cross_attn"]["wo"].astype(x.dtype)
+            h = apply_norm(cfg, lp["ln2"], x)
+            return x + mlp(cfg, lp["ffn"], h), {"k": kc, "v": vc}
+
+        x, ys = jax.lax.scan(
+            body, x, (params["dec"], cache["k"], cache["v"],
+                      cache["xk"], cache["xv"]))
+        cache = dict(cache)
+        cache["k"], cache["v"] = ys["k"], ys["v"]
+        cache["pos"] = pos + 1
+        return self._logits(params, x), cache

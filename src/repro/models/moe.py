@@ -1,0 +1,147 @@
+"""Mixture-of-experts block: top-k router (softmax or deepseek-v3 sigmoid),
+capacity-based padded dispatch (sort + scatter, token-dropping — the padded
+grouped GEMM the paper's platform uses, §VII-C), shared experts, and the
+load-balancing auxiliary loss.
+
+Expert compute is an (E, C, d) x (E, d, h) grouped batched matmul — sharded
+expert-parallel over 'model' when E divides the axis, else TP over the expert
+hidden dim (grok-1: 8 experts on a 16-way axis).  The Pallas grouped-GEMM
+kernel in ``repro.kernels.moe_gemm`` implements the same contraction for TPU.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamSpec, activation_fn
+from repro.models.mlp import mlp, mlp_specs
+
+
+def moe_specs(cfg) -> Dict[str, ParamSpec]:
+    m = cfg.moe
+    d, E, h = cfg.d_model, m.n_experts, m.d_expert
+    s: Dict[str, ParamSpec] = {
+        "router": ParamSpec((d, E), ("embed", "experts"), "normal", 0.02),
+        "wg": ParamSpec((E, d, h), ("experts", "embed", "expert_ffn")),
+        "wu": ParamSpec((E, d, h), ("experts", "embed", "expert_ffn")),
+        "wd": ParamSpec((E, h, d), ("experts", "expert_ffn", "embed")),
+    }
+    if m.n_shared:
+        # shared experts are always-on: computed as one fused wide MLP
+        s["shared"] = {
+            "wg": ParamSpec((d, m.n_shared * h), ("embed", "ffn")),
+            "wu": ParamSpec((d, m.n_shared * h), ("embed", "ffn")),
+            "wd": ParamSpec((m.n_shared * h, d), ("ffn", "embed")),
+        }
+    return s
+
+
+def _route(cfg, logits):
+    """-> (gates (T,k), idx (T,k), aux_loss scalar)."""
+    m = cfg.moe
+    if m.router == "sigmoid":                      # deepseek-v3 style
+        scores = jax.nn.sigmoid(logits)
+        gates, idx = jax.lax.top_k(scores, m.top_k)
+        gates = gates / (gates.sum(-1, keepdims=True) + 1e-9)
+        probs = scores / (scores.sum(-1, keepdims=True) + 1e-9)
+    else:
+        probs = jax.nn.softmax(logits, axis=-1)
+        gates, idx = jax.lax.top_k(probs, m.top_k)
+        gates = gates / (gates.sum(-1, keepdims=True) + 1e-9)
+    # load-balancing aux loss: E * sum_e f_e * P_e
+    T = logits.shape[0]
+    one_hot = jax.nn.one_hot(idx, m.n_experts, dtype=jnp.float32)  # (T,k,E)
+    f_e = one_hot.sum((0, 1)) / (T * m.top_k)
+    p_e = probs.mean(0)
+    aux = m.aux_loss_weight * m.n_experts * jnp.sum(f_e * p_e)
+    return gates, idx, aux
+
+
+def capacity(cfg, n_tokens: int) -> int:
+    m = cfg.moe
+    c = int(n_tokens * m.top_k * m.capacity_factor / m.n_experts)
+    return max(8, -(-c // 8) * 8)                  # round up to 8
+
+
+def _dispatch_combine_local(cfg, p, xs, gates, idx):
+    """Per-shard dispatch -> padded expert GEMMs -> combine.
+
+    xs: (T_loc, d); gates/idx: (T_loc, k).  Purely local slot assignment —
+    the production layout: capacity is PER DATA SHARD, so the scatter never
+    crosses the data axis (a replicated global buffer forces the partitioner
+    into per-layer all-reduces of the whole capacity buffer).
+    """
+    m = cfg.moe
+    T, d = xs.shape
+    E, k = m.n_experts, m.top_k
+    C = capacity(cfg, T)
+
+    flat_e = idx.reshape(T * k)
+    flat_t = jnp.repeat(jnp.arange(T, dtype=jnp.int32), k)
+    flat_g = gates.reshape(T * k)
+    order = jnp.argsort(flat_e, stable=True)
+    se, st, sg = flat_e[order], flat_t[order], flat_g[order]
+    counts = jnp.zeros(E, jnp.int32).at[flat_e].add(1)
+    starts = jnp.cumsum(counts) - counts
+    pos = jnp.arange(T * k, dtype=jnp.int32) - starts[se]
+    keep = pos < C
+    dest = jnp.where(keep, se * C + pos, E * C)            # E*C = trash slot
+
+    buf = jnp.zeros((E * C + 1, d), xs.dtype).at[dest].set(xs[st])
+    eb = buf[: E * C].reshape(E, C, d)
+
+    # ---- grouped expert GEMMs (padded — balanced compute, paper §VII-C) ----
+    act = activation_fn(cfg.activation)
+    h = act(jnp.einsum("ecd,edh->ech", eb, p["wg"].astype(xs.dtype)))
+    h = h * jnp.einsum("ecd,edh->ech", eb, p["wu"].astype(xs.dtype))
+    y = jnp.einsum("ech,ehd->ecd", h, p["wd"].astype(xs.dtype))
+
+    # ---- combine: gather back, gate-weight, sum the k contributions --------
+    yflat = jnp.concatenate([y.reshape(E * C, d),
+                             jnp.zeros((1, d), xs.dtype)], 0)
+    back = yflat[dest] * sg[:, None].astype(xs.dtype)
+    return jnp.zeros((T, d), xs.dtype).at[st].add(back)
+
+
+def moe_forward(cfg, p, x) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d) -> (out (B, S, d), aux_loss scalar)."""
+    from repro.parallel.act import constrain, data_extent
+
+    m = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    xf = x.reshape(T, d)
+
+    logits = (xf.astype(jnp.float32) @ p["router"].astype(jnp.float32))
+    gates, idx, aux = _route(cfg, logits)
+
+    from repro.parallel.moe_shard_map import get_moe_dispatch
+    from repro.parallel.act import _state
+    mesh = getattr(_state, "mesh", None)
+    rules = getattr(_state, "rules", None)
+    if get_moe_dispatch() == "shard_map" and mesh is not None:
+        from repro.parallel.moe_shard_map import moe_forward_shard_map
+        out = moe_forward_shard_map(
+            cfg, p, x, gates.reshape(B, S, -1), idx.reshape(B, S, -1),
+            mesh, rules.get("act_batch", ()) if rules else ())
+        out = out.reshape(T, d)
+    else:
+        # global-capacity pjit dispatch (per-data-shard vmapped dispatch was
+        # measured NET-NEGATIVE on the 16x16 mesh — EXPERIMENTS.md §Perf
+        # G2/G3: the partitioner replicates the vmapped scatter's backward);
+        # the forced-local shard_map layout is G5.
+        out = _dispatch_combine_local(cfg, p, xf, gates, idx)
+
+    if m.n_shared:
+        out = out + mlp(cfg, p["shared"], xf)
+    return out.reshape(B, S, d), aux
+
+
+def moe_or_mlp_specs(cfg, layer_is_dense: bool):
+    if cfg.moe is None or layer_is_dense:
+        d_ff = (cfg.moe.d_ff_dense if (cfg.moe and cfg.moe.d_ff_dense)
+                else cfg.d_ff)
+        return mlp_specs(cfg, d_ff)
+    return moe_specs(cfg)

@@ -1,0 +1,85 @@
+"""build_model(cfg) -> model instance + batch/input-spec builders.
+
+``input_specs`` returns ShapeDtypeStruct stand-ins for every model input
+(weak-type-correct, shardable, no device allocation) — the dry-run's input
+contract per the deliverable spec.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.encdec import EncDecLM
+from repro.models.rwkv6 import RWKV6LM
+from repro.models.transformer import DecoderOnlyLM
+from repro.models.vision import VisionLM
+
+_FAMILIES = {
+    "dense": DecoderOnlyLM,
+    "moe": DecoderOnlyLM,
+    "hybrid": DecoderOnlyLM,
+    "encdec": EncDecLM,
+    "vlm": VisionLM,
+    "rwkv": RWKV6LM,
+}
+
+
+def build_model(cfg: ModelConfig, *, max_cache_len: int = 0,
+                remat: str = "nothing", scan_layers: bool = True):
+    cls = _FAMILIES[cfg.family]
+    return cls(cfg, max_cache_len=max_cache_len, remat=remat,
+               scan_layers=scan_layers)
+
+
+def batch_extras(cfg: ModelConfig, batch_size: int, rng=None) -> Dict[str, Any]:
+    """Concrete modality-stub inputs (smoke tests / examples)."""
+    import numpy as np
+    rng = rng or np.random.default_rng(0)
+    out: Dict[str, Any] = {}
+    if cfg.family == "vlm":
+        out["vision_embeds"] = jnp.asarray(rng.normal(
+            0, 1, (batch_size, cfg.vision.vision_seq, cfg.vision.vision_dim)
+        ).astype("float32"))
+    if cfg.family == "encdec":
+        out["frames"] = jnp.asarray(rng.normal(
+            0, 1, (batch_size, cfg.audio.frame_seq, cfg.audio.frame_dim)
+        ).astype("float32"))
+    return out
+
+
+def make_batch(cfg: ModelConfig, batch_size: int, seq_len: int,
+               seed: int = 0) -> Dict[str, Any]:
+    """Concrete random batch for smoke tests."""
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    tokens = rng.integers(0, cfg.vocab_size, (batch_size, seq_len))
+    batch = {"tokens": jnp.asarray(tokens, jnp.int32),
+             "labels": jnp.asarray(np.roll(tokens, -1, axis=1), jnp.int32)}
+    batch.update(batch_extras(cfg, batch_size))
+    return batch
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every train/serve input of this cell."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    f32 = jnp.float32
+    if shape.kind == "train":
+        specs: Dict[str, Any] = {
+            "tokens": jax.ShapeDtypeStruct((B, S), i32),
+            "labels": jax.ShapeDtypeStruct((B, S), i32),
+        }
+    elif shape.kind == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+    else:                                        # decode: one new token
+        specs = {"tokens": jax.ShapeDtypeStruct((B, 1), i32)}
+    if cfg.family == "vlm" and shape.kind != "decode":
+        specs["vision_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.vision.vision_seq, cfg.vision.vision_dim), f32)
+    if cfg.family == "encdec" and shape.kind != "decode":
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.audio.frame_seq, cfg.audio.frame_dim), f32)
+    return specs

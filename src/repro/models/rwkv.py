@@ -1,0 +1,199 @@
+"""RWKV6 "Finch" blocks: time-mix with data-dependent decay + channel-mix.
+
+The WKV recurrence  S_t = diag(w_t) S_{t-1} + k_t v_t^T,
+                    y_t = r_t (S_{t-1} + diag(u) k_t v_t^T)
+is computed in CHUNKED parallel form for training (intra-chunk pairwise decay
+matrix — all exponents <= 0, numerically safe — plus an inter-chunk state
+scan), matching the blocking of the Pallas kernel in
+``repro.kernels.rwkv6_wkv``.  Decode is the exact single-step recurrence.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamSpec
+
+WKV_CHUNK = 16
+_MIX_NAMES = ("r", "k", "v", "w", "g")
+
+
+def rwkv_dims(cfg) -> Tuple[int, int]:
+    H = cfg.d_model // cfg.rwkv.head_dim
+    return H, cfg.rwkv.head_dim
+
+
+def time_mix_specs(cfg) -> Dict[str, ParamSpec]:
+    c = cfg.rwkv
+    d = cfg.d_model
+    H, Dh = rwkv_dims(cfg)
+    return {
+        "maa_x": ParamSpec((d,), (None,), "zeros"),
+        "maa": ParamSpec((5, d), (None, None), "zeros"),        # r,k,v,w,g bases
+        "tm_w1": ParamSpec((d, 5 * c.mix_lora), ("embed", None), "normal", 0.01),
+        "tm_w2": ParamSpec((5, c.mix_lora, d), (None, None, "embed"),
+                           "normal", 0.01),
+        "wr": ParamSpec((d, d), ("embed", "heads")),
+        "wk": ParamSpec((d, d), ("embed", "heads")),
+        "wv": ParamSpec((d, d), ("embed", "heads")),
+        "wg": ParamSpec((d, d), ("embed", "heads")),
+        "wo": ParamSpec((d, d), ("heads", "embed")),
+        "w0": ParamSpec((d,), (None,), "zeros"),
+        "w1": ParamSpec((d, c.decay_lora), ("embed", None), "normal", 0.01),
+        "w2": ParamSpec((c.decay_lora, d), (None, "embed"), "normal", 0.01),
+        "u": ParamSpec((H, Dh), (None, None), "normal", 1.0),   # time_first
+        "ln_x_w": ParamSpec((d,), (None,), "ones"),
+        "ln_x_b": ParamSpec((d,), (None,), "zeros"),
+    }
+
+
+def channel_mix_specs(cfg) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    h = cfg.d_ff
+    return {
+        "maa_k": ParamSpec((d,), (None,), "zeros"),
+        "maa_r": ParamSpec((d,), (None,), "zeros"),
+        "wk": ParamSpec((d, h), ("embed", "ffn")),
+        "wv": ParamSpec((h, d), ("ffn", "embed")),
+        "wr": ParamSpec((d, d), ("embed", None)),
+    }
+
+
+def _token_shift(x, last=None):
+    """Shift right by one along time; position 0 gets `last` (or zeros)."""
+    if last is None:
+        last = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([last, x[:, :-1]], axis=1)
+
+
+def _time_mix_inputs(cfg, p, x, shifted):
+    """Data-dependent 5-way token-shift interpolation -> dict of mixed inputs."""
+    dx = shifted - x
+    xxx = x + dx * p["maa_x"].astype(x.dtype)
+    B, S, d = x.shape
+    lora = jnp.tanh(xxx @ p["tm_w1"].astype(x.dtype))
+    lora = lora.reshape(B, S, 5, cfg.rwkv.mix_lora)
+    lora = jnp.einsum("bsfm,fmd->bsfd", lora, p["tm_w2"].astype(x.dtype))
+    out = {}
+    for i, name in enumerate(_MIX_NAMES):
+        mix = p["maa"][i].astype(x.dtype) + lora[:, :, i]
+        out[name] = x + dx * mix
+    return out
+
+
+def _decay(cfg, p, xw):
+    """Per-channel log-decay (< 0): log w = -exp(w0 + lora_w(xw))."""
+    lw = jnp.tanh(xw @ p["w1"].astype(xw.dtype)) @ p["w2"].astype(xw.dtype)
+    return -jnp.exp(jnp.clip(p["w0"].astype(jnp.float32)
+                             + lw.astype(jnp.float32), -20.0, 10.0))
+
+
+def wkv_chunked(r, k, v, w_log, u, state=None, chunk: int = WKV_CHUNK):
+    """Chunked-parallel WKV6.  r,k,v,w_log: (B,S,H,D); u: (H,D).
+
+    Returns (y (B,S,H,D), final state (B,H,D,D)).  All intra-chunk decay
+    exponents are differences of a cumsum of negatives -> <= 0 -> exp safe.
+    """
+    B, S, H, D = r.shape
+    L = min(chunk, S)
+    n = -(-S // L)
+    pad = n * L - S
+
+    def pad_t(x):
+        return jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    # (n, B, H, L, D) chunks, fp32 for the recurrence
+    def chunks(x):
+        x = pad_t(x).astype(jnp.float32)
+        return x.reshape(B, n, L, H, D).transpose(1, 0, 3, 2, 4)
+    rc, kc, vc, wc = chunks(r), chunks(k), chunks(v), chunks(w_log)
+    uf = u.astype(jnp.float32)
+
+    if state is None:
+        state = jnp.zeros((B, H, D, D), jnp.float32)
+
+    def step(S_prev, inp):
+        rr, kk, vv, ww = inp                      # (B,H,L,D)
+        cw = jnp.cumsum(ww, axis=2)               # inclusive cumsum of log w
+        cwx = cw - ww                             # exclusive (decay to t-1)
+        # inter-chunk: y_i += (r_i * exp(cwx_i)) @ S_prev
+        r_in = rr * jnp.exp(cwx)
+        y_inter = jnp.einsum("bhld,bhde->bhle", r_in, S_prev)
+        # intra-chunk: A_ij = sum_d r_i k_j exp(cwx_i - cw_j), j < i
+        expo = cwx[:, :, :, None, :] - cw[:, :, None, :, :]   # (B,H,L,L,D)
+        tri = jnp.tril(jnp.ones((L, L), bool), k=-1)[None, None, :, :, None]
+        pair = jnp.where(tri, jnp.exp(jnp.minimum(expo, 0.0)), 0.0)
+        A = jnp.einsum("bhid,bhjd,bhijd->bhij", rr, kk, pair)
+        # diagonal bonus: u-weighted current token
+        diag = jnp.einsum("bhld,bhld->bhl", rr * uf[None, :, None, :], kk)
+        y = y_inter + jnp.einsum("bhij,bhjd->bhid", A, vv) \
+            + diag[..., None] * vv
+        # state update: S_new = diag(exp(cw_last)) S + sum_j exp(cw_last-cw_j) k_j v_j^T
+        decay_all = jnp.exp(cw[:, :, -1:, :] - cw)            # (B,H,L,D) <= 1
+        k_scaled = kk * decay_all
+        S_new = S_prev * jnp.exp(cw[:, :, -1, :])[..., None] \
+            + jnp.einsum("bhld,bhle->bhde", k_scaled, vv)
+        return S_new, y
+
+    S_fin, ys = jax.lax.scan(step, state, (rc, kc, vc, wc))
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(B, n * L, H, D)[:, :S]
+    return y, S_fin
+
+
+def wkv_step(r, k, v, w_log, u, state):
+    """Exact one-token recurrence.  r,k,v,w_log: (B,H,D); state (B,H,D,D)."""
+    rf, kf, vf, wf = (x.astype(jnp.float32) for x in (r, k, v, w_log))
+    kv = kf[..., :, None] * vf[..., None, :]                 # (B,H,D,D)
+    att = state + u.astype(jnp.float32)[None, :, :, None] * kv
+    y = jnp.einsum("bhd,bhde->bhe", rf, att)
+    state = state * jnp.exp(wf)[..., None] + kv
+    return y, state
+
+
+def _group_norm(x, w, b, H, eps=1e-5):
+    """GroupNorm with H groups over the flattened head dim (RWKV ln_x)."""
+    B, S, d = x.shape
+    xg = x.reshape(B, S, H, d // H).astype(jnp.float32)
+    mu = xg.mean(-1, keepdims=True)
+    var = ((xg - mu) ** 2).mean(-1, keepdims=True)
+    xg = (xg - mu) * jax.lax.rsqrt(var + eps)
+    out = xg.reshape(B, S, d) * w.astype(jnp.float32) + b.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def time_mix(cfg, p, x, shift_state=None, wkv_state=None):
+    """Full time-mix layer.  x: (B,S,d).  Returns (out, (shift, wkv) states)."""
+    B, S, d = x.shape
+    H, D = rwkv_dims(cfg)
+    shifted = _token_shift(x, shift_state)
+    mixed = _time_mix_inputs(cfg, p, x, shifted)
+    dt = x.dtype
+
+    def heads(name, wname):
+        return (mixed[name] @ p[wname].astype(dt)).reshape(B, S, H, D)
+    r, k, v = heads("r", "wr"), heads("k", "wk"), heads("v", "wv")
+    g = jax.nn.silu(mixed["g"] @ p["wg"].astype(dt))
+    w_log = _decay(cfg, p, mixed["w"]).reshape(B, S, H, D)
+
+    if S == 1 and wkv_state is not None:
+        y, wkv_state = wkv_step(r[:, 0], k[:, 0], v[:, 0], w_log[:, 0],
+                                p["u"], wkv_state)
+        y = y[:, None].reshape(B, 1, d).astype(dt)
+    else:
+        y, wkv_state = wkv_chunked(r, k, v, w_log, p["u"], wkv_state)
+        y = y.reshape(B, S, d).astype(dt)
+    y = _group_norm(y, p["ln_x_w"], p["ln_x_b"], H) * g
+    out = y @ p["wo"].astype(dt)
+    return out, x[:, -1:], wkv_state
+
+
+def channel_mix(cfg, p, x, shift_state=None):
+    shifted = _token_shift(x, shift_state)
+    dx = shifted - x
+    xk = x + dx * p["maa_k"].astype(x.dtype)
+    xr = x + dx * p["maa_r"].astype(x.dtype)
+    k = jnp.square(jax.nn.relu(xk @ p["wk"].astype(x.dtype)))
+    v = k @ p["wv"].astype(x.dtype)
+    r = jax.nn.sigmoid(xr @ p["wr"].astype(x.dtype))
+    return r * v, x[:, -1:]

@@ -1,0 +1,137 @@
+"""RWKV6 "Finch" model: token-shifted time-mix (data-dependent decay WKV) +
+channel-mix blocks.  Decode state is O(1) in sequence length — the arch that
+makes long_500k feasible.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import rwkv as rk
+from repro.models.common import (ParamSpec, apply_norm, cross_entropy_loss,
+                                 norm_spec, pad_vocab, stack_specs,
+                                 take_embedding)
+from repro.models.transformer import REMAT_POLICIES
+from repro.parallel.act import shard_residual
+
+
+class RWKV6LM:
+    def __init__(self, cfg, *, max_cache_len: int = 0,
+                 remat: str = "nothing", scan_layers: bool = True):
+        self.cfg = cfg
+        self.vp = pad_vocab(cfg.vocab_size)
+        self.max_cache_len = max_cache_len or cfg.max_seq_len
+        self.remat = remat
+
+    def _block_specs(self):
+        cfg = self.cfg
+        return {"ln1": norm_spec(cfg, cfg.d_model),
+                "tm": rk.time_mix_specs(cfg),
+                "ln2": norm_spec(cfg, cfg.d_model),
+                "cm": rk.channel_mix_specs(cfg)}
+
+    def param_specs(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        return {
+            "embed": ParamSpec((self.vp, cfg.d_model), ("vocab", "embed"),
+                               "embed"),
+            "ln0": norm_spec(cfg, cfg.d_model),     # rwkv post-embed norm
+            "blocks": stack_specs(self._block_specs(), cfg.n_layers),
+            "final_norm": norm_spec(cfg, cfg.d_model),
+            "lm_head": ParamSpec((cfg.d_model, self.vp), ("embed", "vocab")),
+        }
+
+    # --------------------------------------------------------------- forward
+    def forward(self, params, batch) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = take_embedding(params["embed"], tokens).astype(
+            jnp.dtype(cfg.compute_dtype))
+        x = apply_norm(cfg, params["ln0"], x)
+
+        def body(x, lp):
+            x = shard_residual(x)
+            h = apply_norm(cfg, lp["ln1"], x)
+            out, _, _ = rk.time_mix(cfg, lp["tm"], h)
+            x = x + out
+            h = apply_norm(cfg, lp["ln2"], x)
+            out, _ = rk.channel_mix(cfg, lp["cm"], h)
+            return x + out, None
+
+        body = jax.checkpoint(body, policy=REMAT_POLICIES[self.remat],
+                              prevent_cse=False)
+        x, _ = jax.lax.scan(body, x, params["blocks"])
+        return self._logits(params, x), jnp.zeros((), jnp.float32)
+
+    def _logits(self, params, x):
+        cfg = self.cfg
+        x = apply_norm(cfg, params["final_norm"], x)
+        logits = x @ params["lm_head"].astype(x.dtype)
+        if self.vp != cfg.vocab_size:
+            logits = jnp.where(jnp.arange(self.vp) < cfg.vocab_size,
+                               logits, -1e30)
+        return logits
+
+    def loss(self, params, batch):
+        logits, aux = self.forward(params, batch)
+        loss, metrics = cross_entropy_loss(logits, batch["labels"])
+        return loss, metrics
+
+    # ---------------------------------------------------------------- decode
+    def init_cache(self, batch: int, dtype=jnp.bfloat16) -> Dict[str, Any]:
+        cfg = self.cfg
+        H, D = rk.rwkv_dims(cfg)
+        L, d = cfg.n_layers, cfg.d_model
+        return {
+            "tm_shift": jnp.zeros((L, batch, 1, d), dtype),
+            "wkv": jnp.zeros((L, batch, H, D, D), jnp.float32),
+            "cm_shift": jnp.zeros((L, batch, 1, d), dtype),
+            "pos": jnp.zeros((), jnp.int32),
+        }
+
+    def cache_axes(self):
+        sh = ("layers", "act_batch", None, "embed_dim")
+        return {"tm_shift": sh, "cm_shift": sh,
+                "wkv": ("layers", "act_batch", "heads", None, None),
+                "pos": ()}
+
+    def _run_with_state(self, params, tokens, cache):
+        cfg = self.cfg
+        x = take_embedding(params["embed"], tokens).astype(
+            jnp.dtype(cfg.compute_dtype))
+        x = apply_norm(cfg, params["ln0"], x)
+
+        def body(x, xs):
+            lp, tms, wkvs, cms = xs
+            h = apply_norm(cfg, lp["ln1"], x)
+            out, tms, wkvs = rk.time_mix(cfg, lp["tm"], h,
+                                         shift_state=tms.astype(h.dtype),
+                                         wkv_state=wkvs)
+            x = x + out
+            h = apply_norm(cfg, lp["ln2"], x)
+            out, cms = rk.channel_mix(cfg, lp["cm"], h,
+                                      shift_state=cms.astype(h.dtype))
+            return x + out, {"tm_shift": tms, "wkv": wkvs, "cm_shift": cms}
+
+        x, ys = jax.lax.scan(body, x, (params["blocks"], cache["tm_shift"],
+                                       cache["wkv"], cache["cm_shift"]))
+        new = dict(cache)
+        new["tm_shift"] = ys["tm_shift"].astype(cache["tm_shift"].dtype)
+        new["cm_shift"] = ys["cm_shift"].astype(cache["cm_shift"].dtype)
+        new["wkv"] = ys["wkv"]
+        return x, new
+
+    def prefill(self, params, batch, cache=None):
+        tokens = batch["tokens"]
+        if cache is None:
+            cache = self.init_cache(tokens.shape[0])
+        x, cache = self._run_with_state(params, tokens, cache)
+        cache["pos"] = jnp.asarray(tokens.shape[1], jnp.int32)
+        return self._logits(params, x[:, -1:]), cache
+
+    def decode_step(self, params, tokens, cache):
+        x, cache = self._run_with_state(params, tokens, cache)
+        cache["pos"] = cache["pos"] + 1
+        return self._logits(params, x), cache

@@ -1,0 +1,135 @@
+"""Mamba-style selective SSM (hymba's parallel-SSM heads).
+
+Training uses a chunked associative scan (chunk=256) so the (B,S,d_inner,
+d_state) discretization tensors never materialize full-length — the same
+blocking a TPU kernel would use for VMEM residency.  Decode carries
+(conv_state, h) per layer.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamSpec
+
+CHUNK = 256
+
+
+def ssm_dims(cfg) -> Tuple[int, int]:
+    d_inner = cfg.ssm.expand * cfg.d_model
+    dt_rank = cfg.ssm.dt_rank or -(-cfg.d_model // 16)
+    return d_inner, dt_rank
+
+
+def ssm_specs(cfg) -> Dict[str, ParamSpec]:
+    c = cfg.ssm
+    d = cfg.d_model
+    di, dtr = ssm_dims(cfg)
+    return {
+        "in_proj": ParamSpec((d, 2 * di), ("embed", "ffn")),
+        "conv_w": ParamSpec((c.d_conv, di), (None, "ffn")),
+        "conv_b": ParamSpec((di,), ("ffn",), "zeros"),
+        "x_proj": ParamSpec((di, dtr + 2 * c.d_state), ("ffn", None)),
+        "dt_proj": ParamSpec((dtr, di), (None, "ffn")),
+        "dt_bias": ParamSpec((di,), ("ffn",), "zeros"),
+        "A_log": ParamSpec((di, c.d_state), ("ffn", None), "zeros"),
+        "D": ParamSpec((di,), ("ffn",), "ones"),
+        "out_proj": ParamSpec((di, d), ("ffn", "embed")),
+    }
+
+
+def _causal_depthwise_conv(x, w, b):
+    """x: (B,S,di), w: (K,di) -> causal depthwise conv."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(xp[:, i: i + x.shape[1]] * w[i].astype(x.dtype)
+              for i in range(K))
+    return out + b.astype(x.dtype)
+
+
+def _discretize(cfg, p, x_c):
+    """x_c: (B,L,di) -> (deltaA (B,L,di,N), deltaBx (B,L,di,N), Cm (B,L,N))."""
+    dtr = ssm_dims(cfg)[1]
+    N = cfg.ssm.d_state
+    dbc = x_c @ p["x_proj"].astype(x_c.dtype)
+    dt, Bm, Cm = jnp.split(dbc, [dtr, dtr + N], axis=-1)
+    dt = jax.nn.softplus(dt @ p["dt_proj"].astype(x_c.dtype)
+                         + p["dt_bias"].astype(x_c.dtype))   # (B,L,di)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))             # (di,N)
+    dtf = dt.astype(jnp.float32)
+    deltaA = jnp.exp(dtf[..., None] * A)                     # (B,L,di,N)
+    deltaBx = (dtf * x_c.astype(jnp.float32))[..., None] \
+        * Bm.astype(jnp.float32)[:, :, None, :]
+    return deltaA, deltaBx, Cm
+
+
+def _scan_chunk(deltaA, deltaBx, h0):
+    """Associative scan of h_t = a_t h_{t-1} + b_t within one chunk.
+
+    deltaA/deltaBx: (B,L,di,N); h0: (B,di,N).  Returns (hs (B,L,di,N), h_last).
+    """
+    b = deltaBx.at[:, 0].add(deltaA[:, 0] * h0)
+    def comb(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+    _, hs = jax.lax.associative_scan(comb, (deltaA, b), axis=1)
+    return hs, hs[:, -1]
+
+
+def ssm_forward(cfg, p, x):
+    """Training/prefill forward: x (B,S,d) -> (B,S,d)."""
+    B, S, _ = x.shape
+    di, _ = ssm_dims(cfg)
+    N = cfg.ssm.d_state
+    xz = x @ p["in_proj"].astype(x.dtype)
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    x_c = jax.nn.silu(_causal_depthwise_conv(x_in, p["conv_w"], p["conv_b"]))
+
+    L = min(CHUNK, S)
+    n_chunks = -(-S // L)
+    pad = n_chunks * L - S
+    x_cp = jnp.pad(x_c, ((0, 0), (0, pad), (0, 0)))
+
+    def step(h, xc_chunk):
+        dA, dBx, Cm = _discretize(cfg, p, xc_chunk)
+        hs, h_new = _scan_chunk(dA, dBx, h)
+        y = jnp.einsum("blds,bls->bld", hs, Cm.astype(jnp.float32))
+        return h_new, y
+
+    xs = x_cp.reshape(B, n_chunks, L, di).transpose(1, 0, 2, 3)
+    h0 = jnp.zeros((B, di, N), jnp.float32)
+    _, ys = jax.lax.scan(step, h0, xs)
+    y = ys.transpose(1, 0, 2, 3).reshape(B, n_chunks * L, di)[:, :S]
+    y = y.astype(x.dtype) + x_c * p["D"].astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    return y @ p["out_proj"].astype(x.dtype)
+
+
+# ------------------------------------------------------------------ decode --
+def ssm_init_state(cfg, batch: int):
+    di, _ = ssm_dims(cfg)
+    return {"conv": jnp.zeros((batch, cfg.ssm.d_conv - 1, di), jnp.float32),
+            "h": jnp.zeros((batch, di, cfg.ssm.d_state), jnp.float32)}
+
+
+def ssm_decode_step(cfg, p, x, state):
+    """x: (B,1,d) -> (out (B,1,d), new state)."""
+    di, _ = ssm_dims(cfg)
+    xz = x @ p["in_proj"].astype(x.dtype)
+    x_in, z = jnp.split(xz, 2, axis=-1)                      # (B,1,di)
+    window = jnp.concatenate([state["conv"].astype(x.dtype), x_in], axis=1)
+    # same ordered sum as _causal_depthwise_conv (bit-identical in bf16)
+    K = p["conv_w"].shape[0]
+    conv = sum(window[:, k] * p["conv_w"][k].astype(x.dtype)
+               for k in range(K))
+    x_c = jax.nn.silu(conv + p["conv_b"].astype(x.dtype))[:, None]  # (B,1,di)
+    dA, dBx, Cm = _discretize(cfg, p, x_c)
+    h = dA[:, 0] * state["h"] + dBx[:, 0]
+    y = jnp.einsum("bds,bs->bd", h, Cm[:, 0].astype(jnp.float32))[:, None]
+    y = y.astype(x.dtype) + x_c * p["D"].astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = y @ p["out_proj"].astype(x.dtype)
+    return out, {"conv": window[:, 1:].astype(jnp.float32), "h": h}

@@ -1,0 +1,232 @@
+"""Llama-3.2-Vision-style VLM backbone: interleaved gated cross-attention
+layers (every k-th layer attends to vision embeddings).  The vision frontend
+is a STUB per the assignment: inputs are precomputed patch embeddings
+(B, Sv, vision_dim) projected into d_model by a learned connector.
+
+Layers run as an outer scan over groups of (k-1 self layers + 1 cross layer);
+the k-1 self layers are an inner scan — compile-time stays O(1) in depth.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models.common import (ParamSpec, apply_norm, cross_entropy_loss,
+                                 norm_spec, pad_vocab, stack_specs,
+                                 take_embedding)
+from repro.models.mlp import mlp, mlp_specs
+from repro.parallel.act import shard_residual
+from repro.models.transformer import REMAT_POLICIES
+
+
+class VisionLM:
+    def __init__(self, cfg, *, max_cache_len: int = 0,
+                 remat: str = "nothing", scan_layers: bool = True):
+        self.cfg = cfg
+        self.vp = pad_vocab(cfg.vocab_size)
+        self.max_cache_len = max_cache_len or cfg.max_seq_len
+        self.remat = remat
+        k = cfg.vision.cross_attn_every
+        assert cfg.n_layers % k == 0, "n_layers must divide by cross interval"
+        self.n_groups = cfg.n_layers // k
+        self.self_per_group = k - 1
+
+    # ----------------------------------------------------------------- specs
+    def _self_specs(self):
+        cfg = self.cfg
+        return {"ln1": norm_spec(cfg, cfg.d_model),
+                "attn": attn.attn_specs(cfg),
+                "ln2": norm_spec(cfg, cfg.d_model),
+                "ffn": mlp_specs(cfg, cfg.d_ff)}
+
+    def _cross_specs(self):
+        cfg = self.cfg
+        return {"ln1": norm_spec(cfg, cfg.d_model),
+                "xattn": attn.attn_specs(cfg),
+                "gate_attn": ParamSpec((), (), "zeros"),
+                "ln2": norm_spec(cfg, cfg.d_model),
+                "ffn": mlp_specs(cfg, cfg.d_ff),
+                "gate_ffn": ParamSpec((), (), "zeros")}
+
+    def param_specs(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        v = cfg.vision
+        return {
+            "embed": ParamSpec((self.vp, cfg.d_model), ("vocab", "embed"),
+                               "embed"),
+            "vision_proj": ParamSpec((v.vision_dim, cfg.d_model),
+                                     (None, "embed")),
+            "groups": {
+                "selfs": stack_specs(stack_specs(self._self_specs(),
+                                                 self.self_per_group),
+                                     self.n_groups),
+                "cross": stack_specs(self._cross_specs(), self.n_groups),
+            },
+            "final_norm": norm_spec(cfg, cfg.d_model),
+            "lm_head": ParamSpec((cfg.d_model, self.vp), ("embed", "vocab")),
+        }
+
+    # --------------------------------------------------------------- helpers
+    def _vision_embed(self, params, vision_embeds):
+        dt = jnp.dtype(self.cfg.compute_dtype)
+        return vision_embeds.astype(dt) @ params["vision_proj"].astype(dt)
+
+    def _self_block(self, lp, x, positions, mask=None):
+        cfg = self.cfg
+        x = shard_residual(x)
+        h = apply_norm(cfg, lp["ln1"], x)
+        x = x + attn.attention(cfg, lp["attn"], h, positions, None,
+                               causal=True)
+        h = apply_norm(cfg, lp["ln2"], x)
+        return x + mlp(cfg, lp["ffn"], h)
+
+    def _cross_block(self, lp, x, vis):
+        cfg = self.cfg
+        x = shard_residual(x)
+        h = apply_norm(cfg, lp["ln1"], x)
+        a = attn.attention(cfg, lp["xattn"], h, None, None, kv_x=vis,
+                           causal=False)
+        x = x + jnp.tanh(lp["gate_attn"]).astype(x.dtype) * a
+        h = apply_norm(cfg, lp["ln2"], x)
+        f = mlp(cfg, lp["ffn"], h)
+        return x + jnp.tanh(lp["gate_ffn"]).astype(x.dtype) * f
+
+    # --------------------------------------------------------------- forward
+    def forward(self, params, batch) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        vis = self._vision_embed(params, batch["vision_embeds"])
+        positions = jnp.arange(S, dtype=jnp.int32)
+        x = take_embedding(params["embed"], tokens).astype(vis.dtype)
+
+        def inner(x, lp):
+            return self._self_block(lp, x, positions, None), None
+
+        def outer(x, gp):
+            x, _ = jax.lax.scan(inner, x, gp[0])
+            return self._cross_block(gp[1], x, vis), None
+
+        outer = jax.checkpoint(outer, policy=REMAT_POLICIES[self.remat],
+                               prevent_cse=False)
+        x, _ = jax.lax.scan(outer, x, (params["groups"]["selfs"],
+                                       params["groups"]["cross"]))
+        return self._logits(params, x), jnp.zeros((), jnp.float32)
+
+    def _logits(self, params, x):
+        cfg = self.cfg
+        x = apply_norm(cfg, params["final_norm"], x)
+        logits = x @ params["lm_head"].astype(x.dtype)
+        if self.vp != cfg.vocab_size:
+            logits = jnp.where(jnp.arange(self.vp) < cfg.vocab_size,
+                               logits, -1e30)
+        return logits
+
+    def loss(self, params, batch):
+        logits, aux = self.forward(params, batch)
+        loss, metrics = cross_entropy_loss(logits, batch["labels"])
+        return loss, metrics
+
+    # ---------------------------------------------------------------- decode
+    def init_cache(self, batch: int, dtype=jnp.bfloat16) -> Dict[str, Any]:
+        cfg = self.cfg
+        W = self.max_cache_len
+        kv = (self.n_groups, self.self_per_group, batch, W, cfg.n_kv_heads,
+              cfg.head_dim)
+        xv = (self.n_groups, batch, cfg.vision.vision_seq, cfg.n_kv_heads,
+              cfg.head_dim)
+        return {"k": jnp.zeros(kv, dtype), "v": jnp.zeros(kv, dtype),
+                "xk": jnp.zeros(xv, dtype), "xv": jnp.zeros(xv, dtype),
+                "pos": jnp.zeros((), jnp.int32)}
+
+    def cache_axes(self):
+        kv = ("layers", "layers", "act_batch", "window", "kv_heads", None)
+        xv = ("layers", "act_batch", None, "kv_heads", None)
+        return {"k": kv, "v": kv, "xk": xv, "xv": xv, "pos": ()}
+
+    def prefill(self, params, batch, cache=None):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        if cache is None:
+            cache = self.init_cache(B)
+        vis = self._vision_embed(params, batch["vision_embeds"])
+        positions = jnp.arange(S, dtype=jnp.int32)
+        x = take_embedding(params["embed"], tokens).astype(vis.dtype)
+
+        def inner(x, lp):
+            h = apply_norm(cfg, lp["ln1"], x)
+            q = attn.project_q(cfg, lp["attn"], h, positions)
+            k, v = attn.project_kv(cfg, lp["attn"], h, positions)
+            a = attn.sdpa_auto(q, k, v, causal=True).reshape(B, S, cfg.q_dim)
+            x = x + a @ lp["attn"]["wo"].astype(x.dtype)
+            h = apply_norm(cfg, lp["ln2"], x)
+            return x + mlp(cfg, lp["ffn"], h), {"k": k, "v": v}
+
+        def outer(x, gp):
+            x, kv = jax.lax.scan(inner, x, gp[0])
+            lp = gp[1]
+            h = apply_norm(cfg, lp["ln1"], x)
+            xk, xv = attn.project_kv(cfg, lp["xattn"], vis, None)
+            q = attn.project_q(cfg, lp["xattn"], h, None)
+            a = attn.sdpa_auto(q, xk, xv, causal=False).reshape(B, S, cfg.q_dim)
+            a = a @ lp["xattn"]["wo"].astype(x.dtype)
+            x = x + jnp.tanh(lp["gate_attn"]).astype(x.dtype) * a
+            h = apply_norm(cfg, lp["ln2"], x)
+            f = mlp(cfg, lp["ffn"], h)
+            x = x + jnp.tanh(lp["gate_ffn"]).astype(x.dtype) * f
+            return x, {"k": kv["k"], "v": kv["v"], "xk": xk, "xv": xv}
+
+        x, ys = jax.lax.scan(outer, x, (params["groups"]["selfs"],
+                                        params["groups"]["cross"]))
+        W = self.max_cache_len
+        pad = ((0, 0), (0, 0), (0, 0), (0, W - S), (0, 0), (0, 0))
+        cache = dict(cache)
+        cache["k"] = jnp.pad(ys["k"], pad).astype(cache["k"].dtype)
+        cache["v"] = jnp.pad(ys["v"], pad).astype(cache["v"].dtype)
+        cache["xk"] = ys["xk"].astype(cache["xk"].dtype)
+        cache["xv"] = ys["xv"].astype(cache["xv"].dtype)
+        cache["pos"] = jnp.asarray(S, jnp.int32)
+        return self._logits(params, x[:, -1:]), cache
+
+    def decode_step(self, params, tokens, cache):
+        cfg = self.cfg
+        B = tokens.shape[0]
+        pos = cache["pos"]
+        x = take_embedding(params["embed"], tokens).astype(
+            jnp.dtype(cfg.compute_dtype))
+
+        def inner(x, xs):
+            lp, kc, vc = xs
+            h = apply_norm(cfg, lp["ln1"], x)
+            a, kc, vc = attn.decode_attention(cfg, lp["attn"], h, pos, kc, vc,
+                                              ring=False)
+            x = x + a
+            h = apply_norm(cfg, lp["ln2"], x)
+            return x + mlp(cfg, lp["ffn"], h), {"k": kc, "v": vc}
+
+        def outer(x, xs):
+            gp_self, gp_cross, kc, vc, xk, xv = xs
+            x, kv = jax.lax.scan(inner, x, (gp_self, kc, vc))
+            lp = gp_cross
+            h = apply_norm(cfg, lp["ln1"], x)
+            q = attn.project_q(cfg, lp["xattn"], h, None)
+            a = attn.sdpa(q, xk, xv, None).reshape(B, 1, cfg.q_dim)
+            a = a @ lp["xattn"]["wo"].astype(x.dtype)
+            x = x + jnp.tanh(lp["gate_attn"]).astype(x.dtype) * a
+            h = apply_norm(cfg, lp["ln2"], x)
+            f = mlp(cfg, lp["ffn"], h)
+            x = x + jnp.tanh(lp["gate_ffn"]).astype(x.dtype) * f
+            return x, kv
+
+        x, ys = jax.lax.scan(outer, x, (params["groups"]["selfs"],
+                                        params["groups"]["cross"],
+                                        cache["k"], cache["v"],
+                                        cache["xk"], cache["xv"]))
+        cache = dict(cache)
+        cache["k"], cache["v"] = ys["k"], ys["v"]
+        cache["pos"] = pos + 1
+        return self._logits(params, x), cache

@@ -1,0 +1,88 @@
+"""Activation-sharding hooks (MaxText-style logical partitioning without flax).
+
+Models call ``shard_residual(x)`` / ``constrain(x, *logical_axes)`` at key
+points; outside a configured mesh context these are identity, so models stay
+mesh-agnostic.  ``repro.parallel.sharding`` installs the active rule set
+before tracing the distributed step.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def set_activation_rules(mesh, rules: Optional[dict]) -> None:
+    _state.mesh = mesh
+    _state.rules = rules
+
+
+def clear_activation_rules() -> None:
+    _state.mesh = None
+    _state.rules = None
+
+
+class activation_sharding:
+    """Context manager installing activation rules for a trace."""
+
+    def __init__(self, mesh, rules: dict):
+        self.mesh, self.rules = mesh, rules
+
+    def __enter__(self):
+        set_activation_rules(self.mesh, self.rules)
+        return self
+
+    def __exit__(self, *exc):
+        clear_activation_rules()
+        return False
+
+
+def constrain(x, *logical_axes: Optional[str]):
+    """Apply with_sharding_constraint mapping logical axis names via the
+    installed rules.  Identity when no rules are installed."""
+    mesh = getattr(_state, "mesh", None)
+    rules = getattr(_state, "rules", None)
+    if mesh is None or rules is None:
+        return x
+    spec = []
+    used = set()
+    for name in logical_axes:
+        axes = rules.get(name) if name else None
+        if axes:
+            axes = tuple(a for a in axes if a not in used)
+        if not axes:
+            spec.append(None)
+            continue
+        dim = x.shape[len(spec)]
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        if dim % size:
+            spec.append(None)
+            continue
+        used.update(axes)
+        spec.append(axes if len(axes) > 1 else axes[0])
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))
+
+
+def shard_residual(x):
+    """(batch, seq, embed) residual stream: batch over DP, seq over TP (SP)."""
+    return constrain(x, "act_batch", "act_seq", None)
+
+
+def data_extent() -> int:
+    """Size of the data-parallel (batch) axes under the installed rules —
+    1 when tracing without a mesh (single-host tests)."""
+    mesh = getattr(_state, "mesh", None)
+    rules = getattr(_state, "rules", None)
+    if mesh is None or rules is None:
+        return 1
+    n = 1
+    for a in rules.get("act_batch", ()):
+        n *= mesh.shape[a]
+    return n

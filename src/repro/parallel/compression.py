@@ -1,0 +1,76 @@
+"""Gradient compression for the DCN (cross-pod) axis: int8 quantization with
+error feedback.
+
+On a 2-pod mesh the 'pod' all-reduce crosses data-center network at ~25x
+less bandwidth than ICI; int8 (4x smaller than fp32, 2x vs bf16) with error
+feedback (residual carried into the next step) preserves convergence.  Pure
+functions here; ``compressed_psum`` wires them into a shard_map collective.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x, *, axis: int = -1) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric per-slice int8 quantization.  Returns (q, scale)."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=axis, keepdims=True)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q, scale) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_with_feedback(grad, error) -> Tuple[jnp.ndarray, jnp.ndarray,
+                                                 jnp.ndarray]:
+    """grad + carried error -> (q, scale, new_error)."""
+    g = grad.astype(jnp.float32) + error
+    q, s = quantize_int8(g)
+    new_error = g - dequantize_int8(q, s)
+    return q, s, new_error
+
+
+def compressed_grad_tree(grads, errors):
+    """Tree-wide compression round-trip with error feedback.
+
+    Simulates the lossy DCN all-reduce on any device count: the values that
+    WOULD be summed across pods are the dequantized int8 payloads; the
+    quantization residual feeds back into the next step.
+    """
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    flat_e = jax.tree_util.tree_leaves(errors)
+    out_g, out_e = [], []
+    for g, e in zip(flat_g, flat_e):
+        q, s, ne = compress_with_feedback(g, e)
+        out_g.append(dequantize_int8(q, s).astype(g.dtype))
+        out_e.append(ne)
+    return (jax.tree_util.tree_unflatten(tdef, out_g),
+            jax.tree_util.tree_unflatten(tdef, out_e))
+
+
+def init_error_tree(grads):
+    return jax.tree_util.tree_map(
+        lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def compressed_psum(x, axis_name: str):
+    """int8 all-reduce over a mesh axis (inside shard_map): quantize, psum
+    the int32-accumulated payload, dequantize with the summed scales.
+
+    Exact for the scale handling used here (shared max-scale via psum-max):
+    every participant quantizes against the same scale, so the sum of
+    dequantized values equals the dequantized sum.
+    """
+    xf = x.astype(jnp.float32)
+    amax = jax.lax.pmax(jnp.max(jnp.abs(xf)), axis_name)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int32)
+    total = jax.lax.psum(q, axis_name)
+    return (total.astype(jnp.float32) * scale).astype(x.dtype)

@@ -1,0 +1,167 @@
+"""Partition rules: logical param/activation axes -> mesh axes.
+
+The scheme is 2-D "fsdp × tensor" (MaxText-style) with an optional third
+DCN axis:
+
+  * ``model`` (ICI): tensor parallel over heads / ffn / vocab / experts;
+  * ``data`` (ICI): FSDP (ZeRO-3) over the remaining large axis ('embed')
+    plus batch data-parallelism;
+  * ``pod``  (DCN): data parallel across pods; joins the FSDP axes for
+    >=30 B-param models so optimizer state fits.
+
+Semantic divisibility is checked against head/expert counts (not flat dims):
+e.g. qwen2.5's 40 heads or hymba's 25 heads don't divide a 16-way model axis,
+so attention falls back to data-parallel heads with TP elsewhere — recorded
+per-arch by ``describe_sharding``.  Within one param, each mesh axis is used
+at most once (first-fit in dim order: deepseek-moe shards experts over
+'model', grok-1 (8 experts) falls through to TP over the expert ffn).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ParallelConfig
+from repro.models.common import logical_axes
+
+
+class ShardingRules:
+    def __init__(self, mesh: Mesh, cfg: ModelConfig,
+                 parallel: ParallelConfig):
+        self.mesh = mesh
+        self.cfg = cfg
+        self.parallel = parallel
+        self.model_size = int(mesh.shape.get("model", 1))
+        fsdp = parallel.fsdp_axes(cfg)
+        self.fsdp_axes = tuple(a for a in fsdp if a in mesh.shape)
+        self.batch_axes = tuple(a for a in parallel.batch_axes()
+                                if a in mesh.shape)
+        ms = self.model_size
+        self.axis_map: Dict[Optional[str], Tuple[str, ...]] = {
+            "embed": self.fsdp_axes,
+            "vocab": ("model",),
+            "ffn": ("model",),
+            "expert_ffn": ("model",),
+            "heads": ("model",) if cfg.n_heads % ms == 0 else (),
+            "kv_heads": ("model",) if cfg.n_kv_heads % ms == 0 else (),
+            "experts": (("model",) if cfg.moe is not None
+                        and cfg.moe.n_experts % ms == 0 else ()),
+            "layers": (),
+            None: (),
+        }
+
+    # ---------------------------------------------------------------- params
+    def spec_for(self, axes: Tuple[Optional[str], ...],
+                 shape: Tuple[int, ...]) -> P:
+        spec = []
+        used = set()
+        for d, name in enumerate(axes):
+            cands = self.axis_map.get(name, ())
+            cands = tuple(a for a in cands if a not in used)
+            if not cands:
+                spec.append(None)
+                continue
+            size = int(np.prod([self.mesh.shape[a] for a in cands]))
+            if shape[d] % size:
+                spec.append(None)
+                continue
+            used.update(cands)
+            spec.append(cands if len(cands) > 1 else cands[0])
+        return P(*spec)
+
+    def param_shardings(self, spec_tree) -> Any:
+        """ParamSpec tree -> NamedSharding tree."""
+        from repro.models.common import ParamSpec
+
+        def f(s: ParamSpec):
+            return NamedSharding(self.mesh, self.spec_for(s.axes, s.shape))
+        return jax.tree_util.tree_map(
+            f, spec_tree, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+    # ----------------------------------------------------------- activations
+    def activation_rules(self) -> Dict[str, Tuple[str, ...]]:
+        seq = (("model",) if self.parallel.sequence_parallel
+               and self.model_size > 1 else ())
+        return {"act_batch": self.batch_axes, "act_seq": seq,
+                "experts_ep": self.axis_map["experts"]}
+
+    def batch_sharding(self, input_tree) -> Any:
+        """Sharding for the train/serve input batch (dim 0 = global batch)."""
+        def f(x):
+            b = x.shape[0] if x.shape else 1
+            size = int(np.prod([self.mesh.shape[a]
+                                for a in self.batch_axes] or [1]))
+            spec = [None] * len(x.shape)
+            if x.shape and b % size == 0 and size > 1:
+                spec[0] = (self.batch_axes if len(self.batch_axes) > 1
+                           else self.batch_axes[0])
+            return NamedSharding(self.mesh, P(*spec))
+        return jax.tree_util.tree_map(f, input_tree)
+
+    def cache_shardings(self, cache_tree, axes_tree=None) -> Any:
+        """KV-cache / decode-state shardings from the model's logical
+        ``cache_axes()`` tree.
+
+        kv_heads -> 'model' when the head count divides; otherwise the
+        *window* dim takes 'model' (distributed flash-decoding: XLA
+        partial-softmaxes seq-sharded attention with small psums instead of
+        gathering KV).  Batch -> DP axes when divisible (long_500k batch=1
+        stays unsharded).
+        """
+        ms = self.model_size
+        kv_ok = self.cfg.n_kv_heads % ms == 0 if ms else False
+
+        def one(x, axes):
+            spec: list = [None] * x.ndim
+            used = set()
+            win_dim = None
+            for d, name in enumerate(axes or ()):
+                if name == "act_batch":
+                    size = int(np.prod([self.mesh.shape[a]
+                                        for a in self.batch_axes] or [1]))
+                    if x.shape[d] % size == 0 and size > 1:
+                        spec[d] = (self.batch_axes
+                                   if len(self.batch_axes) > 1
+                                   else self.batch_axes[0])
+                        used.update(self.batch_axes)
+                elif name == "kv_heads":
+                    if kv_ok and ms > 1 and "model" not in used:
+                        spec[d] = "model"
+                        used.add("model")
+                elif name in ("ffn", "heads", "embed_dim"):
+                    if (ms > 1 and "model" not in used
+                            and x.shape[d] % ms == 0
+                            and (name != "heads"
+                                 or self.cfg.n_heads % ms == 0)):
+                        spec[d] = "model"
+                        used.add("model")
+                elif name == "window":
+                    win_dim = d
+            if (win_dim is not None and "model" not in used and ms > 1
+                    and x.shape[win_dim] % ms == 0):
+                spec[win_dim] = "model"
+            return NamedSharding(self.mesh, P(*spec))
+
+        if axes_tree is None:
+            return jax.tree_util.tree_map(
+                lambda x: NamedSharding(self.mesh, P()), cache_tree)
+        return jax.tree_util.tree_map(
+            one, cache_tree, axes_tree,
+            is_leaf=lambda a: isinstance(a, tuple) or a is None)
+
+    def describe(self) -> Dict[str, Any]:
+        return {
+            "fsdp_axes": self.fsdp_axes,
+            "batch_axes": self.batch_axes,
+            "tp_heads": bool(self.axis_map["heads"]),
+            "tp_kv_heads": bool(self.axis_map["kv_heads"]),
+            "expert_parallel": bool(self.axis_map["experts"]),
+            "sequence_parallel": bool(self.activation_rules()["act_seq"]),
+        }
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

@@ -1,0 +1,223 @@
+"""Roofline extraction from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), in seconds:
+
+    T_comp = HLO_FLOPs_global   / (chips × peak_FLOP/s)
+    T_mem  = HLO_bytes_global   / (chips × HBM_bw)
+    T_coll = Σ_axis wire_bytes  / (chips × axis_bw)
+
+FLOPs/bytes come from ``compiled.cost_analysis()`` (per-device for the SPMD
+partitioned module — multiplied back to global).  Collective bytes are NOT in
+cost_analysis: we parse ``compiled.as_text()`` and sum the result-shape bytes
+of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute, convert to wire bytes with the ring-algorithm factors,
+and attribute each op to ICI or DCN from its replica-group size.
+"""
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.roofline.hw import V5E, HwSpec
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|(\S+))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_SHAPE_RE = re.compile(r"(\w+?)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{(\{[^}]*\}(?:,\{[^}]*\})*)\}")
+_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CollectiveOp:
+    kind: str
+    result_bytes: int       # per-device result size
+    group_size: int
+
+
+def parse_collectives(hlo_text: str) -> List[CollectiveOp]:
+    """Extract every collective with its result bytes and replica-group size."""
+    out: List[CollectiveOp] = []
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        if "-done(" in line:        # async pair: count only the -start
+            continue
+        type_str = m.group(1) or m.group(2)
+        kind = m.group(3)
+        size = _shape_bytes(type_str)
+        gs = 0
+        g1 = _GROUPS_RE.search(line)
+        if g1:
+            first = g1.group(1).split("},{")[0].strip("{}")
+            gs = len([x for x in first.split(",") if x.strip() != ""])
+        else:
+            g2 = _GROUPS_V2_RE.search(line)
+            if g2:
+                gs = int(g2.group(2))
+        out.append(CollectiveOp(kind, size, gs or 1))
+    return out
+
+
+def wire_bytes(op: CollectiveOp) -> float:
+    """Per-device bytes on the wire (ring algorithms)."""
+    n = max(op.group_size, 1)
+    f = (n - 1) / n
+    if op.kind == "all-gather":
+        return op.result_bytes * f                    # result = gathered
+    if op.kind == "reduce-scatter":
+        return op.result_bytes * (n - 1)              # operand = n x result
+    if op.kind == "all-reduce":
+        return 2 * op.result_bytes * f
+    if op.kind == "all-to-all":
+        return op.result_bytes * f
+    if op.kind == "collective-permute":
+        return op.result_bytes
+    return op.result_bytes
+
+
+@dataclass
+class Roofline:
+    chips: int
+    flops_global: float
+    bytes_global: float
+    coll_ici_bytes: float               # per-device wire bytes over ICI
+    coll_dcn_bytes: float               # per-device wire bytes over DCN
+    collectives: List[Dict]
+    model_flops: float = 0.0
+    hw: HwSpec = field(default_factory=lambda: V5E)
+
+    @property
+    def t_comp(self) -> float:
+        return self.flops_global / (self.chips * self.hw.peak_flops)
+
+    @property
+    def t_mem(self) -> float:
+        return self.bytes_global / (self.chips * self.hw.hbm_bw)
+
+    @property
+    def t_coll(self) -> float:
+        ici = self.hw.ici_link_bw * self.hw.ici_links_per_axis
+        return (self.coll_ici_bytes / ici
+                + self.coll_dcn_bytes / self.hw.dcn_bw)
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_comp, "memory": self.t_mem,
+                 "collective": self.t_coll}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_time(self) -> float:
+        return max(self.t_comp, self.t_mem, self.t_coll)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-compute time / bound time: the score we hillclimb."""
+        t_model = self.model_flops / (self.chips * self.hw.peak_flops)
+        return t_model / self.bound_time if self.bound_time else 0.0
+
+    @property
+    def flops_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — remat/redundancy waste indicator."""
+        return self.model_flops / self.flops_global if self.flops_global else 0
+
+    def to_dict(self) -> Dict:
+        return {
+            "chips": self.chips,
+            "flops_global": self.flops_global,
+            "bytes_global": self.bytes_global,
+            "coll_ici_bytes": self.coll_ici_bytes,
+            "coll_dcn_bytes": self.coll_dcn_bytes,
+            "model_flops": self.model_flops,
+            "t_comp": self.t_comp, "t_mem": self.t_mem,
+            "t_coll": self.t_coll, "dominant": self.dominant,
+            "roofline_fraction": self.roofline_fraction,
+            "flops_ratio": self.flops_ratio,
+            "collectives": self.collectives,
+        }
+
+
+def analyze(cost: Dict, hlo_text: str, chips: int, pod_size: int,
+            model_flops: float, hw: HwSpec = V5E) -> Roofline:
+    """Scope-aware accounting (repro.roofline.hlo_parse) with while-loop
+    trip-count multipliers; ``cost`` (XLA cost_analysis) kept for reference
+    only — it counts scan bodies once."""
+    from repro.roofline.hlo_parse import account
+
+    acc = account(hlo_text)
+    flops = acc.flops * chips                   # per-device -> global
+    bytes_ = acc.hbm_bytes * chips
+    ici = dcn = 0.0
+    summary: Dict[Tuple[str, int], Dict] = {}
+    for rec in acc.collectives:
+        op = CollectiveOp(rec["kind"], rec["result_bytes"],
+                          rec["group_size"])
+        w = wire_bytes(op) * rec["count"]
+        axis = ("model" if rec.get("stride", 1) == 1
+                else "data" if rec.get("stride", 1) == 16 else "other")
+        # heuristic: group spanning more devices than one pod, or a group of
+        # exactly the pod count on a multi-pod mesh, crosses DCN
+        crosses_dcn = (chips > pod_size
+                       and (op.group_size > pod_size
+                            or op.group_size == chips // pod_size))
+        if crosses_dcn:
+            dcn += w
+        else:
+            ici += w
+        key = (op.kind, op.group_size, axis)
+        s = summary.setdefault(key, {"kind": op.kind,
+                                     "group_size": op.group_size,
+                                     "axis": axis,
+                                     "count": 0, "result_bytes": 0,
+                                     "wire_bytes": 0.0,
+                                     "fabric": "dcn" if crosses_dcn
+                                     else "ici"})
+        s["count"] += rec["count"]
+        s["result_bytes"] += op.result_bytes * rec["count"]
+        s["wire_bytes"] += w
+    return Roofline(chips=chips, flops_global=flops, bytes_global=bytes_,
+                    coll_ici_bytes=ici, coll_dcn_bytes=dcn,
+                    collectives=sorted(summary.values(),
+                                       key=lambda s: -s["wire_bytes"]),
+                    model_flops=model_flops, hw=hw)
+
+
+def model_flops_for(cfg, shape) -> float:
+    """MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE); D = tokens processed.
+
+    Decode steps process global_batch tokens (one each); train counts the
+    full fwd+bwd 6x factor, prefill/decode the 2x forward factor.
+    """
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n * shape.tokens
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.tokens
+    return 2.0 * n * shape.global_batch

@@ -1,0 +1,118 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("_REPRO_EXTRA_XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+"""Hillclimbing profiler: attribute HBM bytes / FLOPs / collective wire bytes
+to individual HLO instructions (with while-trip multipliers) for one cell.
+
+  PYTHONPATH=src python -m repro.roofline.explain --arch llama3.1-8b \
+      --shape train_4k [--top 25]
+"""
+import argparse
+import sys
+
+
+def explain(arch, shape, top=25, **cell_kw):
+    from repro.launch.dryrun import run_cell
+    from repro.roofline import hlo_parse as hp
+
+    # reuse run_cell's lowering path but capture the HLO
+    import repro.launch.dryrun as dr
+    captured = {}
+    orig_analyze = None
+
+    import repro.roofline.analyze as an
+    orig_analyze = an.analyze
+
+    def spy(cost, hlo_text, *a, **kw):
+        captured["hlo"] = hlo_text
+        return orig_analyze(cost, hlo_text, *a, **kw)
+
+    an.analyze = spy
+    dr.analyze = spy
+    try:
+        rec = run_cell(arch, shape, verbose=False, **cell_kw)
+    finally:
+        an.analyze = orig_analyze
+        dr.analyze = orig_analyze
+    text = captured["hlo"]
+    comps, entry = hp.parse_computations(text)
+    mult, trips = hp.compute_multipliers(comps, entry)
+
+    fusion_comps = set()
+    for comp in comps.values():
+        for ins in comp.instrs:
+            if ins.op == "fusion":
+                m = hp._CALL_TARGET.search(ins.line)
+                if m:
+                    fusion_comps.add(m.group(1))
+
+    rows = []
+    for cname, comp in comps.items():
+        k = mult.get(cname, 0.0)
+        if k <= 0 or cname in fusion_comps:
+            continue
+        trip = trips.get(cname, 1)
+        scan_bufs = set()
+        if trip > 1:
+            params = {i.name for i in comp.instrs if i.op == "parameter"}
+            for i in comp.instrs:
+                if (i.op == "get-tuple-element"
+                        and any(o in params for o in i.operands())
+                        and hp._leading_dim(i.type_str) == trip):
+                    scan_bufs.add(i.name)
+        for ins in comp.instrs:
+            fl = 0.0
+            if ins.op in ("dot", "convolution"):
+                fl = k * hp.dot_flops(ins, comp.symbols)
+            b = 0.0
+            if ins.op not in hp._SKIP_BYTES_OPS:
+                is_dus = (ins.op == "dynamic-update-slice"
+                          or (ins.op == "fusion"
+                              and "dynamic-update-slice" in ins.name))
+                is_gather = (ins.op == "gather"
+                             or (ins.op == "fusion" and "gather" in ins.name))
+                rb = hp.type_bytes(ins.type_str)
+                if is_dus and hp._leading_dim(ins.type_str) == trip > 1:
+                    b = 2.0 * rb / trip
+                else:
+                    b = float(rb)
+                    for o in ins.operands():
+                        t = comp.symbols.get(o)
+                        if not t:
+                            continue
+                        ob = hp.type_bytes(t)
+                        if o in scan_bufs:
+                            ob /= trip
+                        elif is_gather:
+                            ob = min(ob, rb)
+                        b += ob
+                b *= k
+            if fl or b:
+                rows.append((b, fl, cname, ins))
+    rows.sort(key=lambda r: -(r[0]))
+    tot_b = sum(r[0] for r in rows)
+    tot_f = sum(r[1] for r in rows)
+    print(f"\n== {arch} x {shape}: per-device bytes={tot_b/1e9:.1f} GB "
+          f"flops={tot_f:.3e} (x{rec['chips']} chips) ==")
+    print(f"{'GB':>8s} {'%':>5s} {'GF':>9s}  instruction")
+    for b, fl, cname, ins in rows[:top]:
+        print(f"{b/1e9:8.2f} {100*b/tot_b:5.1f} {fl/1e9:9.1f}  "
+              f"[{cname[:24]}] {ins.line.strip()[:130]}")
+    return rec, rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--remat", default="nothing")
+    ap.add_argument("--top", type=int, default=25)
+    args = ap.parse_args(argv)
+    explain(args.arch, args.shape, top=args.top, multi_pod=args.multi_pod,
+            remat=args.remat)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,295 @@
+"""Scope-aware HLO accounting: FLOPs / HBM bytes / collective bytes with
+while-loop trip-count multipliers.
+
+XLA's ``cost_analysis()`` counts a while (lax.scan) body ONCE — useless for
+layer-scanned models.  This module parses ``compiled.as_text()`` into
+computations, recovers each while's trip count from the integer constant in
+its condition computation, propagates nesting multipliers, and accounts:
+
+  * FLOPs       — 2 x prod(result dims) x prod(contracted dims) per dot;
+  * HBM bytes   — Σ (result + operand bytes) over top-level (post-fusion)
+                  instructions: fusion internals stay on-chip, so the fusion
+                  boundary i/o is the HBM-traffic estimate;
+  * collectives — result bytes per op kind + replica-group size (wire-byte
+                  conversion lives in roofline.analyze).
+
+Everything is per-device (the partitioned module); callers scale by chips.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1, "token": 0,
+}
+
+_COMP_HEADER = re.compile(r"^(?:ENTRY\s+)?%?([\w\-.]+)\s*\(.*\)\s*->")
+_INSTR = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\-.]+)\s*=\s*(\(.*?\)|\S+)\s+([\w\-]+)\(")
+_SHAPE = re.compile(r"(\w+?)\[([\d,]*)\]")
+_OPERAND = re.compile(r"%([\w\-.]+)")
+_WHILE_ATTRS = re.compile(r"condition=%?([\w\-.]+),\s*body=%?([\w\-.]+)")
+_CONST_INT = re.compile(r"=\s*s32\[\]\s+constant\((\d+)\)")
+_CALL_TARGET = re.compile(r"(?:to_apply|calls)=%?([\w\-.]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_GROUPS = re.compile(r"replica_groups=\{(\{[^}]*\}(?:,\{[^}]*\})*)\}")
+_GROUPS_V2 = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+COLLECTIVE_OPS = {"all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute", "all-gather-start",
+                  "all-reduce-start", "collective-permute-start"}
+_SKIP_BYTES_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+                   "bitcast", "while", "conditional", "call", "custom-call",
+                   "after-all", "partition-id", "replica-id", "iota"}
+
+
+def shape_dims(type_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for m in _SHAPE.finditer(type_str):
+        dt = m.group(1)
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = [int(d) for d in m.group(2).split(",") if d]
+        out.append((dt, dims))
+    return out
+
+
+def type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in shape_dims(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class Instr:
+    name: str
+    type_str: str
+    op: str
+    line: str
+
+    def operands(self) -> List[str]:
+        # operands appear after the op's '(' and before "), " attrs;
+        # conservative: all %refs on the line except self
+        body = self.line.split("(", 1)[1] if "(" in self.line else ""
+        names = _OPERAND.findall(body)
+        return names
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: List[Instr] = field(default_factory=list)
+    symbols: Dict[str, str] = field(default_factory=dict)   # name -> type
+
+
+def parse_computations(text: str) -> Tuple[Dict[str, Computation], str]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry = ""
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if not line:
+            continue
+        if not line.startswith(" ") and "{" in line and "->" in line:
+            m = _COMP_HEADER.match(line.strip())
+            if m:
+                cur = Computation(m.group(1))
+                comps[cur.name] = cur
+                if line.strip().startswith("ENTRY"):
+                    entry = cur.name
+                continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _INSTR.match(line)
+        if m:
+            ins = Instr(m.group(1), m.group(2), m.group(3), line)
+            cur.instrs.append(ins)
+            cur.symbols[ins.name] = ins.type_str
+    return comps, entry
+
+
+def trip_count(cond: Computation) -> int:
+    """Largest s32 constant in the condition region = loop bound."""
+    best = 1
+    for ins in cond.instrs:
+        m = _CONST_INT.search(ins.line)
+        if m:
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def compute_multipliers(comps: Dict[str, Computation],
+                        entry: str) -> Tuple[Dict[str, float],
+                                             Dict[str, int]]:
+    """Returns (multiplier per computation, local trip count per while body)."""
+    mult: Dict[str, float] = {entry: 1.0}
+    trips: Dict[str, int] = {}
+    # iterate to fixpoint (nesting depth is tiny)
+    for _ in range(12):
+        changed = False
+        for cname, comp in comps.items():
+            if cname not in mult:
+                continue
+            base = mult[cname]
+            for ins in comp.instrs:
+                targets: List[Tuple[str, float]] = []
+                if ins.op == "while":
+                    m = _WHILE_ATTRS.search(ins.line)
+                    if m:
+                        cond, body = m.group(1), m.group(2)
+                        t = trip_count(comps[cond]) if cond in comps else 1
+                        trips[body] = max(trips.get(body, 1), t)
+                        targets.append((body, base * t))
+                        targets.append((cond, base * t))
+                elif ins.op in ("call", "fusion", "custom-call", "reduce",
+                                "sort", "scatter", "map", "reduce-window",
+                                "select-and-scatter"):
+                    m = _CALL_TARGET.search(ins.line)
+                    if m:
+                        targets.append((m.group(1), base))
+                elif ins.op == "conditional":
+                    m = _BRANCHES.search(ins.line)
+                    if m:
+                        for b in m.group(1).split(","):
+                            targets.append((b.strip().lstrip("%"), base))
+                for tgt, val in targets:
+                    if tgt in comps and mult.get(tgt, 0.0) < val:
+                        mult[tgt] = val
+                        changed = True
+        if not changed:
+            break
+    return mult, trips
+
+
+def dot_flops(ins: Instr, symbols: Dict[str, str]) -> float:
+    res = shape_dims(ins.type_str)
+    if not res:
+        return 0.0
+    out_n = 1
+    for d in res[0][1]:
+        out_n *= d
+    contract = 1
+    m = _CONTRACT.search(ins.line)
+    ops = ins.operands()
+    if m and ops:
+        lhs_t = symbols.get(ops[0], "")
+        lhs = shape_dims(lhs_t)
+        if lhs:
+            dims = lhs[0][1]
+            for idx in (int(x) for x in m.group(1).split(",") if x):
+                if idx < len(dims):
+                    contract *= dims[idx]
+    return 2.0 * out_n * contract
+
+
+@dataclass
+class HloAccount:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collectives: List[Dict] = field(default_factory=list)
+
+
+def _leading_dim(type_str: str) -> int:
+    s = shape_dims(type_str)
+    if s and s[0][1]:
+        return s[0][1][0]
+    return 0
+
+
+def account(text: str) -> HloAccount:
+    comps, entry = parse_computations(text)
+    if not entry:
+        # fall back: treat the largest computation as entry
+        entry = max(comps, key=lambda c: len(comps[c].instrs)) if comps else ""
+    mult, trips = compute_multipliers(comps, entry)
+    acc = HloAccount()
+    # fusion computations: internals are on-chip; we count the fusion call
+    # site i/o instead.  Identify fusion-called comps to skip their bytes.
+    fusion_comps = set()
+    for comp in comps.values():
+        for ins in comp.instrs:
+            if ins.op == "fusion":
+                m = _CALL_TARGET.search(ins.line)
+                if m:
+                    fusion_comps.add(m.group(1))
+
+    for cname, comp in comps.items():
+        k = mult.get(cname, 0.0)
+        if k <= 0:
+            continue
+        in_fusion = cname in fusion_comps
+        trip = trips.get(cname, 1)
+        # loop-carried tensors accessed by slicing (scan xs/ys): a gte of the
+        # loop parameter whose LEADING DIM == trip count is a stacked scan
+        # buffer — per-iteration traffic is 1/trip of its size
+        scan_bufs = set()
+        if trip > 1:
+            params = {i.name for i in comp.instrs if i.op == "parameter"}
+            for i in comp.instrs:
+                if (i.op == "get-tuple-element"
+                        and any(o in params for o in i.operands())
+                        and _leading_dim(i.type_str) == trip):
+                    scan_bufs.add(i.name)
+
+        for ins in comp.instrs:
+            if ins.op == "dot" or ins.op == "convolution":
+                acc.flops += k * dot_flops(ins, comp.symbols)
+            if in_fusion:
+                continue
+            if ins.op in _SKIP_BYTES_OPS:
+                continue
+            is_dus = (ins.op == "dynamic-update-slice"
+                      or (ins.op == "fusion"
+                          and "dynamic-update-slice" in ins.name))
+            is_gather = (ins.op == "gather"
+                         or (ins.op == "fusion" and "gather" in ins.name))
+            rb = type_bytes(ins.type_str)
+            if is_dus and _leading_dim(ins.type_str) == trip and trip > 1:
+                b = 2.0 * rb / trip          # writes one slab per iteration
+            else:
+                b = float(rb)
+                for o in ins.operands():
+                    t = comp.symbols.get(o)
+                    if not t:
+                        continue
+                    ob = type_bytes(t)
+                    if o in scan_bufs:
+                        ob = ob / trip       # sliced access per iteration
+                    elif is_gather:
+                        ob = min(ob, rb)     # gather reads ~result rows
+                    b += ob
+            acc.hbm_bytes += k * b
+            base_op = ins.op.replace("-start", "")
+            if ins.op in COLLECTIVE_OPS and not ins.op.endswith("-done"):
+                gs, stride = 0, 1
+                g1 = _GROUPS.search(ins.line)
+                if g1:
+                    first = g1.group(1).split("},{")[0].strip("{}")
+                    ids = [int(x) for x in first.split(",") if x.strip()]
+                    gs = len(ids)
+                    if len(ids) >= 2:
+                        stride = ids[1] - ids[0]
+                else:
+                    g2 = _GROUPS_V2.search(ins.line)
+                    if g2:
+                        gs = int(g2.group(2))
+                acc.collectives.append({
+                    "kind": base_op,
+                    "result_bytes": type_bytes(ins.type_str),
+                    "group_size": gs or 1,
+                    "stride": stride,
+                    "count": k,
+                })
+    return acc

@@ -1,0 +1,19 @@
+"""TPU v5e hardware constants for the roofline terms (per assignment)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class HwSpec:
+    name: str = "tpu-v5e"
+    peak_flops: float = 197e12          # bf16 FLOP/s per chip
+    hbm_bw: float = 819e9               # B/s per chip
+    ici_link_bw: float = 50e9           # B/s per ICI link
+    ici_links_per_axis: int = 2         # bidirectional ring on a 16-torus
+    dcn_bw: float = 25e9                # B/s per chip cross-pod (DCN)
+    hbm_bytes: float = 16e9             # HBM capacity per chip
+    vmem_bytes: float = 128e6           # VMEM per chip
+
+
+V5E = HwSpec()

@@ -1,0 +1,3 @@
+from repro.serve.decode import ServeConfig, ServingLoop, generate
+
+__all__ = ["ServeConfig", "ServingLoop", "generate"]

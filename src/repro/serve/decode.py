@@ -1,0 +1,73 @@
+"""Batched serving: prefill + greedy/temperature decode over the jit'd steps.
+
+The decode step is the unit the dry-run lowers for the decode_32k/long_500k
+cells: one new token against a static-shape KV cache (ring buffer for
+sliding-window archs, O(1) states for SSM/RWKV).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class ServeConfig:
+    max_new_tokens: int = 32
+    temperature: float = 0.0            # 0 -> greedy
+    seed: int = 0
+
+
+def sample_token(logits, temperature: float, key):
+    """logits: (B, 1, V) -> (B, 1) int32."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    probs = jax.nn.softmax(logits[:, -1] / temperature, axis=-1)
+    return jax.random.categorical(key, jnp.log(probs + 1e-30))[
+        :, None].astype(jnp.int32)
+
+
+def generate(model, params, batch: Dict[str, Any], cfg: ServeConfig,
+             prefill_fn=None, decode_fn=None) -> np.ndarray:
+    """Returns (B, max_new_tokens) generated ids."""
+    prefill_fn = prefill_fn or jax.jit(model.prefill)
+    decode_fn = decode_fn or jax.jit(model.decode_step)
+    key = jax.random.PRNGKey(cfg.seed)
+    logits, cache = prefill_fn(params, batch)
+    out: List[jnp.ndarray] = []
+    tok = sample_token(logits, cfg.temperature, key)
+    out.append(tok)
+    for i in range(cfg.max_new_tokens - 1):
+        key, sub = jax.random.split(key)
+        logits, cache = decode_fn(params, tok, cache)
+        tok = sample_token(logits, cfg.temperature, sub)
+        out.append(tok)
+    return np.asarray(jnp.concatenate(out, axis=1))
+
+
+class ServingLoop:
+    """Minimal batched-request loop: collects requests into fixed-size
+    batches (static shapes!), pads the shortfall, runs prefill+decode."""
+
+    def __init__(self, model, params, batch_size: int, prompt_len: int,
+                 cfg: Optional[ServeConfig] = None):
+        self.model = model
+        self.params = params
+        self.B = batch_size
+        self.S = prompt_len
+        self.cfg = cfg or ServeConfig()
+        self._prefill = jax.jit(model.prefill)
+        self._decode = jax.jit(model.decode_step)
+
+    def serve(self, prompts: np.ndarray) -> np.ndarray:
+        """prompts: (n, S) int32, n <= batch_size.  Pads to B, returns (n, T)."""
+        n = prompts.shape[0]
+        assert prompts.shape[1] == self.S and n <= self.B
+        pad = np.zeros((self.B - n, self.S), np.int32)
+        batch = {"tokens": jnp.asarray(np.concatenate([prompts, pad], 0))}
+        toks = generate(self.model, self.params, batch, self.cfg,
+                        self._prefill, self._decode)
+        return toks[:n]

@@ -1,0 +1,18 @@
+from repro.train.checkpoint import CheckpointManager
+from repro.train.data import DataConfig, SyntheticTokens
+from repro.train.fault import ElasticPlan, Watchdog, WatchdogConfig
+from repro.train.optimizer import (AdamWState, adamw_update, init_state,
+                                   lr_schedule)
+
+__all__ = ["CheckpointManager", "DataConfig", "SyntheticTokens",
+           "ElasticPlan", "Watchdog", "WatchdogConfig", "AdamWState",
+           "adamw_update", "init_state", "lr_schedule", "LitSiliconHook",
+           "Trainer", "TrainerConfig"]
+
+
+def __getattr__(name):
+    # lazy: train_loop imports parallel.fsdp which imports train.optimizer
+    if name in ("LitSiliconHook", "Trainer", "TrainerConfig"):
+        from repro.train import train_loop
+        return getattr(train_loop, name)
+    raise AttributeError(name)

@@ -1,0 +1,94 @@
+"""Fault tolerance: watchdog + elastic restart plan.
+
+The paper's technique is itself a straggler-mitigation service; this module
+adds the rest of the production story:
+
+  * ``Watchdog`` — NaN/inf loss or gradient blowup triggers a rollback to
+    the last checkpoint (with an LR backoff option); step-time stall
+    detection flags slow/hung steps (on a cluster: escalate to the job
+    controller, which drains the node — the thermal kind of straggle is
+    instead *tuned around* by the PowerManager).
+  * ``ElasticPlan`` — given the surviving device count after a failure,
+    recompute the largest usable (data, model) mesh and the per-host batch;
+    CheckpointManager.restore re-places every leaf with the new mesh's
+    shardings, so resuming on fewer (or more) hosts is just restore+go.
+"""
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import numpy as np
+
+
+@dataclass
+class WatchdogConfig:
+    stall_factor: float = 5.0           # step slower than median x this
+    max_rollbacks: int = 3
+    lr_backoff: float = 0.5             # multiply LR on rollback
+    window: int = 50
+
+
+class Watchdog:
+    def __init__(self, cfg: WatchdogConfig = WatchdogConfig()):
+        self.cfg = cfg
+        self.step_times: List[float] = []
+        self.rollbacks = 0
+        self.stalls = 0
+        self._t0: Optional[float] = None
+
+    def start_step(self) -> None:
+        self._t0 = time.monotonic()
+
+    def end_step(self, loss: float, grad_norm: float) -> str:
+        """Returns 'ok' | 'stall' | 'rollback'."""
+        dt = time.monotonic() - (self._t0 or time.monotonic())
+        verdict = "ok"
+        if self.step_times:
+            med = float(np.median(self.step_times[-self.cfg.window:]))
+            if med > 0 and dt > self.cfg.stall_factor * med:
+                self.stalls += 1
+                verdict = "stall"
+        self.step_times.append(dt)
+        if not math.isfinite(loss) or not math.isfinite(grad_norm):
+            self.rollbacks += 1
+            if self.rollbacks > self.cfg.max_rollbacks:
+                raise RuntimeError(
+                    f"watchdog: {self.rollbacks} rollbacks exceeded budget")
+            verdict = "rollback"
+        return verdict
+
+
+@dataclass
+class ElasticPlan:
+    """Mesh/batch replan after a membership change."""
+
+    n_devices: int
+    model_parallel: int                 # keep TP extent (weights layout)
+    global_batch: int
+
+    def mesh_shape(self) -> tuple:
+        assert self.n_devices % self.model_parallel == 0, \
+            "surviving devices must still divide by the TP extent"
+        data = self.n_devices // self.model_parallel
+        return (data, self.model_parallel)
+
+    def batch_per_replica(self) -> int:
+        data = self.n_devices // self.model_parallel
+        if self.global_batch % data:
+            # keep the global batch: pad replicas (standard practice is to
+            # round the batch; we keep semantics and report the remainder)
+            return -(-self.global_batch // data)
+        return self.global_batch // data
+
+    @staticmethod
+    def after_failure(n_devices: int, failed: int, model_parallel: int,
+                      global_batch: int) -> "ElasticPlan":
+        """Drop whole model-parallel groups containing failed chips."""
+        groups = (n_devices - failed) // model_parallel
+        if groups < 1:
+            raise RuntimeError("not enough devices for one model replica")
+        return ElasticPlan(groups * model_parallel, model_parallel,
+                           global_batch)

@@ -1,0 +1,152 @@
+"""Trainer: the end-to-end loop wiring every substrate together.
+
+hooks: checkpointing (atomic/async), watchdog rollback, and — the paper's
+contribution as a first-class runtime service — the Lit Silicon co-sim hook:
+each real training step advances the thermal/C3 node simulation one
+iteration and feeds its trace to the PowerManager, which tunes per-device
+power caps online (on real hardware the trace would come from the profiler
+hook instead; nothing else changes).
+"""
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import (ModelConfig, ParallelConfig, TrainConfig)
+from repro.core.backends import SimBackend
+from repro.core.c3sim import NodeSim, SimConfig
+from repro.core.manager import ManagerConfig, PowerManager
+from repro.core.thermal import PRESETS
+from repro.core.workload import fsdp_llm_iteration
+from repro.models.registry import build_model
+from repro.parallel.fsdp import (TrainState, build_train_step,
+                                 init_train_state)
+from repro.parallel.sharding import ShardingRules
+from repro.train.checkpoint import CheckpointManager
+from repro.train.data import DataConfig, SyntheticTokens
+from repro.train.fault import Watchdog, WatchdogConfig
+
+
+class LitSiliconHook:
+    """Co-simulation hook: real JAX step + simulated node physics."""
+
+    def __init__(self, model_cfg: ModelConfig, manager_cfg: ManagerConfig,
+                 preset: str = "mi300x", n_devices: int = 8,
+                 sim: Optional[SimConfig] = None, seed: int = 0):
+        wl = fsdp_llm_iteration(model_cfg, batch=2, seq=min(
+            4096, model_cfg.max_seq_len), n_shards=n_devices)
+        self.node = NodeSim(wl, PRESETS[preset], sim or SimConfig(seed=seed),
+                            n_devices, seed=seed)
+        self.backend = SimBackend(self.node)
+        self.manager = PowerManager(self.backend, manager_cfg)
+
+    def __call__(self, step: int, metrics: Dict[str, Any], trainer) -> None:
+        trace = self.backend.run_iteration()
+        self.manager.on_iteration(step, trace)
+        h = self.node.history[-1]
+        metrics["sim/throughput"] = h["throughput"]
+        metrics["sim/node_power"] = float(np.sum(h["power"]))
+        metrics["sim/freq_min"] = float(np.min(h["freq"]))
+        metrics["sim/freq_max"] = float(np.max(h["freq"]))
+
+
+@dataclass
+class TrainerConfig:
+    model: ModelConfig
+    train: TrainConfig = field(default_factory=TrainConfig)
+    parallel: ParallelConfig = field(default_factory=ParallelConfig)
+    data: DataConfig = field(default_factory=DataConfig)
+    log_every: int = 10
+
+
+class Trainer:
+    def __init__(self, cfg: TrainerConfig, mesh=None,
+                 hooks: Optional[List[Callable]] = None):
+        self.cfg = cfg
+        self.mesh = mesh or jax.sharding.Mesh(
+            np.array(jax.devices()).reshape(-1, 1), ("data", "model"))
+        self.model = build_model(cfg.model, remat=cfg.parallel.remat_policy,
+                                 scan_layers=cfg.parallel.scan_layers)
+        self.rules = ShardingRules(self.mesh, cfg.model, cfg.parallel)
+        self.step_fn, self.state_shardings = build_train_step(
+            self.model, cfg.train, self.rules, cfg.parallel)
+        self.data = SyntheticTokens(cfg.data, cfg.model)
+        self.ckpt = CheckpointManager(cfg.train.checkpoint_dir,
+                                      keep=cfg.train.keep_checkpoints)
+        self.watchdog = Watchdog(WatchdogConfig())
+        self.hooks = hooks or []
+        self.metrics_log: List[Dict[str, Any]] = []
+        self.state: Optional[TrainState] = None
+        self.step = 0
+
+    # ------------------------------------------------------------------ init
+    def init_or_restore(self) -> None:
+        latest = self.ckpt.latest_step()
+        if latest is not None:
+            like = jax.eval_shape(
+                lambda: init_train_state(self.model, self.rules,
+                                         self.cfg.parallel))
+            self.state, manifest = self.ckpt.restore(
+                like, shardings=self.state_shardings)
+            self.step = manifest["step"]
+        else:
+            self.state = init_train_state(self.model, self.rules,
+                                          self.cfg.parallel,
+                                          seed=self.cfg.train.seed)
+            self.step = 0
+
+    # ------------------------------------------------------------------ run
+    def run(self, n_steps: int) -> List[Dict[str, Any]]:
+        if self.state is None:
+            self.init_or_restore()
+        mesh = self.mesh
+        last_ckpt_step = self.step
+        with mesh:
+            for _ in range(n_steps):
+                batch = {k: jax.numpy.asarray(v) for k, v in
+                         self.data.batch_at(self.step).items()}
+                self.watchdog.start_step()
+                self.state, metrics = self.step_fn(self.state, batch)
+                loss = float(metrics["loss"])
+                gnorm = float(metrics["grad_norm"])
+                verdict = self.watchdog.end_step(loss, gnorm)
+                if verdict == "rollback":
+                    self._rollback()
+                    continue
+                metrics = {k: (float(v) if hasattr(v, "item") else v)
+                           for k, v in metrics.items()}
+                metrics["step"] = self.step
+                for hook in self.hooks:
+                    hook(self.step, metrics, self)
+                self.metrics_log.append(metrics)
+                self.step += 1
+                if (self.cfg.train.checkpoint_every
+                        and self.step % self.cfg.train.checkpoint_every == 0):
+                    self.save()
+                    last_ckpt_step = self.step
+        return self.metrics_log
+
+    def save(self) -> str:
+        return self.ckpt.save(self.step, self.state,
+                              extra={"model": self.cfg.model.name})
+
+    def _rollback(self) -> None:
+        latest = self.ckpt.latest_step()
+        if latest is None:
+            # no checkpoint yet: re-init (counts against watchdog budget)
+            self.state = init_train_state(self.model, self.rules,
+                                          self.cfg.parallel,
+                                          seed=self.cfg.train.seed + 1)
+            self.step = 0
+            return
+        like = jax.eval_shape(
+            lambda: init_train_state(self.model, self.rules,
+                                     self.cfg.parallel))
+        self.state, manifest = self.ckpt.restore(
+            like, shardings=self.state_shardings)
+        self.step = manifest["step"]

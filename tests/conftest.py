@@ -1,0 +1,30 @@
+"""Shared test fixtures.  NOTE: no XLA_FLAGS here — smoke tests and benches
+must see 1 device; multi-device tests spawn subprocesses that set the flag
+themselves (see test_multidevice.py)."""
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def small_workload(arch="llama3.1-8b", n_layers=32):
+    from repro.configs import get_config
+    from repro.core.workload import fsdp_llm_iteration
+    cfg = get_config(arch).replace(n_layers=n_layers)
+    return fsdp_llm_iteration(cfg, batch=2, seq=4096, n_shards=8)
+
+
+def small_node(seed=1, n_layers=32, **sim_kw):
+    from repro.core.c3sim import NodeSim, SimConfig
+    from repro.core.thermal import MI300X_PRESET
+    return NodeSim(small_workload(n_layers=n_layers), MI300X_PRESET,
+                   SimConfig(seed=seed, comm_gbps=40.0, **sim_kw),
+                   n_devices=8, seed=seed)

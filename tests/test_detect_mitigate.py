@@ -1,0 +1,128 @@
+"""Property tests (hypothesis) for the paper's Algorithms 1-3."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.detect import (aggregate_lead, classify_overlap,
+                               lead_value_detect, lead_values,
+                               straggler_index)
+from repro.core.mitigate import adj_power_node, inc_power_gpu
+
+starts = st.integers(2, 8).flatmap(
+    lambda g: st.integers(3, 30).flatmap(
+        lambda k: st.lists(
+            st.lists(st.floats(0, 1e3, allow_nan=False), min_size=k,
+                     max_size=k), min_size=g, max_size=g)))
+
+
+# ----------------------------------------------------------- Algorithm 1
+@settings(deadline=None, max_examples=60)
+@given(starts)
+def test_lead_values_properties(t):
+    t = np.asarray(t)
+    lead = lead_values(t)
+    assert (lead >= 0).all()
+    # per kernel, the latest starter has zero lead
+    assert np.allclose(lead.min(axis=0), 0.0)
+    # translation invariance: shifting all clocks changes nothing
+    lead2 = lead_values(t + 123.4)
+    assert np.allclose(lead, lead2)
+
+
+@settings(deadline=None, max_examples=40)
+@given(starts, st.sampled_from(["sum", "max", "last"]))
+def test_aggregate_modes(t, mode):
+    t = np.asarray(t)
+    agg = lead_value_detect(t, mode)
+    assert agg.shape == (t.shape[0],)
+    assert (agg >= 0).all()
+
+
+def test_straggler_is_latest_starter():
+    rngs = np.random.default_rng(0)
+    for _ in range(20):
+        g, k = 8, 50
+        base = np.cumsum(rngs.random(k))[None, :]
+        offsets = rngs.random(g)[:, None] * 0.1
+        s = int(rngs.integers(g))
+        offsets[s] += 5.0                      # one device always late
+        t = base + offsets
+        assert straggler_index(t) == s
+        # straggler has (near) zero aggregate lead
+        assert lead_value_detect(t)[s] == pytest.approx(0.0)
+
+
+def test_classify_overlap():
+    o = np.array([[0.0, 0.5, 1.0], [0.0, 0.1, 1.0]])
+    const = classify_overlap(o, tol=0.15)
+    assert const.tolist() == [True, False, True]
+
+
+# ----------------------------------------------------------- Algorithm 2
+leads = st.integers(2, 16).flatmap(
+    lambda g: st.lists(st.floats(0, 1e4, allow_nan=False), min_size=g,
+                       max_size=g))
+
+
+@settings(deadline=None, max_examples=60)
+@given(leads, st.floats(1, 50), st.sampled_from(["global", "local"]))
+def test_inc_power_bounds(lead, max_inc, scale):
+    lead = np.asarray(lead)
+    inc, gmax = inc_power_gpu(lead, max_inc, 0.0, scale)
+    assert (inc >= -1e-9).all() and (inc <= max_inc + 1e-9).all()
+    assert gmax >= lead.max()
+    if lead.max() > lead.min():
+        # the straggler (min lead) gets the largest increase
+        assert inc[np.argmin(lead)] == pytest.approx(inc.max())
+        # the biggest leader gets (near) zero
+        assert inc[np.argmax(lead)] == pytest.approx(0.0, abs=1e-9)
+
+
+def test_inc_power_global_damping():
+    lead = np.array([100.0, 50.0, 0.0])
+    inc1, gmax = inc_power_gpu(lead, 15.0, 0.0, "global")
+    # later, leads have shrunk: increments shrink proportionally
+    inc2, gmax = inc_power_gpu(lead / 10, 15.0, gmax, "global")
+    assert inc2.max() <= inc1.max() / 5
+
+
+# ----------------------------------------------------------- Algorithm 3
+caps_st = st.integers(2, 16).flatmap(
+    lambda g: st.tuples(
+        st.lists(st.floats(0, 15, allow_nan=False), min_size=g, max_size=g),
+        st.lists(st.floats(300, 750, allow_nan=False), min_size=g,
+                 max_size=g)))
+
+
+@settings(deadline=None, max_examples=60)
+@given(caps_st, st.floats(600, 800))
+def test_adj_power_node_invariants(caps_inc, tdp):
+    inc, caps = (np.asarray(x) for x in caps_inc)
+    caps = np.minimum(caps, tdp)
+    g = caps.shape[0]
+    node_cap = float(caps.sum())               # realloc-style binding cap
+    out = adj_power_node(inc, caps, tdp, node_cap)
+    assert (out <= tdp + 1e-6).all()           # TDP never exceeded
+    assert out.sum() <= node_cap + 1e-6        # node cap respected
+    # uniform-shift property: relative differences set only by inc
+    d = (caps + inc) - out
+    assert np.allclose(d, d[0])
+
+
+def test_adj_power_paper_walkthrough():
+    """Paper §V-C worked example: 8 GPUs, straggler +15W."""
+    tdp = 750.0
+    inc = np.array([0, 0, 0, 0, 0, 15.0, 0, 0])
+    # GPU-Red: all at TDP, node cap = provisioned max
+    out = adj_power_node(inc, np.full(8, tdp), tdp, 8 * tdp)
+    assert out[5] == pytest.approx(tdp)        # straggler stays at TDP
+    assert np.allclose(out[:5], tdp - 15)      # leaders lowered by 15
+    # GPU-Realloc: caps 15W below TDP, node cap binding
+    caps = np.full(8, tdp - 15)
+    out = adj_power_node(inc, caps, tdp, 8 * (tdp - 15))
+    assert out[5] == pytest.approx(tdp - 2)    # +15 then uniform -ceil(15/8)
+    assert np.allclose(out[:5], tdp - 17)
+    # CPU-Slosh: 2W/GPU budget -> 16W headroom, no leader reduction
+    out = adj_power_node(inc, caps, tdp, 8 * (tdp - 15) + 16)
+    assert out[5] == pytest.approx(tdp)
+    assert np.allclose(out[:5], tdp - 15)

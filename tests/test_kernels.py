@@ -1,0 +1,156 @@
+"""Pallas kernel sweeps (deliverable c): shapes x dtypes vs the pure-jnp
+oracle, in interpret mode on CPU."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention import flash_attention, flash_attention_ref
+from repro.kernels.moe_gemm import moe_gemm, moe_gemm_ref
+from repro.kernels.rmsnorm import rmsnorm, rmsnorm_ref
+from repro.kernels.rwkv6_wkv import wkv6, wkv6_ref
+
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+def _keys(n):
+    return jax.random.split(jax.random.PRNGKey(42), n)
+
+
+# ------------------------------------------------------------ flash attention
+@pytest.mark.parametrize("S", [64, 200, 256])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("kw", [dict(causal=True), dict(causal=True, window=32),
+                                dict(causal=False)])
+def test_flash_attention_sweep(S, dtype, kw):
+    B, H, kvH, D = 2, 4, 2, 32
+    ks = _keys(3)
+    q = jax.random.normal(ks[0], (B, S, H, D), dtype)
+    k = jax.random.normal(ks[1], (B, S, kvH, D), dtype)
+    v = jax.random.normal(ks[2], (B, S, kvH, D), dtype)
+    out = flash_attention(q, k, v, causal=kw.get("causal"),
+                          window=kw.get("window", 0),
+                          mask=None if kw.get("causal") is not False else None)
+    kk = jnp.repeat(k, H // kvH, 2)
+    vv = jnp.repeat(v, H // kvH, 2)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    kf = kk.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    vf = vv.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    ref = flash_attention_ref(qf, kf, vf, **kw).reshape(B, H, S, D)
+    ref = ref.transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=TOL[dtype], rtol=TOL[dtype])
+
+
+def test_flash_attention_explicit_mask():
+    B, S, H, D = 1, 96, 2, 16
+    ks = _keys(3)
+    q = jax.random.normal(ks[0], (B, S, H, D))
+    k = jax.random.normal(ks[1], (B, S, H, D))
+    v = jax.random.normal(ks[2], (B, S, H, D))
+    mask = jnp.tril(jnp.ones((S, S), bool), k=-1) | jnp.eye(S, dtype=bool)
+    out = flash_attention(q, k, v, mask=mask)
+    ref = flash_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+
+# ------------------------------------------------------------------- rmsnorm
+@pytest.mark.parametrize("shape", [(4, 128), (2, 100, 256), (1, 7, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_sweep(shape, dtype):
+    ks = _keys(3)
+    x = jax.random.normal(ks[0], shape, dtype)
+    w = jax.random.normal(ks[1], shape[-1:], jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(rmsnorm(x, w), np.float32),
+        np.asarray(rmsnorm_ref(x, w), np.float32), atol=TOL[dtype])
+    r = jax.random.normal(ks[2], shape, dtype)
+    o1, res1 = rmsnorm(x, w, r)
+    o2, res2 = rmsnorm_ref(x, w, r)
+    np.testing.assert_allclose(np.asarray(o1, np.float32),
+                               np.asarray(o2, np.float32), atol=TOL[dtype])
+    np.testing.assert_allclose(np.asarray(res1, np.float32),
+                               np.asarray(res2, np.float32), atol=TOL[dtype])
+
+
+# ------------------------------------------------------------------ moe gemm
+@pytest.mark.parametrize("ECdh", [(4, 64, 96, 200), (2, 100, 48, 64),
+                                  (8, 8, 16, 16)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_moe_gemm_sweep(ECdh, dtype):
+    E, C, d, h = ECdh
+    ks = _keys(2)
+    x = jax.random.normal(ks[0], (E, C, d), dtype)
+    w = jax.random.normal(ks[1], (E, d, h), dtype)
+    np.testing.assert_allclose(
+        np.asarray(moe_gemm(x, w), np.float32),
+        np.asarray(moe_gemm_ref(x, w), np.float32),
+        atol=TOL[dtype] * np.sqrt(d), rtol=TOL[dtype])
+
+
+# ---------------------------------------------------------------------- wkv6
+@pytest.mark.parametrize("S", [16, 64, 130])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_wkv6_sweep(S, dtype):
+    B, H, D = 2, 3, 16
+    ks = _keys(5)
+    r = (jax.random.normal(ks[0], (B, S, H, D)) * 0.5).astype(dtype)
+    k = (jax.random.normal(ks[1], (B, S, H, D)) * 0.5).astype(dtype)
+    v = (jax.random.normal(ks[2], (B, S, H, D)) * 0.5).astype(dtype)
+    wl = -jnp.exp(jax.random.normal(ks[3], (B, S, H, D))).astype(dtype)
+    u = jax.random.normal(ks[4], (H, D))
+    y1, s1 = wkv6(r, k, v, wl, u)
+    y2, s2 = wkv6_ref(r, k, v, wl, u)
+    tol = 5e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(y1, np.float32),
+                               np.asarray(y2, np.float32), atol=tol)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=tol)
+
+
+# -------------------------------------------------- property: random shapes
+@settings(deadline=None, max_examples=15)
+@given(S=st.integers(8, 96), D=st.sampled_from([8, 16, 32]),
+       H=st.integers(1, 4))
+def test_flash_attention_property(S, D, H):
+    ks = _keys(3)
+    q = jax.random.normal(ks[0], (1, S, H, D))
+    k = jax.random.normal(ks[1], (1, S, H, D))
+    v = jax.random.normal(ks[2], (1, S, H, D))
+    out = flash_attention(q, k, v, causal=True)
+    qf = q.transpose(0, 2, 1, 3).reshape(H, S, D)
+    kf = k.transpose(0, 2, 1, 3).reshape(H, S, D)
+    vf = v.transpose(0, 2, 1, 3).reshape(H, S, D)
+    ref = flash_attention_ref(qf, kf, vf, causal=True)
+    np.testing.assert_allclose(
+        np.asarray(out[0].transpose(1, 0, 2)), np.asarray(ref), atol=3e-5)
+
+
+@settings(deadline=None, max_examples=15)
+@given(rows=st.integers(1, 300), d=st.sampled_from([32, 128, 384]))
+def test_rmsnorm_property(rows, d):
+    ks = _keys(2)
+    x = jax.random.normal(ks[0], (rows, d))
+    w = jax.random.normal(ks[1], (d,))
+    np.testing.assert_allclose(np.asarray(rmsnorm(x, w)),
+                               np.asarray(rmsnorm_ref(x, w)), atol=2e-5)
+
+
+# ------------------------------------------------ chunked == naive (fp32)
+@pytest.mark.parametrize("S,chunk", [(64, 16), (200, 64), (96, 1024)])
+def test_sdpa_flash_matches_naive(S, chunk):
+    from repro.models.attention import sdpa, sdpa_flash, make_mask
+    B, H, kvH, D = 2, 4, 2, 16
+    ks = _keys(3)
+    q = jax.random.normal(ks[0], (B, S, H, D))
+    k = jax.random.normal(ks[1], (B, S, kvH, D))
+    v = jax.random.normal(ks[2], (B, S, kvH, D))
+    out = sdpa_flash(q, k, v, causal=True, chunk=chunk)
+    ref = sdpa(q, k, v, make_mask(S, S, causal=True))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-6)
+    # sliding window with a traced window_eff
+    we = jnp.asarray(32, jnp.int32)
+    out = sdpa_flash(q, k, v, causal=True, window_eff=we, chunk=chunk)
+    ref = sdpa(q, k, v, make_mask(S, S, causal=True, window=32))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-6)

@@ -1,0 +1,75 @@
+"""§IV analytical models: Insight-5 identity + power-model invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.perf_model import predict_speedup, t_agg
+from repro.core.power_model import predict_power, rank_runtimes
+
+dur_st = st.tuples(st.integers(2, 8), st.integers(4, 20)).flatmap(
+    lambda gk: st.lists(
+        st.lists(st.floats(0.1, 10, allow_nan=False), min_size=gk[1],
+                 max_size=gk[1]), min_size=gk[0], max_size=gk[0]))
+
+
+@settings(deadline=None, max_examples=50)
+@given(dur_st, st.sampled_from(["max", "med", "min"]))
+def test_insight5_s_iter_equals_s_c(dur, agg):
+    dur = np.asarray(dur)
+    overlap = np.zeros_like(dur)               # all constant-overlap
+    pred = predict_speedup(dur, overlap, agg=agg)
+    assert pred.s_iter == pytest.approx(pred.s_c, rel=1e-9)
+    assert pred.s_c >= 1.0 - 1e-9              # aligning never slows past max
+
+
+@settings(deadline=None, max_examples=50)
+@given(dur_st)
+def test_speedup_ordering(dur):
+    """Aligning to min >= med >= max speedup (diminishing from Red->Slosh)."""
+    dur = np.asarray(dur)
+    overlap = np.zeros_like(dur)
+    s = {agg: predict_speedup(dur, overlap, agg=agg).s_iter
+         for agg in ("max", "med", "min")}
+    assert s["min"] >= s["med"] >= s["max"] >= 1.0 - 1e-9
+
+
+def test_varying_overlap_kernels_cap_speedup():
+    """V-kernels are already fastest on the straggler -> Amdahl dampens."""
+    G, K = 4, 10
+    rng = np.random.default_rng(0)
+    dur = 1.0 + rng.random((G, K))
+    overlap = np.zeros((G, K))
+    overlap[:, :5] = rng.random((G, 5))        # half the kernels vary
+    pred = predict_speedup(dur, overlap, agg="min", tol=0.05)
+    pred_all_c = predict_speedup(dur, np.zeros_like(dur), agg="min")
+    assert pred.r_v > 0
+    assert pred.s_iter == pytest.approx(pred.s_c)
+
+
+# ------------------------------------------------------------- power model
+@settings(deadline=None, max_examples=50)
+@given(dur_st, st.floats(400, 750), st.floats(50, 200))
+def test_power_model_invariants(dur, p_base, p_idle):
+    dur = np.asarray(dur)
+    overlap = np.zeros_like(dur)
+    # align to max (GPU-Red-like): runtimes can only grow -> power drops
+    pred = predict_power(dur, overlap, p_base, p_idle, agg="max")
+    assert pred.p_sys_new <= pred.p_sys + 1e-6
+    # align to min (Slosh-like): power grows
+    pred2 = predict_power(dur, overlap, p_base, p_idle, agg="min")
+    assert pred2.p_sys_new >= pred.p_sys_new - 1e-6
+
+
+def test_rank_runtimes_sorted():
+    dur = np.array([[3.0, 1.0], [1.0, 3.0], [2.0, 2.0]])
+    r = rank_runtimes(dur)
+    assert (np.diff(r) >= 0).all()
+    assert r.sum() == pytest.approx(dur.sum())
+
+
+def test_identical_devices_no_change():
+    dur = np.ones((4, 6))
+    pred = predict_power(dur, np.zeros_like(dur), 700.0, 140.0, agg="med")
+    assert pred.ratio == pytest.approx(1.0)
+    sp = predict_speedup(dur, np.zeros_like(dur), agg="med")
+    assert sp.s_iter == pytest.approx(1.0)
