@@ -1,0 +1,144 @@
+"""Cluster-scale sweep: fleet throughput vs node count and straggler
+placement, plus the hierarchical manager's recovery — the datacenter-scale
+aggregation of the paper's node-level claim.
+
+Rows:
+  * cluster_scale_N{n}       — fleet throughput per node as the fleet grows
+                               (barrier + slower inter-node all-reduce)
+  * cluster_straggler_*      — healthy vs one hot GPU, by placement
+  * cluster_fleet_manager    — FleetPowerManager recovery under a fixed
+                               cluster power budget
+  * c3_engine_speedup        — batched fast path vs event-loop reference
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import Row, make_node
+from repro.configs import get_config
+from repro.core.backends import ClusterSimBackend
+from repro.core.c3sim import SimConfig
+from repro.core.cluster import ClusterConfig, ClusterSim
+from repro.core.manager import FleetManagerConfig, run_fleet_closed_loop
+from repro.core.thermal import MI300X_PRESET
+from repro.core.workload import fsdp_llm_iteration
+
+CAP = 700.0
+SMOKE = False           # run.py --smoke trims iterations for CI
+
+
+def _iters(full: int) -> int:
+    return max(10, full // 4) if SMOKE else full
+
+
+def _workload(n_layers: int = 8):
+    cfg = get_config("llama3.1-8b").replace(n_layers=n_layers)
+    return fsdp_llm_iteration(cfg, batch=2, seq=4096, n_shards=8)
+
+
+def _cluster(wl, n_nodes, boost, seed=5, straggler_node=0, caps=CAP):
+    cl = ClusterSim(wl, MI300X_PRESET, SimConfig(seed=1, comm_gbps=40.0),
+                    ClusterConfig(n_nodes=n_nodes, straggler_boost=boost,
+                                  straggler_node=straggler_node),
+                    devices_per_node=8, seed=seed)
+    if caps is not None:
+        for n in range(n_nodes):
+            cl.set_node_caps(n, np.full(8, caps))
+    return cl
+
+
+def scale_sweep() -> List[Row]:
+    """Fleet throughput vs node count (straggler on node 0)."""
+    wl = _workload()
+    rows: List[Row] = []
+    base = None
+    for n_nodes in (1, 2, 4, 8):
+        t0 = time.perf_counter()
+        cl = _cluster(wl, n_nodes, boost=1.28)
+        for _ in range(_iters(40)):
+            cl.step()
+        tput = cl.fleet_throughput(last=10)
+        us = (time.perf_counter() - t0) * 1e6
+        base = tput if base is None else base
+        rows.append((f"cluster_scale_N{n_nodes}", us,
+                     f"fleet_tput={tput:.3f};per_node_eff={tput / base:.3f};"
+                     f"allreduce_ms={cl.allreduce_time() * 1e3:.1f}"))
+    return rows
+
+
+def straggler_placement() -> List[Row]:
+    """One hot GPU vs healthy fleet, straggler on node 0 vs last node."""
+    wl = _workload()
+    rows: List[Row] = []
+    cases = [("healthy", 1.0, 0), ("node0", 1.28, 0), ("node3", 1.28, 3)]
+    tputs = {}
+    for label, boost, where in cases:
+        t0 = time.perf_counter()
+        cl = _cluster(wl, 4, boost=boost, straggler_node=where)
+        for _ in range(_iters(60)):
+            cl.step()
+        tputs[label] = cl.fleet_throughput()
+        us = (time.perf_counter() - t0) * 1e6
+        slow = [h["slowest_node"] for h in cl.history[-10:]]
+        rows.append((f"cluster_straggler_{label}", us,
+                     f"fleet_tput={tputs[label]:.4f};"
+                     f"slowest_node_mode={int(np.bincount(slow).argmax())}"))
+    gap = (tputs["healthy"] - tputs["node0"]) / tputs["healthy"]
+    rows.append(("cluster_straggler_gap", 0.0, f"gap={gap:+.3%}"))
+    return rows
+
+
+def fleet_manager_recovery() -> List[Row]:
+    """FleetPowerManager under a fixed cluster budget of N*G*700 W."""
+    wl = _workload()
+    t0 = time.perf_counter()
+    healthy = _cluster(wl, 4, boost=1.0)
+    strag = _cluster(wl, 4, boost=1.28)
+    for _ in range(60):
+        healthy.step()
+        strag.step()
+    managed = _cluster(wl, 4, boost=1.28)
+    # the closed loop needs its full horizon to converge — not trimmed in
+    # smoke mode (it is cheap under the batched engine)
+    mgr = run_fleet_closed_loop(
+        ClusterSimBackend(managed),
+        FleetManagerConfig(use_case="gpu-realloc", sampling_period=2,
+                           warmup=2, window_size=2, node_window_size=2,
+                           power_cap=CAP, cluster_power_budget=4 * 8 * CAP),
+        120, tune_after=20)
+    us = (time.perf_counter() - t0) * 1e6
+    tp_h, tp_s = healthy.fleet_throughput(), strag.fleet_throughput()
+    tp_m = managed.fleet_throughput()
+    rec = (tp_m - tp_s) / max(tp_h - tp_s, 1e-12)
+    return [("cluster_fleet_manager", us,
+             f"healthy={tp_h:.4f};straggler={tp_s:.4f};managed={tp_m:.4f};"
+             f"recovered={rec:.2f};"
+             f"node0_budget={mgr.node_budgets[0]:.0f}W")]
+
+
+def engine_speedup() -> List[Row]:
+    """Batched fast path vs the event-loop reference engine."""
+    node = make_node()
+    freq = node.state.freq
+    reps = 2 if SMOKE else 5
+    out = []
+    for engine in ("event", "batched"):
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            node.sim.run_iteration(freq, engine=engine)
+        out.append((time.perf_counter() - t0) / reps * 1e6)
+    ev, ba = out
+    return [("c3_engine_speedup", ba,
+             f"event_us={ev:.0f};batched_us={ba:.0f};"
+             f"speedup={ev / ba:.1f}x")]
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    for fn in (engine_speedup, scale_sweep, straggler_placement,
+               fleet_manager_recovery):
+        rows.extend(fn())
+    return rows

@@ -4,17 +4,51 @@ Prints ``name,us_per_call,derived`` CSV.  Sections:
   * paper_figs     — §III characterization + §VII evaluation reproductions
   * kernels_bench  — Pallas kernel oracles + interpret-mode correctness
   * dryrun_summary — multi-pod dry-run / roofline aggregates
+  * cluster_sweep  — N-node fleet scaling / straggler placement / recovery
+
+Usage:
+  python benchmarks/run.py [--smoke] [--only PREFIX]
+
+``--smoke`` runs the CI subset (cluster sweep at reduced iterations plus the
+fastest characterization figures) so the gate finishes in ~a minute; any
+``ERROR=`` row still exits nonzero.  ``--only`` filters sections by name
+prefix.
 """
+import argparse
+import os
 import sys
 import traceback
 
+_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
 
 def main() -> None:
-    from benchmarks import dryrun_summary, kernels_bench, paper_figs
-    print("name,us_per_call,derived")
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI subset: reduced iterations, fast sections only")
+    ap.add_argument("--only", default=None,
+                    help="run only sections whose name starts with PREFIX")
+    args = ap.parse_args()
+
+    from benchmarks import (cluster_sweep, dryrun_summary, kernels_bench,
+                            paper_figs)
     sections = [("kernels", kernels_bench.run),
-                ("dryrun", dryrun_summary.run)]
+                ("dryrun", dryrun_summary.run),
+                ("cluster", cluster_sweep.run)]
     sections += [(fn.__name__, fn) for fn in paper_figs.ALL]
+    if args.smoke:
+        cluster_sweep.SMOKE = True
+        fast = {"dryrun", "cluster", "fig3_overlap_and_duration",
+                "fig5_thermal_profile", "fig7_lead_waves"}
+        sections = [(n, fn) for n, fn in sections if n in fast]
+    if args.only:
+        sections = [(n, fn) for n, fn in sections
+                    if n.startswith(args.only)]
+
+    print("name,us_per_call,derived")
     failures = 0
     for name, fn in sections:
         try:

@@ -1,0 +1,17 @@
+"""JAX version-compat knobs, applied when a jax-facing subpackage loads.
+
+``jax_threefry_partitionable`` defaults to False on the 0.4.x line, which
+makes ``jax.random`` draws inside jit depend on the output sharding — a
+(2, 4)-mesh initialization then differs from single-device, breaking the
+sharded-equals-reference train tests.  Newer jax defaults it to True
+(sharding-invariant random bits); opt in explicitly so every supported
+version behaves the same.
+"""
+from __future__ import annotations
+
+import jax
+
+try:
+    jax.config.update("jax_threefry_partitionable", True)
+except Exception:                      # unknown option on a future release
+    pass

@@ -2,14 +2,19 @@
 models, detection (Algorithm 1), mitigation (Algorithms 2+3) and the
 node-level power-management layer, plus the calibrated thermal/DVFS/C3 node
 simulator that stands in for device physics on this CPU-only container."""
-from repro.core.backends import PowerBackend, SimBackend, TPUPlatformBackend
-from repro.core.c3sim import C3Sim, IterationTrace, NodeSim, SimConfig
+from repro.core.backends import (ClusterSimBackend, NodeViewBackend,
+                                 PowerBackend, SimBackend, TPUPlatformBackend)
+from repro.core.c3sim import (C3Sim, IterationTrace, NodeSim, SimConfig,
+                              workload_arrays)
+from repro.core.cluster import ClusterConfig, ClusterSim, ring_allreduce_time
 from repro.core.detect import (aggregate_lead, classify_overlap, cosine,
                                lead_value_detect, lead_values,
                                overlap_duration_correlation, pearson,
                                straggler_index)
-from repro.core.manager import (USE_CASES, ManagerConfig, PowerManager,
-                                run_closed_loop)
+from repro.core.manager import (USE_CASES, FleetManagerConfig,
+                                FleetPowerManager, ManagerConfig,
+                                PowerManager, run_closed_loop,
+                                run_fleet_closed_loop)
 from repro.core.mitigate import adj_power_node, inc_power_gpu
 from repro.core.perf_model import PerfPrediction, predict_speedup, t_agg
 from repro.core.power_model import PowerPrediction, predict_power
@@ -19,8 +24,11 @@ from repro.core.workload import (CommKernel, CompKernel, Workload,
                                  fsdp_llm_iteration)
 
 __all__ = [
-    "PowerBackend", "SimBackend", "TPUPlatformBackend", "C3Sim",
-    "IterationTrace", "NodeSim", "SimConfig", "aggregate_lead",
+    "PowerBackend", "SimBackend", "TPUPlatformBackend", "ClusterSimBackend",
+    "NodeViewBackend", "C3Sim", "IterationTrace", "NodeSim", "SimConfig",
+    "workload_arrays", "ClusterConfig", "ClusterSim", "ring_allreduce_time",
+    "FleetManagerConfig", "FleetPowerManager", "run_fleet_closed_loop",
+    "aggregate_lead",
     "classify_overlap", "cosine", "lead_value_detect", "lead_values",
     "overlap_duration_correlation", "pearson", "straggler_index", "USE_CASES",
     "ManagerConfig", "PowerManager", "run_closed_loop", "adj_power_node",

@@ -7,11 +7,12 @@ real-hardware stub documenting the production integration points.
 """
 from __future__ import annotations
 
-from typing import Optional, Protocol
+from typing import List, Optional, Protocol
 
 import numpy as np
 
 from repro.core.c3sim import IterationTrace, NodeSim
+from repro.core.cluster import ClusterSim
 
 
 class PowerBackend(Protocol):
@@ -45,6 +46,65 @@ class SimBackend:
         s = self.node.state
         return {"temp": s.temp.copy(), "freq": s.freq.copy(),
                 "power": s.power.copy(), "cap": s.cap.copy()}
+
+
+class NodeViewBackend:
+    """Per-node cap/telemetry view over a cluster — satisfies the parts of
+    ``PowerBackend`` a `PowerManager` touches (caps + metadata), so the
+    unmodified node-level controller runs against one node of a fleet."""
+
+    def __init__(self, cluster: ClusterSim, node: int):
+        self.cluster = cluster
+        self.node = node
+        self.n_devices = cluster.G
+        self.tdp = cluster.preset.tdp
+
+    def run_iteration(self) -> IterationTrace:
+        raise NotImplementedError(
+            "NodeViewBackend is cap/telemetry only; iterations are driven "
+            "fleet-wide through ClusterSimBackend.run_iteration")
+
+    def set_power_caps(self, caps: np.ndarray) -> None:
+        self.cluster.set_node_caps(self.node, caps)
+
+    def get_power_caps(self) -> np.ndarray:
+        return self.cluster.get_node_caps(self.node)
+
+    def telemetry(self) -> dict:
+        s = self.cluster.nodes[self.node].state
+        return {"temp": s.temp.copy(), "freq": s.freq.copy(),
+                "power": s.power.copy(), "cap": s.cap.copy()}
+
+
+class ClusterSimBackend:
+    """Backend over the N-node cluster simulator.  ``run_iteration`` returns
+    the per-node traces of one data-parallel step; per-node cap control is
+    exposed through `NodeViewBackend` views."""
+
+    def __init__(self, cluster: ClusterSim):
+        self.cluster = cluster
+        self.n_nodes = cluster.N
+        self.n_devices = cluster.G
+        self.tdp = cluster.preset.tdp
+        self.node_views = [NodeViewBackend(cluster, n)
+                           for n in range(cluster.N)]
+
+    def run_iteration(self) -> List[IterationTrace]:
+        return self.cluster.step()
+
+    def set_power_caps(self, caps: np.ndarray) -> None:
+        caps = np.asarray(caps, float).reshape(self.n_nodes, self.n_devices)
+        for n in range(self.n_nodes):
+            self.cluster.set_node_caps(n, caps[n])
+
+    def get_power_caps(self) -> np.ndarray:
+        return np.stack([self.cluster.get_node_caps(n)
+                         for n in range(self.n_nodes)])
+
+    def telemetry(self) -> dict:
+        return {"nodes": [v.telemetry() for v in self.node_views],
+                "t_fleet": (self.cluster.history[-1]["t_fleet"]
+                            if self.cluster.history else None)}
 
 
 class TPUPlatformBackend:

@@ -39,6 +39,42 @@ class SimConfig:
     comm_spike_mult: float = 8.0    # spike multiplier (paper Fig 16 MoE)
     noise: float = 0.008            # per-kernel duration noise (lognormal σ)
     seed: int = 0
+    engine: str = "event"           # "event" (heap reference) | "batched"
+
+
+def workload_arrays(wl: Workload) -> dict:
+    """Vectorized kernel tables + producer/gate maps, cached on the Workload.
+
+    Building these per C3Sim instance is wasteful once a cluster holds N
+    nodes over the same workload; the cache keys on the Workload object so
+    every C3Sim sharing it reuses one set of arrays.
+    """
+    cached = getattr(wl, "_c3_arrays", None)
+    if cached is not None:
+        return cached
+    producers: Dict[int, List[int]] = {}
+    for j, ck in enumerate(wl.comm):
+        if ck.producer is not None:
+            producers.setdefault(ck.producer, []).append(j)
+    comm_gates: Dict[int, List[int]] = {}
+    for i, k in enumerate(wl.comp):
+        if k.wait_comm is not None:
+            comm_gates.setdefault(k.wait_comm, []).append(i)
+    arrays = {
+        "gflop": np.array([k.gflop for k in wl.comp], float),
+        "gbyte": np.array([k.gbyte for k in wl.comp], float),
+        "wait": np.array([-1 if k.wait_comm is None else k.wait_comm
+                          for k in wl.comp], int),
+        "cbytes": np.array([c.bytes for c in wl.comm], float),
+        "cprod": np.array([-1 if c.producer is None else c.producer
+                           for c in wl.comm], int),
+        "producers": producers,
+        "comm_gates": comm_gates,
+        "comp_names": [k.name for k in wl.comp],
+        "comm_names": [c.name for c in wl.comm],
+    }
+    wl._c3_arrays = arrays
+    return arrays
 
 
 @dataclass
@@ -78,31 +114,49 @@ class C3Sim:
         self.cfg = sim_cfg
         self.G = n_devices
         self.rng = np.random.default_rng(sim_cfg.seed + 104729)
+        self.arrays = workload_arrays(workload)
         # comm waiters: comp index -> list of comm indices it produces
-        self.producers: Dict[int, List[int]] = {}
-        for j, ck in enumerate(workload.comm):
-            if ck.producer is not None:
-                self.producers.setdefault(ck.producer, []).append(j)
+        self.producers: Dict[int, List[int]] = self.arrays["producers"]
         # comp waiters: comm index -> list of comp indices gated on it
-        self.comm_gates: Dict[int, List[int]] = {}
-        for i, k in enumerate(workload.comp):
-            if k.wait_comm is not None:
-                self.comm_gates.setdefault(k.wait_comm, []).append(i)
+        self.comm_gates: Dict[int, List[int]] = self.arrays["comm_gates"]
+
+    # ---------------------------------------------------------------- noise
+    def _draw_noise(self):
+        """Per-iteration stochastic draws, shared by both engines so the
+        same seed consumes the same RNG stream regardless of engine."""
+        cfg, G = self.cfg, self.G
+        Kc, Km = len(self.wl.comp), len(self.wl.comm)
+        noise_c = np.exp(self.rng.normal(0, cfg.noise, (G, Kc)))
+        base = self.arrays["cbytes"] / (cfg.comm_gbps * 1e9)
+        if not cfg.comm_spike_p:
+            dur_comm = base * np.exp(self.rng.normal(0, cfg.noise, Km))
+        else:
+            dur_comm = np.empty(Km)
+            for j in range(Km):
+                d = base[j]
+                if self.rng.random() < cfg.comm_spike_p:
+                    d *= cfg.comm_spike_mult * (1 + self.rng.random())
+                dur_comm[j] = d * np.exp(self.rng.normal(0, cfg.noise))
+        return noise_c, dur_comm
 
     # ------------------------------------------------------------------ run
-    def run_iteration(self, freq: np.ndarray) -> IterationTrace:
+    def run_iteration(self, freq: np.ndarray,
+                      engine: Optional[str] = None) -> IterationTrace:
+        engine = engine or self.cfg.engine
+        noise_c, dur_comm = self._draw_noise()
+        if engine == "batched":
+            return self._run_batched(freq, noise_c, dur_comm)
+        if engine == "event":
+            return self._run_event(freq, noise_c, dur_comm)
+        raise ValueError(f"unknown engine {engine!r}")
+
+    # ----------------------------------------------------- event (reference)
+    def _run_event(self, freq: np.ndarray, noise_c: np.ndarray,
+                   dur_comm: np.ndarray) -> IterationTrace:
         wl, G, cfg, p = self.wl, self.G, self.cfg, self.preset
         Kc, Km = len(wl.comp), len(wl.comm)
         comp_rate_f = p.peak_gflops * cfg.gemm_eff * (freq / p.f_max)  # GF/s
         mem_rate = p.hbm_gbps                                          # GB/s
-
-        noise_c = np.exp(self.rng.normal(0, cfg.noise, (G, Kc)))
-        dur_comm = np.empty(Km)
-        for j, ck in enumerate(wl.comm):
-            d = ck.bytes / (cfg.comm_gbps * 1e9)
-            if cfg.comm_spike_p and self.rng.random() < cfg.comm_spike_p:
-                d *= cfg.comm_spike_mult * (1 + self.rng.random())
-            dur_comm[j] = d * np.exp(self.rng.normal(0, cfg.noise))
 
         comp_start = np.full((G, Kc), np.nan)
         comp_end = np.full((G, Kc), np.nan)
@@ -262,15 +316,149 @@ class C3Sim:
                     for g in range(G):
                         try_arrive(g, t)
 
+        return self._make_trace(comp_start, comp_end, comp_ovl,
+                                comm_lstart, comm_gend, busy_time)
+
+    def _make_trace(self, comp_start, comp_end, comp_ovl, comm_lstart,
+                    comm_gend, busy_time) -> IterationTrace:
+        """Shared trace assembly — both engines must produce the identical
+        record (property-tested), so it lives in exactly one place."""
         t_iter = float(np.nanmax(comp_end))
-        if Km:
+        if comm_gend.size:
             t_iter = max(t_iter, float(np.nanmax(comm_gend)))
         return IterationTrace(
-            comp_names=[k.name for k in wl.comp],
-            comm_names=[k.name for k in wl.comm],
+            comp_names=list(self.arrays["comp_names"]),
+            comm_names=list(self.arrays["comm_names"]),
             comp_start=comp_start, comp_end=comp_end, comp_overlap=comp_ovl,
             comm_start=comm_lstart, comm_end=comm_gend,
-            t_iter=t_iter, util=busy_time / max(t_iter, 1e-12))
+            t_iter=t_iter, util=np.asarray(busy_time) / max(t_iter, 1e-12))
+
+    # ------------------------------------------------------- batched engine
+    def _run_batched(self, freq: np.ndarray, noise_c: np.ndarray,
+                     dur_comm: np.ndarray) -> IterationTrace:
+        """Fast path: exploit that collectives are processed strictly in
+        order with a global barrier each — so the iteration decomposes into
+        one window per collective.  Per window: (1) advance each device at
+        full rate until its producer kernel completes (= its local arrival),
+        (2) the global end is max(arrival) + duration, (3) advance each
+        device slowed from its arrival to the global end.  No event heap,
+        no re-push churn; kernel work tables are precomputed numpy arrays.
+        Produces the same trace as the event engine (same RNG stream, same
+        piecewise-rate integration at the same boundaries)."""
+        wl, G, cfg, p = self.wl, self.G, self.cfg, self.preset
+        A = self.arrays
+        Kc, Km = len(wl.comp), len(wl.comm)
+        k_wait = A["wait"].tolist()
+        cprod = A["cprod"].tolist()
+        rate_f = (p.peak_gflops * cfg.gemm_eff * (freq / p.f_max)).tolist()
+        rate_f_s = [r / (1 + cfg.kappa_comp) for r in rate_f]
+        rm, rm_s = p.hbm_gbps, p.hbm_gbps / (1 + cfg.kappa_mem)
+        work_f = (A["gflop"][None, :] * noise_c).tolist()   # (G, Kc)
+        work_b = (A["gbyte"][None, :] * noise_c).tolist()
+        dur_comm_l = dur_comm.tolist()
+        nan = float("nan")
+        inf = float("inf")
+
+        # hot-loop state lives in Python lists: scalar numpy indexing would
+        # dominate the runtime
+        comp_start = [[nan] * Kc for _ in range(G)]
+        comp_end = [[nan] * Kc for _ in range(G)]
+        comp_ovl = [[0.0] * Kc for _ in range(G)]
+        comm_lstart = np.full((G, Km), np.nan)
+        comm_gend = [nan] * Km
+        busy_time = [0.0] * G
+
+        ci = [0] * G                          # compute cursor per device
+        tdev = [0.0] * G                      # compute-frontier time
+        gfr = [0.0] * G                       # in-flight kernel residues
+        gbr = [0.0] * G
+        started = [False] * G
+
+        def advance(g, t_stop, slowed, until=-1):
+            """Advance g's compute stream to t_stop (window mode) or until
+            kernel `until` completes (target mode, t_stop=inf)."""
+            t = tdev[g]
+            i = ci[g]
+            rf = rate_f_s[g] if slowed else rate_f[g]
+            rmm = rm_s if slowed else rm
+            cs, ce, ov = comp_start[g], comp_end[g], comp_ovl[g]
+            wf, wb = work_f[g], work_b[g]
+            ran_out = True
+            while i < Kc:
+                if not started[g]:
+                    w = k_wait[i]
+                    if w >= 0:
+                        ge = comm_gend[w]
+                        if ge != ge:          # NaN: gated on a future comm
+                            if until >= 0:
+                                raise RuntimeError(
+                                    "C3Sim[batched]: deadlock — producer "
+                                    "kernel gated on an unfinished comm")
+                            t = t_stop
+                            ran_out = False
+                            break
+                        if ge >= t_stop:      # gate opens at/after window end
+                            t = t_stop
+                            ran_out = False
+                            break
+                        if ge > t:
+                            t = ge            # idle until the gate opens
+                    cs[i] = t
+                    gfr[g] = wf[i]
+                    gbr[g] = wb[i]
+                    started[g] = True
+                dt = gfr[g] / rf + gbr[g] / rmm
+                if t + dt <= t_stop:
+                    if slowed:
+                        ov[i] += dt
+                    t = t + dt
+                    ce[i] = t
+                    busy_time[g] += t - cs[i]
+                    started[g] = False
+                    i += 1
+                    if until >= 0 and i > until:
+                        ran_out = False
+                        break
+                else:                          # partial progress to t_stop
+                    dt_avail = t_stop - t
+                    if dt_avail > 0:
+                        if slowed:
+                            ov[i] += dt_avail
+                        use = min(dt_avail, gfr[g] / rf)
+                        gfr[g] -= use * rf
+                        gbr[g] = max(0.0, gbr[g] - (dt_avail - use) * rmm)
+                    t = t_stop
+                    ran_out = False
+                    break
+            if ran_out and t_stop != inf:      # stream exhausted this window
+                t = t_stop
+            ci[g] = i
+            tdev[g] = t
+
+        prev_end = 0.0
+        arr = [0.0] * G
+        for j in range(Km):
+            prod = cprod[j]
+            for g in range(G):
+                if prod >= 0 and comp_end[g][prod] != comp_end[g][prod]:
+                    advance(g, inf, slowed=False, until=prod)
+                    if comp_end[g][prod] != comp_end[g][prod]:
+                        raise RuntimeError("C3Sim[batched]: producer of comm "
+                                           f"{j} never completed (deadlock)")
+                    arr[g] = comp_end[g][prod]
+                else:
+                    arr[g] = prev_end
+            comm_lstart[:, j] = arr
+            prev_end = max(arr) + dur_comm_l[j]
+            comm_gend[j] = prev_end
+            for g in range(G):
+                advance(g, prev_end, slowed=True)
+        for g in range(G):                     # drain after the last barrier
+            advance(g, inf, slowed=False)
+
+        return self._make_trace(np.asarray(comp_start), np.asarray(comp_end),
+                                np.asarray(comp_ovl), comm_lstart,
+                                np.asarray(comm_gend), busy_time)
 
 
 class NodeSim:
@@ -294,20 +482,37 @@ class NodeSim:
     def set_power_caps(self, caps: np.ndarray) -> None:
         self.state.cap = np.asarray(caps, float).copy()
 
-    def step(self) -> IterationTrace:
-        freq_used = self.state.freq.copy()
-        trace = self.sim.run_iteration(freq_used)
-        self.thermal.update(self.state, trace.util, trace.t_iter)
+    def run_only(self) -> IterationTrace:
+        """Execute one iteration at current frequencies without committing
+        physics — a cluster layer runs all nodes first, then commits with
+        the global (barrier-stretched) interval."""
+        self._freq_used = self.state.freq.copy()
+        return self.sim.run_iteration(self._freq_used)
+
+    def commit(self, trace: IterationTrace,
+               t_interval: Optional[float] = None) -> None:
+        """Thermal/DVFS update over `t_interval` (default: local t_iter).
+        When the node is barrier-bound by a slower peer, its devices idle
+        for t_interval - t_iter, lowering utilization (and so power) over
+        the stretched interval."""
+        t = trace.t_iter if t_interval is None else t_interval
+        util = trace.util * (trace.t_iter / t)
+        self.thermal.update(self.state, util, t)
         self.history.append({
             "iter": self.iteration,
-            "freq_used": freq_used,
-            "t_iter": trace.t_iter,
+            "freq_used": self._freq_used,
+            "t_iter": t,
+            "t_local": trace.t_iter,
             "freq": self.state.freq.copy(),
             "temp": self.state.temp.copy(),
             "power": self.state.power.copy(),
             "cap": self.state.cap.copy(),
-            "throughput": 1.0 / trace.t_iter,
-            "energy": float(np.sum(self.state.power) * trace.t_iter),
+            "throughput": 1.0 / t,
+            "energy": float(np.sum(self.state.power) * t),
         })
         self.iteration += 1
+
+    def step(self) -> IterationTrace:
+        trace = self.run_only()
+        self.commit(trace)
         return trace

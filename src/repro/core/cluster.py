@@ -1,0 +1,122 @@
+"""Cluster-scale Lit Silicon: N thermally-independent nodes coupled by
+data parallelism.
+
+Each node runs the paper's intra-node C3/thermal dynamics (`NodeSim`).
+Across nodes, data parallelism adds a per-iteration gradient all-reduce over
+the (much slower) inter-node fabric plus a global barrier: the fleet
+iteration time is the *slowest* node's local time plus the ring all-reduce.
+A single hot GPU on one node therefore straggles every node in the fleet —
+the aggregation step that turns the paper's node-level observation into the
+datacenter-scale cost claim ("Not All GPUs Are Created Equal" measures the
+same compounding on real fleets).
+
+Thermal feedback is barrier-aware: nodes that finish early idle at the
+barrier, so their devices run at lower average utilization over the
+stretched interval, draw less power, and cool — which is exactly the wasted
+provisioned power the FleetPowerManager reallocates toward the straggler.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import List, Optional
+
+import numpy as np
+
+from repro.core.c3sim import IterationTrace, NodeSim, SimConfig
+from repro.core.thermal import DevicePreset
+from repro.core.workload import Workload
+
+
+@dataclass
+class ClusterConfig:
+    n_nodes: int = 4
+    inter_node_gbps: float = 12.5     # per-device effective DP-fabric GB/s
+    grad_bytes: Optional[float] = None  # all-reduce payload per device;
+    #                                     default: sum of the workload's
+    #                                     gradient reduce-scatter payloads
+    straggler_node: int = 0           # node hosting the hot GPU
+    straggler_boost: float = 1.28     # r_th multiplier for that GPU
+    healthy_boost: float = 1.0        # boost on every other node's worst slot
+    engine: str = "batched"           # C3Sim engine for node iterations
+
+
+def ring_allreduce_time(payload_bytes: float, n_nodes: int,
+                        gbps: float) -> float:
+    """Bandwidth term of a ring all-reduce: 2(N-1)/N chunks over the link."""
+    if n_nodes <= 1 or payload_bytes <= 0:
+        return 0.0
+    return 2.0 * (n_nodes - 1) / n_nodes * payload_bytes / (gbps * 1e9)
+
+
+class ClusterSim:
+    """N `NodeSim`s under data parallelism with a global iteration barrier."""
+
+    def __init__(self, workload: Workload, preset: DevicePreset,
+                 sim_cfg: SimConfig, cluster_cfg: ClusterConfig,
+                 devices_per_node: int = 8, seed: int = 0):
+        cc = cluster_cfg
+        self.cfg = cc
+        self.N = cc.n_nodes
+        self.G = devices_per_node
+        self.preset = preset
+        node_sim_cfg = dataclasses.replace(sim_cfg, engine=cc.engine)
+        self.nodes: List[NodeSim] = []
+        for n in range(self.N):
+            boost = (cc.straggler_boost if n == cc.straggler_node
+                     else cc.healthy_boost)
+            self.nodes.append(NodeSim(
+                workload, preset,
+                dataclasses.replace(node_sim_cfg, seed=sim_cfg.seed + n),
+                n_devices=devices_per_node, seed=seed + 7919 * n,
+                straggler_boost=boost))
+        grad = cc.grad_bytes
+        if grad is None:
+            grad = sum(c.bytes for c in workload.comm
+                       if c.name.startswith("rs_"))
+            if grad <= 0:
+                grad = workload.total_bytes / 3.0
+        self.grad_bytes = float(grad)
+        self.history: List[dict] = []
+        self.iteration = 0
+
+    # ------------------------------------------------------------------ api
+    def allreduce_time(self) -> float:
+        return ring_allreduce_time(self.grad_bytes, self.N,
+                                   self.cfg.inter_node_gbps)
+
+    def set_node_caps(self, node: int, caps: np.ndarray) -> None:
+        self.nodes[node].set_power_caps(caps)
+
+    def get_node_caps(self, node: int) -> np.ndarray:
+        return self.nodes[node].state.cap.copy()
+
+    def step(self) -> List[IterationTrace]:
+        """One data-parallel iteration: all nodes execute, then the gradient
+        all-reduce and global barrier stretch everyone to the slowest."""
+        traces = [node.run_only() for node in self.nodes]
+        t_local = np.array([tr.t_iter for tr in traces])
+        t_fleet = float(t_local.max()) + self.allreduce_time()
+        for node, tr in zip(self.nodes, traces):
+            node.commit(tr, t_interval=t_fleet)
+        power = np.array([float(np.sum(n.state.power)) for n in self.nodes])
+        self.history.append({
+            "iter": self.iteration,
+            "t_local": t_local,
+            "t_fleet": t_fleet,
+            "throughput": 1.0 / t_fleet,
+            "node_power": power,
+            "power": float(power.sum()),
+            "slowest_node": int(np.argmax(t_local)),
+        })
+        self.iteration += 1
+        return traces
+
+    # ------------------------------------------------------------ reporting
+    def fleet_throughput(self, last: int = 30) -> float:
+        h = self.history[-last:]
+        return float(np.mean([x["throughput"] for x in h]))
+
+    def fleet_power(self, last: int = 30) -> float:
+        h = self.history[-last:]
+        return float(np.mean([x["power"] for x in h]))

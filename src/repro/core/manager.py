@@ -17,6 +17,7 @@ can be exported/imported, so detection is a one-time (or weekly) cost.
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 from dataclasses import dataclass, field
 from typing import List, Optional
@@ -47,8 +48,12 @@ class ManagerConfig:
     convergence_freeze: bool = True    # disable after caps stabilize (§V:
     freeze_tol_w: float = 2.5          #   one-time profiling cost)
     freeze_window: int = 3
+    node_cap_override: Optional[float] = None  # W: a fleet controller sets
+    #                                    this to the node's current budget
 
     def node_cap(self, n_devices: int, tdp: float) -> float:
+        if self.node_cap_override is not None:
+            return self.node_cap_override
         if self.use_case == "gpu-red":
             return n_devices * tdp
         if self.use_case == "gpu-realloc":
@@ -128,6 +133,122 @@ class PowerManager:
             data = json.load(f)
         self.backend.set_power_caps(np.asarray(data["caps"], float))
         self.enabled = False               # one-time profiling cost amortized
+
+
+@dataclass
+class FleetManagerConfig(ManagerConfig):
+    """Cluster-level knobs on top of the Table II node knobs."""
+
+    cluster_power_budget: Optional[float] = None  # W total; default
+    #                                               n_nodes * node_cap
+    node_window_size: int = 3          # fleet samples per node adjustment
+    max_node_adjustment: float = 60.0  # W of node-budget shift per step
+    node_scale: str = "global"         # damping for the node-level Alg. 2
+
+
+class FleetPowerManager:
+    """Hierarchical Lit Silicon control for an N-node data-parallel fleet.
+
+    Two nested instances of the paper's detect→mitigate loop:
+
+      * per node, an unmodified `PowerManager` runs Algorithms 1-3 over that
+        node's kernel-start traces, within the node's current power budget;
+      * across nodes, the *same* Algorithms 2+3 run at node granularity —
+        a node's "lead" is its barrier wait (t_slowest - t_local), the
+        straggling node has lead ~0 and receives budget sloshed from the
+        nodes that idle at the barrier, projected onto the cluster budget.
+
+    The node-level loop needs only one scalar per node per sample (its local
+    iteration time), i.e. the same O(small allgather) telemetry cost the
+    paper's §VIII-B deployment sketch budgets for.
+    """
+
+    def __init__(self, backend, cfg: FleetManagerConfig):
+        if not hasattr(backend, "node_views"):
+            raise TypeError("FleetPowerManager needs a cluster backend "
+                            "exposing per-node views (ClusterSimBackend)")
+        self.backend = backend
+        self.cfg = cfg
+        self.N = backend.n_nodes
+        self.G = backend.n_devices
+        self.tdp = backend.tdp
+        per_node_cap = cfg.node_cap(self.G, self.tdp)
+        self.cluster_budget = (cfg.cluster_power_budget
+                               if cfg.cluster_power_budget is not None
+                               else self.N * per_node_cap)
+        self.node_budgets = np.full(self.N, self.cluster_budget / self.N)
+        self.node_cfgs = [dataclasses.replace(
+            cfg, node_cap_override=float(b)) for b in self.node_budgets]
+        self.managers = [PowerManager(v, c) for v, c in
+                         zip(backend.node_views, self.node_cfgs)]
+        self.node_global_max = 0.0
+        self.samples_seen = 0
+        self.t_local_window: List[np.ndarray] = []
+        self.budget_log: List[np.ndarray] = []
+
+    # ----------------------------------------------------------------- hook
+    def on_iteration(self, iteration: int,
+                     traces: Optional[List[IterationTrace]]) -> None:
+        if traces is None:
+            return
+        for mgr, tr in zip(self.managers, traces):
+            mgr.on_iteration(iteration, tr)
+        if iteration % self.cfg.sampling_period:
+            return
+        t_local = np.array([tr.t_iter for tr in traces])
+        self.samples_seen += 1
+        if self.samples_seen <= self.cfg.warmup:
+            return
+        self.t_local_window.append(t_local)
+        if len(self.t_local_window) < self.cfg.node_window_size:
+            return
+        t_avg = np.mean(self.t_local_window, axis=0)
+        self.t_local_window.clear()
+        self.adjust_node_budgets(t_avg)
+
+    def adjust_node_budgets(self, t_local: np.ndarray) -> np.ndarray:
+        """Algorithms 2+3 at node granularity: barrier wait is the lead."""
+        lead = t_local.max() - t_local         # slowest node leads by 0
+        inc, self.node_global_max = inc_power_gpu(
+            lead, self.cfg.max_node_adjustment, self.node_global_max,
+            self.cfg.node_scale)
+        budgets = adj_power_node(inc, self.node_budgets,
+                                 tdp=self.G * self.tdp,
+                                 node_cap=self.cluster_budget)
+        floor = self.G * self.tdp * 0.25
+        budgets = np.maximum(budgets, floor)
+        # flooring after the projection can overshoot the cluster budget:
+        # claw the excess back from nodes with headroom above the floor
+        excess = budgets.sum() - self.cluster_budget
+        if excess > 0:
+            headroom = budgets - floor
+            total = headroom.sum()
+            if total > 0:
+                budgets -= headroom * min(1.0, excess / total)
+        self.node_budgets = budgets
+        self.budget_log.append(budgets.copy())
+        for n, mgr in enumerate(self.managers):
+            if abs(mgr.cfg.node_cap_override - budgets[n]) > 1e-6:
+                mgr.cfg.node_cap_override = float(budgets[n])
+                mgr.enabled = True      # budget moved: resume adaptation
+        return budgets
+
+
+def run_fleet_closed_loop(backend, cfg: FleetManagerConfig, iterations: int,
+                          tune_after: Optional[int] = None):
+    """Cluster counterpart of `run_closed_loop`: run `iterations` fleet
+    steps, enabling hierarchical tuning from `tune_after` (default
+    halfway).  Returns the FleetPowerManager."""
+    mgr = FleetPowerManager(backend, cfg)
+    tune_after = iterations // 2 if tune_after is None else tune_after
+    enabled = False
+    for i in range(iterations):
+        if i == tune_after:
+            enabled = True
+        traces = backend.run_iteration()
+        if enabled:
+            mgr.on_iteration(i, traces)
+    return mgr
 
 
 def run_closed_loop(backend: PowerBackend, cfg: ManagerConfig,

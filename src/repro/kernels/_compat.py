@@ -1,0 +1,13 @@
+"""Pallas API-drift shims shared by the TPU kernels.
+
+``pltpu.CompilerParams`` is the current name of what older jax releases
+(<0.5, e.g. the 0.4.x in this container) call ``TPUCompilerParams``; the
+constructor fields used here (dimension_semantics, vmem_limit_bytes,
+has_side_effects) are identical across the rename.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams")

@@ -17,6 +17,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams
+
 NEG_INF = -1e30
 
 
@@ -122,7 +124,7 @@ def flash_attention_fwd(q, k, v, mask=None, *, causal: bool = True,
     qspec = pl.BlockSpec((1, block_q, D), lambda b, i, j: (b, i, 0))
     kspec = pl.BlockSpec((1, block_k, D), lambda b, i, j: (b, j, 0))
     ospec = pl.BlockSpec((1, block_q, D), lambda b, i, j: (b, i, 0))
-    params = pltpu.CompilerParams(
+    params = CompilerParams(
         dimension_semantics=("parallel", "parallel", "arbitrary"))
 
     if mask is not None:

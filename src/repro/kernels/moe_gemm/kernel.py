@@ -15,6 +15,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams
+
 
 def _mm_kernel(x_ref, w_ref, o_ref, acc, *, n_d):
     di = pl.program_id(3)
@@ -68,7 +70,7 @@ def moe_gemm_fwd(x, w, *, block_c: int = 128, block_h: int = 128,
                                lambda e, i, j, kk: (e, i, j)),
         scratch_shapes=[pltpu.VMEM((block_c, block_h), jnp.float32)],
         out_shape=jax.ShapeDtypeStruct((E, Cp, hp), x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,

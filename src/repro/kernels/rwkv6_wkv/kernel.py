@@ -17,6 +17,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams
+
 
 def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, s_out_ref, s_scr,
                 *, L, n_chunks):
@@ -97,7 +99,7 @@ def wkv6_fwd(r, k, v, w_log, u, *, chunk: int = 64, interpret: bool = True):
         scratch_shapes=[pltpu.VMEM((D, D), jnp.float32)],
         out_shape=[jax.ShapeDtypeStruct((B * H, S + pad, D), r.dtype),
                    jax.ShapeDtypeStruct((B * H, D, D), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(rf, kf, vf, wf, uf)

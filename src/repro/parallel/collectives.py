@@ -17,13 +17,21 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 
+def axis_size(axis_name: str) -> int:
+    """Version-compat: ``jax.lax.axis_size`` only exists in newer jax; the
+    ``psum(1, axis)`` idiom is constant-folded to the axis size everywhere."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
 def ring_all_gather(x, axis_name: str):
     """All-gather along axis_name via a bidirectional-naive ppermute ring.
 
     x: local shard (..., d).  Returns (axis_size, ..., d) stacked gathers in
     ring order, rotated so index 0 is rank 0's shard.
     """
-    n = jax.lax.axis_size(axis_name)
+    n = axis_size(axis_name)
     idx = jax.lax.axis_index(axis_name)
     perm = [(i, (i + 1) % n) for i in range(n)]
     chunks = [x]

@@ -1,0 +1,172 @@
+"""Minimal stand-in for `hypothesis` used when the real package is absent.
+
+The container this repo grows in cannot install new packages, but four test
+modules are property tests written against the hypothesis API.  This shim
+implements the small subset they use — `given`, `settings`, and the
+`strategies` combinators (integers, floats, lists, tuples, sampled_from,
+flatmap, map, filter) — by drawing pseudo-random examples from a seeded
+numpy generator, with light boundary biasing so min/max edges get exercised.
+
+It is *not* hypothesis: no shrinking, no database, no health checks.  When
+the real package is installed (see pyproject's `test` extra — CI does this),
+`tests/conftest.py` never puts this shim on `sys.path` and the genuine
+implementation is used instead.
+"""
+from __future__ import annotations
+
+import zlib
+from typing import Any, Callable, List, Optional
+
+import numpy as np
+
+__version__ = "0.0.0-shim"
+_DEFAULT_MAX_EXAMPLES = 30
+
+
+class SearchStrategy:
+    def __init__(self, draw: Callable[[np.random.Generator], Any]):
+        self._draw = draw
+
+    def example_with(self, rng: np.random.Generator) -> Any:
+        return self._draw(rng)
+
+    def flatmap(self, f: Callable[[Any], "SearchStrategy"]):
+        return SearchStrategy(lambda r: f(self._draw(r))._draw(r))
+
+    def map(self, f: Callable[[Any], Any]):
+        return SearchStrategy(lambda r: f(self._draw(r)))
+
+    def filter(self, pred: Callable[[Any], bool]):
+        def draw(r):
+            for _ in range(1000):
+                x = self._draw(r)
+                if pred(x):
+                    return x
+            raise RuntimeError("hypothesis-shim: filter rejected 1000 draws")
+        return SearchStrategy(draw)
+
+
+class _Strategies:
+    """Namespace mirroring `hypothesis.strategies`."""
+
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> SearchStrategy:
+        def draw(r):
+            if r.random() < 0.15:                 # bias toward the edges
+                return int(r.choice([min_value, max_value]))
+            return int(r.integers(min_value, max_value + 1))
+        return SearchStrategy(draw)
+
+    @staticmethod
+    def floats(min_value: float, max_value: float, *, allow_nan: bool = True,
+               allow_infinity: bool = True, width: int = 64) -> SearchStrategy:
+        def draw(r):
+            u = r.random()
+            if u < 0.08:
+                return float(min_value)
+            if u < 0.16:
+                return float(max_value)
+            return float(min_value + (max_value - min_value) * r.random())
+        return SearchStrategy(draw)
+
+    @staticmethod
+    def lists(elements: SearchStrategy, *, min_size: int = 0,
+              max_size: Optional[int] = None, unique: bool = False
+              ) -> SearchStrategy:
+        def draw(r):
+            hi = max_size if max_size is not None else min_size + 8
+            n = int(r.integers(min_size, hi + 1))
+            out: List[Any] = []
+            seen = set()
+            tries = 0
+            while len(out) < n and tries < 1000:
+                x = elements._draw(r)
+                tries += 1
+                if unique:
+                    key = x
+                    if key in seen:
+                        continue
+                    seen.add(key)
+                out.append(x)
+            return out
+        return SearchStrategy(draw)
+
+    @staticmethod
+    def tuples(*strats: SearchStrategy) -> SearchStrategy:
+        return SearchStrategy(lambda r: tuple(s._draw(r) for s in strats))
+
+    @staticmethod
+    def sampled_from(seq) -> SearchStrategy:
+        seq = list(seq)
+        return SearchStrategy(lambda r: seq[int(r.integers(len(seq)))])
+
+    @staticmethod
+    def booleans() -> SearchStrategy:
+        return SearchStrategy(lambda r: bool(r.integers(2)))
+
+    @staticmethod
+    def just(value) -> SearchStrategy:
+        return SearchStrategy(lambda r: value)
+
+    @staticmethod
+    def one_of(*strats: SearchStrategy) -> SearchStrategy:
+        strats = tuple(strats)
+        return SearchStrategy(
+            lambda r: strats[int(r.integers(len(strats)))]._draw(r))
+
+
+strategies = _Strategies()
+
+
+def settings(deadline=None, max_examples: int = _DEFAULT_MAX_EXAMPLES,
+             **_ignored):
+    """Decorator: records knobs for a @given-wrapped test (outer position)."""
+    def deco(fn):
+        setattr(fn, "_shim_max_examples", max_examples)
+        return fn
+    return deco
+
+
+def given(*arg_strats: SearchStrategy, **kw_strats: SearchStrategy):
+    """Decorator: run the test repeatedly with drawn examples.
+
+    Deterministic per test name, so failures reproduce run to run.
+    """
+    def deco(fn):
+        def runner():
+            n = getattr(runner, "_shim_max_examples", None)
+            if n is None:
+                n = getattr(fn, "_shim_max_examples", _DEFAULT_MAX_EXAMPLES)
+            seed = zlib.crc32(fn.__qualname__.encode())
+            rng = np.random.default_rng(seed)
+            for _ in range(n):
+                args = [s._draw(rng) for s in arg_strats]
+                kwargs = {k: s._draw(rng) for k, s in kw_strats.items()}
+                try:
+                    fn(*args, **kwargs)
+                except _UnsatisfiedAssumption:
+                    continue
+        runner.__name__ = fn.__name__
+        runner.__qualname__ = fn.__qualname__
+        runner.__doc__ = fn.__doc__
+        runner.__module__ = fn.__module__
+        return runner
+    return deco
+
+
+def assume(condition: bool) -> None:
+    """Best-effort `assume`: a failed assumption just skips the example by
+    raising nothing — callers in this repo don't use it, provided for API
+    compatibility."""
+    if not condition:
+        raise _UnsatisfiedAssumption()
+
+
+class _UnsatisfiedAssumption(Exception):
+    pass
+
+
+class HealthCheck:
+    too_slow = "too_slow"
+    data_too_large = "data_too_large"
+    all = staticmethod(lambda: [])

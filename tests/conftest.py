@@ -9,6 +9,13 @@ import pytest
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+try:                                   # property tests prefer the real thing
+    import hypothesis                  # noqa: F401
+except ImportError:                    # containers without it use the shim
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "_shims"))
+
+# the `slow` marker is registered in pyproject.toml [tool.pytest.ini_options]
+
 
 @pytest.fixture(scope="session")
 def rng():
@@ -25,6 +32,9 @@ def small_workload(arch="llama3.1-8b", n_layers=32):
 def small_node(seed=1, n_layers=32, **sim_kw):
     from repro.core.c3sim import NodeSim, SimConfig
     from repro.core.thermal import MI300X_PRESET
+    # the batched engine produces traces identical to the event engine
+    # (property-tested in test_cluster.py) at ~10x the speed
+    sim_kw.setdefault("engine", "batched")
     return NodeSim(small_workload(n_layers=n_layers), MI300X_PRESET,
                    SimConfig(seed=seed, comm_gbps=40.0, **sim_kw),
                    n_devices=8, seed=seed)

@@ -1,0 +1,214 @@
+"""Cluster-scale Lit Silicon: N-node data parallelism, barrier coupling,
+hierarchical power management, and the batched C3 engine fast path."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from conftest import small_workload
+from repro.core.backends import ClusterSimBackend
+from repro.core.c3sim import C3Sim, SimConfig, workload_arrays
+from repro.core.cluster import ClusterConfig, ClusterSim, ring_allreduce_time
+from repro.core.detect import lead_value_detect
+from repro.core.manager import (FleetManagerConfig, FleetPowerManager,
+                                run_fleet_closed_loop)
+from repro.core.thermal import MI300X_PRESET
+
+CAP = 700.0
+N_NODES = 4
+
+
+def make_cluster(boost, seed=5, n_nodes=N_NODES, caps=CAP, **cc_kw):
+    wl = small_workload(n_layers=8)
+    cl = ClusterSim(wl, MI300X_PRESET, SimConfig(seed=1, comm_gbps=40.0),
+                    ClusterConfig(n_nodes=n_nodes, straggler_boost=boost,
+                                  **cc_kw),
+                    devices_per_node=8, seed=seed)
+    if caps is not None:
+        for n in range(n_nodes):
+            cl.set_node_caps(n, np.full(8, float(caps)))
+    return cl
+
+
+@pytest.fixture(scope="module")
+def fleet_abc():
+    """(healthy, straggler-unmanaged, straggler-managed) fleets, all under
+    the same provisioned cluster power budget of N*G*700 W."""
+    healthy = make_cluster(1.0)
+    strag = make_cluster(1.28)
+    for _ in range(60):
+        healthy.step()
+        strag.step()
+    managed = make_cluster(1.28)
+    mgr = run_fleet_closed_loop(
+        ClusterSimBackend(managed),
+        FleetManagerConfig(use_case="gpu-realloc", sampling_period=2,
+                           warmup=2, window_size=2, node_window_size=2,
+                           power_cap=CAP,
+                           cluster_power_budget=N_NODES * 8 * CAP),
+        120, tune_after=20)
+    return healthy, strag, managed, mgr
+
+
+# --------------------------------------------------------------- semantics
+def test_barrier_and_allreduce_stretch_iterations():
+    cl = make_cluster(1.28, caps=None)
+    traces = cl.step()
+    h = cl.history[-1]
+    t_ar = cl.allreduce_time()
+    assert t_ar > 0
+    assert h["t_fleet"] == pytest.approx(h["t_local"].max() + t_ar)
+    # every node's committed interval is the fleet interval
+    for node in cl.nodes:
+        assert node.history[-1]["t_iter"] == pytest.approx(h["t_fleet"])
+    # barrier-bound nodes idle: utilization scales down by t_local/t_fleet
+    for tr, t_loc in zip(traces, h["t_local"]):
+        assert tr.t_iter == pytest.approx(t_loc)
+
+
+def test_ring_allreduce_time_scaling():
+    assert ring_allreduce_time(1e9, 1, 10.0) == 0.0
+    t2 = ring_allreduce_time(1e9, 2, 10.0)
+    t8 = ring_allreduce_time(1e9, 8, 10.0)
+    assert t2 == pytest.approx(1e9 / (10.0 * 1e9))          # 2*(1/2)*B/bw
+    assert t8 > t2                                          # 2*(7/8) > 1
+    assert t8 < 2 * t2
+
+
+def test_single_node_cluster_matches_nodesim_shape():
+    cl = make_cluster(1.28, n_nodes=1, caps=None)
+    cl.step()
+    assert cl.allreduce_time() == 0.0
+    assert cl.history[-1]["t_fleet"] == pytest.approx(
+        cl.history[-1]["t_local"].max())
+
+
+# ------------------------------------------------------- the paper's claim
+def test_straggler_lowers_fleet_throughput(fleet_abc):
+    healthy, strag, _, _ = fleet_abc
+    tp_h, tp_s = healthy.fleet_throughput(), strag.fleet_throughput()
+    # a single hot GPU on node 0 drags all 4 nodes down measurably
+    assert (tp_h - tp_s) / tp_h > 0.003
+    # and node 0 is the one everyone waits for
+    slowest = [h["slowest_node"] for h in strag.history[-20:]]
+    assert np.mean(np.array(slowest) == 0) > 0.8
+
+
+def test_fleet_manager_recovers_half_the_gap(fleet_abc):
+    healthy, strag, managed, mgr = fleet_abc
+    tp_h, tp_s = healthy.fleet_throughput(), strag.fleet_throughput()
+    tp_m = managed.fleet_throughput()
+    assert tp_h > tp_s
+    recovery = (tp_m - tp_s) / (tp_h - tp_s)
+    assert recovery >= 0.5
+    # the straggler node won budget from the barrier-idling leaders
+    budgets = mgr.node_budgets
+    assert budgets[0] == budgets.max()
+    assert budgets.sum() <= N_NODES * 8 * CAP + 1e-6
+    # cluster power budget respected after tuning engaged
+    peak = max(np.sum(h["node_power"]) for h in managed.history[60:])
+    assert peak <= N_NODES * 8 * CAP
+
+
+def test_fleet_budgets_respect_tight_cluster_budget():
+    """Regression: the post-projection budget floor must not push the sum
+    of node budgets above a tight (power-constrained) cluster budget."""
+    cl = make_cluster(1.28, caps=None)
+    be = ClusterSimBackend(cl)
+    tight = N_NODES * 8 * 280.0                  # well below provisioned
+    mgr = FleetPowerManager(
+        be, FleetManagerConfig(use_case="gpu-realloc", power_cap=CAP,
+                               cluster_power_budget=tight,
+                               max_node_adjustment=120.0))
+    t_local = np.array([2.0, 1.0, 1.0, 1.0])     # persistent straggler
+    for _ in range(60):
+        budgets = mgr.adjust_node_budgets(t_local)
+        assert budgets.sum() <= tight + 1e-6
+    assert budgets[0] == budgets.max()
+
+
+def test_fleet_manager_requires_cluster_backend():
+    with pytest.raises(TypeError):
+        FleetPowerManager(object(), FleetManagerConfig())
+
+
+# ------------------------------------------------------------ backend API
+def test_cluster_backend_cap_roundtrip():
+    cl = make_cluster(1.28, caps=None)
+    be = ClusterSimBackend(cl)
+    caps = be.get_power_caps()
+    assert caps.shape == (N_NODES, 8)
+    new = np.full((N_NODES, 8), 640.0)
+    be.set_power_caps(new)
+    np.testing.assert_allclose(be.get_power_caps(), new)
+    np.testing.assert_allclose(be.node_views[2].get_power_caps(), new[2])
+    be.node_views[1].set_power_caps(np.full(8, 710.0))
+    np.testing.assert_allclose(cl.get_node_caps(1), 710.0)
+    tel = be.telemetry()
+    assert len(tel["nodes"]) == N_NODES
+
+
+# ----------------------------------------------- batched-engine fast path
+def _trace_pair(n_layers=4, seed=3, freq_lo=1.5, spike_p=0.0):
+    wl = small_workload(n_layers=n_layers)
+    freq = np.linspace(freq_lo, 2.1, 8)
+    kw = dict(seed=seed, comm_gbps=40.0, comm_spike_p=spike_p)
+    t_e = C3Sim(wl, MI300X_PRESET, SimConfig(**kw), 8).run_iteration(
+        freq, engine="event")
+    t_b = C3Sim(wl, MI300X_PRESET, SimConfig(**kw), 8).run_iteration(
+        freq, engine="batched")
+    return t_e, t_b
+
+
+def test_batched_engine_identical_leads():
+    t_e, t_b = _trace_pair()
+    np.testing.assert_allclose(lead_value_detect(t_e.comp_start),
+                               lead_value_detect(t_b.comp_start),
+                               rtol=1e-9, atol=1e-12)
+    for field in ("comp_start", "comp_end", "comp_overlap",
+                  "comm_start", "comm_end", "util"):
+        np.testing.assert_allclose(getattr(t_e, field), getattr(t_b, field),
+                                   rtol=1e-9, atol=1e-12, err_msg=field)
+    assert t_e.t_iter == pytest.approx(t_b.t_iter, rel=1e-12)
+
+
+@settings(deadline=None, max_examples=12)
+@given(seed=st.integers(0, 2 ** 16), freq_lo=st.floats(1.0, 2.05),
+       spike_p=st.sampled_from([0.0, 0.05]))
+def test_batched_engine_identical_leads_property(seed, freq_lo, spike_p):
+    """Property: for any seed, frequency spread, and spike setting the two
+    engines consume the same RNG stream and produce identical lead vectors
+    (the Algorithm-1 input), so detection is engine-independent."""
+    t_e, t_b = _trace_pair(seed=seed, freq_lo=freq_lo, spike_p=spike_p)
+    np.testing.assert_allclose(
+        lead_value_detect(t_e.comp_start),
+        lead_value_detect(t_b.comp_start), rtol=1e-9, atol=1e-12)
+    np.testing.assert_allclose(t_e.comp_end, t_b.comp_end,
+                               rtol=1e-9, atol=1e-12)
+
+
+def test_batched_engine_moe_blocking_identical():
+    """MoE workload: blocking all-to-alls exercise gated-compute windows."""
+    from repro.configs import get_config
+    from repro.core.workload import fsdp_llm_iteration
+
+    cfg = get_config("deepseek-v3-16b").replace(n_layers=4)
+    wl = fsdp_llm_iteration(cfg, batch=2, seq=4096, n_shards=8)
+    freq = np.linspace(1.4, 2.1, 8)
+    kw = dict(seed=7, comm_gbps=40.0)
+    t_e = C3Sim(wl, MI300X_PRESET, SimConfig(**kw), 8).run_iteration(
+        freq, engine="event")
+    t_b = C3Sim(wl, MI300X_PRESET, SimConfig(**kw), 8).run_iteration(
+        freq, engine="batched")
+    for field in ("comp_start", "comp_end", "comm_end"):
+        np.testing.assert_allclose(getattr(t_e, field), getattr(t_b, field),
+                                   rtol=1e-9, atol=1e-12, err_msg=field)
+
+
+def test_workload_arrays_cached_per_workload():
+    wl = small_workload(n_layers=4)
+    a1 = workload_arrays(wl)
+    a2 = workload_arrays(wl)
+    assert a1 is a2
+    s1 = C3Sim(wl, MI300X_PRESET, SimConfig(seed=0), 8)
+    s2 = C3Sim(wl, MI300X_PRESET, SimConfig(seed=1), 8)
+    assert s1.producers is s2.producers          # maps shared, not rebuilt

@@ -35,6 +35,7 @@ def _same_attention_path():
     set_attention_impl("chunked")
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", FAMS)
 def test_prefill_decode_matches_forward(arch):
     cfg = _nodrop(get_reduced_config(arch))

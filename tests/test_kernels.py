@@ -110,6 +110,7 @@ def test_wkv6_sweep(S, dtype):
 
 
 # -------------------------------------------------- property: random shapes
+@pytest.mark.slow
 @settings(deadline=None, max_examples=15)
 @given(S=st.integers(8, 96), D=st.sampled_from([8, 16, 32]),
        H=st.integers(1, 4))

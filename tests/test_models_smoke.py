@@ -24,6 +24,7 @@ def test_forward_shapes_and_no_nans(arch):
     assert not bool(jnp.isnan(aux))
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", list_archs())
 def test_train_step_no_nans(arch):
     from repro.parallel.fsdp import build_train_step, init_train_state

@@ -10,6 +10,9 @@ import textwrap
 
 import pytest
 
+# every case spawns a fresh interpreter and compiles jax programs
+pytestmark = pytest.mark.slow
+
 SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
 
 

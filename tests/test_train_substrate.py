@@ -107,6 +107,7 @@ def test_checkpoint_async_waits():
 
 
 # --------------------------------------------------------------- compression
+@pytest.mark.slow
 @settings(deadline=None, max_examples=40)
 @given(st.lists(st.floats(-100, 100, allow_nan=False, allow_infinity=False),
                 min_size=2, max_size=64))
