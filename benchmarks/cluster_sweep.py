@@ -1,14 +1,19 @@
-"""Cluster-scale sweep: fleet throughput vs node count and straggler
-placement, plus the hierarchical manager's recovery — the datacenter-scale
-aggregation of the paper's node-level claim.
+"""Cluster-scale sweep: fleet throughput vs node count, straggler
+placement, and parallelism topology, plus the hierarchical manager's
+recovery — the datacenter-scale aggregation of the paper's node-level claim.
 
 Rows:
   * cluster_scale_N{n}       — fleet throughput per node as the fleet grows
                                (barrier + slower inter-node all-reduce)
   * cluster_straggler_*      — healthy vs one hot GPU, by placement
+  * cluster_topology_{t}     — coupling strength per topology (dp/pp/tp)
+  * cluster_hetero           — preset-driven straggler (air-cooled node)
+  * cluster_churn            — straggler migration under cooling churn
   * cluster_fleet_manager    — FleetPowerManager recovery under a fixed
                                cluster power budget
   * c3_engine_speedup        — batched fast path vs event-loop reference
+  * cluster_vector_speedup   — vectorized all-lanes engine vs per-node
+                               batched at sweep scale
 """
 from __future__ import annotations
 
@@ -23,7 +28,7 @@ from repro.core.backends import ClusterSimBackend
 from repro.core.c3sim import SimConfig
 from repro.core.cluster import ClusterConfig, ClusterSim
 from repro.core.manager import FleetManagerConfig, run_fleet_closed_loop
-from repro.core.thermal import MI300X_PRESET
+from repro.core.thermal import ChurnEvent, ChurnModel, MI300X_PRESET
 from repro.core.workload import fsdp_llm_iteration
 
 CAP = 700.0
@@ -39,10 +44,11 @@ def _workload(n_layers: int = 8):
     return fsdp_llm_iteration(cfg, batch=2, seq=4096, n_shards=8)
 
 
-def _cluster(wl, n_nodes, boost, seed=5, straggler_node=0, caps=CAP):
+def _cluster(wl, n_nodes, boost, seed=5, straggler_node=0, caps=CAP,
+             **cc_kw):
     cl = ClusterSim(wl, MI300X_PRESET, SimConfig(seed=1, comm_gbps=40.0),
                     ClusterConfig(n_nodes=n_nodes, straggler_boost=boost,
-                                  straggler_node=straggler_node),
+                                  straggler_node=straggler_node, **cc_kw),
                     devices_per_node=8, seed=seed)
     if caps is not None:
         for n in range(n_nodes):
@@ -136,9 +142,100 @@ def engine_speedup() -> List[Row]:
              f"speedup={ev / ba:.1f}x")]
 
 
+def topology_coupling() -> List[Row]:
+    """Coupling strength per parallelism topology: one hot GPU's relative
+    fleet-throughput cost under dp / pp / tp (fast DP fabric so the
+    all-reduce constant does not drown the coupling term)."""
+    wl = _workload()
+    rows: List[Row] = []
+    gaps = {}
+    for topo in ("dp", "pp", "tp"):
+        t0 = time.perf_counter()
+        healthy = _cluster(wl, 4, boost=1.0, topology=topo,
+                           inter_node_gbps=100.0)
+        hot = _cluster(wl, 4, boost=1.28, topology=topo,
+                       inter_node_gbps=100.0)
+        # thermal settling needs the full horizon (tau >> t_iter) — cheap
+        # under the batched engine, so not trimmed in smoke mode
+        for _ in range(50):
+            healthy.step()
+            hot.step()
+        tp_h, tp_s = healthy.fleet_throughput(), hot.fleet_throughput()
+        gaps[topo] = (tp_h - tp_s) / tp_h
+        us = (time.perf_counter() - t0) * 1e6
+        rows.append((f"cluster_topology_{topo}", us,
+                     f"healthy_tput={tp_h:.4f};hot_tput={tp_s:.4f};"
+                     f"coupling={gaps[topo]:.5f}"))
+    order_ok = gaps["tp"] >= gaps["dp"] >= gaps["pp"]
+    rows.append(("cluster_topology_order", 0.0,
+                 f"tp={gaps['tp']:.5f};dp={gaps['dp']:.5f};"
+                 f"pp={gaps['pp']:.5f};tp_ge_dp_ge_pp={int(order_ok)}"))
+    return rows
+
+
+def hetero_fleet() -> List[Row]:
+    """Mixed air-/liquid-cooled fleet: the preset, not a boosted device,
+    creates the straggler."""
+    wl = _workload()
+    t0 = time.perf_counter()
+    cl = _cluster(wl, 4, boost=1.0, inter_node_gbps=100.0,
+                  node_presets=["mi300x", "mi300x-air", "mi300x", "mi300x"])
+    for _ in range(_iters(50)):
+        cl.step()
+    us = (time.perf_counter() - t0) * 1e6
+    slow = [h["slowest_node"] for h in cl.history[-10:]]
+    return [("cluster_hetero", us,
+             f"fleet_tput={cl.fleet_throughput():.4f};"
+             f"slowest_node_mode={int(np.bincount(slow).argmax())}")]
+
+
+def churn_migration() -> List[Row]:
+    """Cooling churn: a straggler emerges on node 0, then migrates to
+    node 2 when a harder degradation lands there mid-run."""
+    wl = _workload()
+    t0 = time.perf_counter()
+    probe = _cluster(wl, 4, boost=1.0, inter_node_gbps=100.0)
+    probe.step()
+    t1 = probe.history[0]["t_fleet"]
+    # churn dynamics ride the thermal time constant — full horizon always
+    iters = 80
+    churn = {0: ChurnModel(events=[ChurnEvent(0.0, 3, 1.35)]),
+             2: ChurnModel(events=[ChurnEvent(0.4 * iters * t1, 5, 1.8)])}
+    cl = _cluster(wl, 4, boost=1.0, inter_node_gbps=100.0, churn=churn)
+    for _ in range(iters):
+        cl.step()
+    us = (time.perf_counter() - t0) * 1e6
+    slow = np.array([h["slowest_node"] for h in cl.history])
+    early = int(np.bincount(slow[5:iters // 3]).argmax())
+    late = int(np.bincount(slow[-iters // 4:]).argmax())
+    return [("cluster_churn", us,
+             f"early_straggler=node{early};late_straggler=node{late};"
+             f"migrated={int(early != late)}")]
+
+
+def vector_speedup() -> List[Row]:
+    """Vectorized all-lanes cluster engine vs per-node batched runs at
+    sweep scale (the ROADMAP per-window device-loop item)."""
+    wl = _workload()
+    n_nodes = 8 if SMOKE else 16
+    reps = _iters(12)
+    out = {}
+    for engine in ("batched", "vector"):
+        cl = _cluster(wl, n_nodes, boost=1.28, engine=engine)
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            cl.step()
+        out[engine] = (time.perf_counter() - t0) / reps * 1e6
+    return [("cluster_vector_speedup", out["vector"],
+             f"nodes={n_nodes};batched_us={out['batched']:.0f};"
+             f"vector_us={out['vector']:.0f};"
+             f"speedup={out['batched'] / out['vector']:.2f}x")]
+
+
 def run() -> List[Row]:
     rows: List[Row] = []
-    for fn in (engine_speedup, scale_sweep, straggler_placement,
-               fleet_manager_recovery):
+    for fn in (engine_speedup, vector_speedup, scale_sweep,
+               straggler_placement, topology_coupling, hetero_fleet,
+               churn_migration, fleet_manager_recovery):
         rows.extend(fn())
     return rows

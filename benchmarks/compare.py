@@ -1,0 +1,90 @@
+"""Benchmark-regression gate: compare a fresh ``run.py --smoke`` CSV
+against the committed baseline (``benchmarks/BENCH_cluster.json``).
+
+The baseline pins *simulated* throughput metrics (fleet_tput and friends),
+which are deterministic given the seeds — not wall-clock timings, which
+would flake on shared CI runners.  A fresh value more than ``tolerance``
+below its baseline fails the gate; improvements pass (refresh the baseline
+when a PR intentionally moves a metric).
+
+Usage:
+  python benchmarks/run.py --smoke | tee bench.csv
+  python benchmarks/compare.py --baseline benchmarks/BENCH_cluster.json \
+      --fresh bench.csv [--write-fresh bench_metrics.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict
+
+
+def parse_bench_csv(path: str) -> Dict[str, float]:
+    """``name,us_per_call,derived`` rows -> {"name:key": value} for every
+    numeric key=value pair in the derived column (';'-separated)."""
+    metrics: Dict[str, float] = {}
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line or line.startswith("name,"):
+                continue
+            parts = line.split(",", 2)
+            if len(parts) != 3:
+                continue
+            name, _, derived = parts
+            for pair in derived.split(";"):
+                if "=" not in pair:
+                    continue
+                key, val = pair.split("=", 1)
+                try:
+                    metrics[f"{name}:{key}"] = float(val)
+                except ValueError:
+                    pass                      # non-numeric derived (labels)
+    return metrics
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", required=True,
+                    help="committed baseline JSON (BENCH_cluster.json)")
+    ap.add_argument("--fresh", required=True,
+                    help="fresh run.py CSV output to check")
+    ap.add_argument("--write-fresh", default=None,
+                    help="dump all parsed fresh metrics as JSON (artifact)")
+    args = ap.parse_args()
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    tol = float(baseline.get("tolerance", 0.20))
+    fresh = parse_bench_csv(args.fresh)
+
+    if args.write_fresh:
+        with open(args.write_fresh, "w") as f:
+            json.dump({"tolerance": tol, "metrics": fresh}, f, indent=2,
+                      sort_keys=True)
+
+    failures = []
+    for key, base in sorted(baseline["metrics"].items()):
+        if key not in fresh:
+            failures.append(f"MISSING  {key} (baseline {base:.4f})")
+            continue
+        val = fresh[key]
+        rel = (val - base) / abs(base) if base else 0.0
+        status = "REGRESSED" if rel < -tol else "ok"
+        print(f"{status:9s} {key}: fresh={val:.4f} baseline={base:.4f} "
+              f"({rel:+.1%}, tolerance -{tol:.0%})")
+        if rel < -tol:
+            failures.append(f"{key}: {val:.4f} vs {base:.4f} ({rel:+.1%})")
+    if failures:
+        print(f"\nbenchmark regression gate FAILED "
+              f"({len(failures)} metric(s)):", file=sys.stderr)
+        for f_ in failures:
+            print(f"  {f_}", file=sys.stderr)
+        sys.exit(1)
+    print(f"\nbenchmark regression gate passed "
+          f"({len(baseline['metrics'])} metrics within -{tol:.0%})")
+
+
+if __name__ == "__main__":
+    main()

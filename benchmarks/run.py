@@ -45,8 +45,14 @@ def main() -> None:
                 "fig5_thermal_profile", "fig7_lead_waves"}
         sections = [(n, fn) for n, fn in sections if n in fast]
     if args.only:
+        available = [n for n, _ in sections]
         sections = [(n, fn) for n, fn in sections
                     if n.startswith(args.only)]
+        if not sections:
+            print(f"error: --only {args.only!r} matches no benchmark "
+                  f"section; available: {', '.join(available)}",
+                  file=sys.stderr)
+            sys.exit(2)
 
     print("name,us_per_call,derived")
     failures = 0

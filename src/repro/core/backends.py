@@ -57,7 +57,7 @@ class NodeViewBackend:
         self.cluster = cluster
         self.node = node
         self.n_devices = cluster.G
-        self.tdp = cluster.preset.tdp
+        self.tdp = cluster.presets[node].tdp
 
     def run_iteration(self) -> IterationTrace:
         raise NotImplementedError(
@@ -86,11 +86,19 @@ class ClusterSimBackend:
         self.n_nodes = cluster.N
         self.n_devices = cluster.G
         self.tdp = cluster.preset.tdp
+        self.node_tdps = np.array([p.tdp for p in cluster.presets])
         self.node_views = [NodeViewBackend(cluster, n)
                            for n in range(cluster.N)]
 
     def run_iteration(self) -> List[IterationTrace]:
         return self.cluster.step()
+
+    def node_leads(self) -> Optional[np.ndarray]:
+        """Topology-defined per-node lead signal of the last fleet step:
+        barrier wait (DP), bubble time (PP), or exposed collective wait
+        (TP).  The straggling node leads by ~0 under all three."""
+        h = self.cluster.history
+        return h[-1]["lead"] if h else None
 
     def set_power_caps(self, caps: np.ndarray) -> None:
         caps = np.asarray(caps, float).reshape(self.n_nodes, self.n_devices)

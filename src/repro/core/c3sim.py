@@ -21,11 +21,11 @@ from __future__ import annotations
 
 import heapq
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
-from repro.core.thermal import DevicePreset, DeviceState, ThermalModel
+from repro.core.thermal import ChurnModel, DevicePreset, DeviceState, ThermalModel
 from repro.core.workload import Workload
 
 
@@ -40,6 +40,7 @@ class SimConfig:
     noise: float = 0.008            # per-kernel duration noise (lognormal σ)
     seed: int = 0
     engine: str = "event"           # "event" (heap reference) | "batched"
+    #                                 | "vector" (numpy, batches node groups)
 
 
 def workload_arrays(wl: Workload) -> dict:
@@ -148,6 +149,9 @@ class C3Sim:
             return self._run_batched(freq, noise_c, dur_comm)
         if engine == "event":
             return self._run_event(freq, noise_c, dur_comm)
+        if engine == "vector":
+            return vector_iteration([self], [np.asarray(freq, float)],
+                                    [(noise_c, dur_comm)])[0]
         raise ValueError(f"unknown engine {engine!r}")
 
     # ----------------------------------------------------- event (reference)
@@ -461,23 +465,198 @@ class C3Sim:
                                 np.asarray(comm_gend), busy_time)
 
 
+# --------------------------------------------------------------------------- #
+# vector engine: the batched window algorithm, numpy-vectorized over lanes
+# --------------------------------------------------------------------------- #
+def vector_iteration(sims: Sequence["C3Sim"], freqs: Sequence[np.ndarray],
+                     noises: Sequence[tuple]) -> List[IterationTrace]:
+    """Run one iteration for B node-groups in a single vectorized pass.
+
+    Every sim must share the same Workload (all devices execute the same
+    kernel schedule — true for every fleet this repo builds), but presets
+    and frequencies may differ per group (heterogeneous fleets).  Comm
+    barriers are *per group*: group b's collective j globally ends at
+    max over b's lanes only, exactly as if each group ran alone — so the
+    traces are the batched/event engine's traces, computed over B*G numpy
+    lanes instead of a Python loop per device.  This is the ROADMAP
+    "vectorize the per-window device loop" speedup: per-kernel cost is one
+    set of (B, G) array ops instead of B*G scalar loop bodies, which keeps
+    topology sweeps over 8-32 nodes tractable.
+
+    ``noises`` carries each sim's own `_draw_noise()` output so per-node
+    RNG streams stay identical to a per-node run.
+    """
+    wl = sims[0].wl
+    A = sims[0].arrays
+    cfg = sims[0].cfg
+    for s in sims[1:]:
+        if s.arrays is not A:
+            raise ValueError("vector_iteration: all sims must share one "
+                             "Workload (kernel schedules must be identical)")
+    B, G = len(sims), sims[0].G
+    Kc, Km = len(wl.comp), len(wl.comm)
+    k_wait = A["wait"]                               # (Kc,)
+    cprod = A["cprod"]                               # (Km,)
+
+    rate_f = np.empty((B, G))
+    rm = np.empty((B, 1))
+    for b, (s, f) in enumerate(zip(sims, freqs)):
+        p = s.preset
+        rate_f[b] = p.peak_gflops * cfg.gemm_eff * (np.asarray(f) / p.f_max)
+        rm[b, 0] = p.hbm_gbps
+    rate_f_s = rate_f / (1 + cfg.kappa_comp)
+    rm_s = rm / (1 + cfg.kappa_mem)
+
+    noise_c = np.stack([n for n, _ in noises])       # (B, G, Kc)
+    dur_comm = np.stack([d for _, d in noises])      # (B, Km)
+    work_f = A["gflop"][None, None, :] * noise_c
+    work_b = A["gbyte"][None, None, :] * noise_c
+
+    comp_start = np.full((B, G, Kc), np.nan)
+    comp_end = np.full((B, G, Kc), np.nan)
+    comp_ovl = np.zeros((B, G, Kc))
+    comm_lstart = np.full((B, G, Km), np.nan)
+    comm_gend = np.full((B, Km), np.nan)
+    busy = np.zeros((B, G))
+
+    t = np.zeros((B, G))
+    ci = np.zeros((B, G), int)                       # compute cursor per lane
+    started = np.zeros((B, G), bool)
+    gfr = np.zeros((B, G))                           # in-flight residues
+    gbr = np.zeros((B, G))
+
+    def advance_full(until: int, need: np.ndarray,
+                     allow_gate_stall: bool = False) -> None:
+        """Complete kernels up to `until` at full rate on `need` lanes
+        (batched engine's target mode).  `allow_gate_stall` is the drain
+        semantics: a lane hitting an unopened gate stops instead of
+        raising (its remaining kernels never ran)."""
+        live = need.copy()
+        while True:
+            active = live & (ci <= until)
+            if not active.any():
+                return
+            i = int(ci[active].min())
+            m = active & (ci == i)
+            ns = m & ~started
+            if ns.any():
+                w = int(k_wait[i])
+                if w >= 0:
+                    ge = comm_gend[:, w][:, None]    # (B, 1) broadcast
+                    stalled = ns & np.isnan(ge)
+                    if stalled.any():
+                        if not allow_gate_stall:
+                            raise RuntimeError(
+                                "C3Sim[vector]: deadlock — producer kernel "
+                                "gated on an unfinished comm")
+                        live &= ~stalled
+                        ns &= ~stalled
+                        m &= ~stalled
+                    t[ns] = np.maximum(t, np.broadcast_to(ge, t.shape))[ns]
+                comp_start[:, :, i][ns] = t[ns]
+                gfr[ns] = work_f[:, :, i][ns]
+                gbr[ns] = work_b[:, :, i][ns]
+                started[ns] = True
+            if m.any():
+                dt = gfr / rate_f + gbr / rm
+                t[m] = (t + dt)[m]
+                comp_end[:, :, i][m] = t[m]
+                busy[m] += (t - comp_start[:, :, i])[m]
+                started[m] = False
+                ci[m] = i + 1
+
+    def advance_window(t_stop: np.ndarray) -> None:
+        """Advance every lane, slowed, to its group's window end `t_stop`
+        (B,), with partial progress on the in-flight kernel (batched
+        engine's window mode)."""
+        ts = t_stop[:, None]                         # (B, 1)
+        done = np.zeros((B, G), bool)
+        while True:
+            active = ~done & (ci < Kc)
+            if not active.any():
+                break
+            i = int(ci[active].min())
+            m = active & (ci == i)
+            ns = m & ~started
+            if ns.any():
+                w = int(k_wait[i])
+                if w >= 0:
+                    ge = np.broadcast_to(comm_gend[:, w][:, None], t.shape)
+                    closed = ns & (np.isnan(ge) | (ge >= ts))
+                    done |= closed
+                    ns &= ~closed
+                    m &= ~closed
+                    t[ns] = np.maximum(t, ge)[ns]
+                comp_start[:, :, i][ns] = t[ns]
+                gfr[ns] = work_f[:, :, i][ns]
+                gbr[ns] = work_b[:, :, i][ns]
+                started[ns] = True
+            if m.any():
+                dt = gfr / rate_f_s + gbr / rm_s
+                fits = m & (t + dt <= ts)
+                if fits.any():
+                    comp_ovl[:, :, i][fits] += dt[fits]
+                    t[fits] = (t + dt)[fits]
+                    comp_end[:, :, i][fits] = t[fits]
+                    busy[fits] += (t - comp_start[:, :, i])[fits]
+                    started[fits] = False
+                    ci[fits] = i + 1
+                part = m & ~fits
+                if part.any():
+                    avail = np.broadcast_to(ts, t.shape) - t
+                    pp = part & (avail > 0)
+                    if pp.any():
+                        comp_ovl[:, :, i][pp] += avail[pp]
+                        use = np.minimum(avail, gfr / rate_f_s)
+                        gfr[pp] = (gfr - use * rate_f_s)[pp]
+                        gbr[pp] = np.maximum(
+                            0.0, gbr - (avail - use) * rm_s)[pp]
+                    done |= part
+        t[:, :] = ts                                 # all lanes end at stop
+
+    prev_end = np.zeros(B)
+    for j in range(Km):
+        prod = int(cprod[j])
+        if prod >= 0:
+            need = np.isnan(comp_end[:, :, prod])
+            if need.any():
+                advance_full(prod, need)
+            arr = np.where(need, comp_end[:, :, prod], prev_end[:, None])
+        else:
+            arr = np.broadcast_to(prev_end[:, None], (B, G)).copy()
+        comm_lstart[:, :, j] = arr
+        prev_end = arr.max(axis=1) + dur_comm[:, j]
+        comm_gend[:, j] = prev_end
+        advance_window(prev_end)
+    advance_full(Kc - 1, ci < Kc, allow_gate_stall=True)   # drain
+
+    return [sims[b]._make_trace(comp_start[b], comp_end[b], comp_ovl[b],
+                                comm_lstart[b], comm_gend[b], busy[b])
+            for b in range(B)]
+
+
 class NodeSim:
     """Closed-loop node: C3 execution × thermal/DVFS physics per iteration."""
 
     def __init__(self, workload: Workload, preset: DevicePreset,
                  sim_cfg: SimConfig, n_devices: int = 8, seed: int = 0,
-                 straggler_boost: float = 1.28):
+                 straggler_boost: float = 1.28,
+                 churn: Optional[ChurnModel] = None):
         self.thermal = ThermalModel(preset, n_devices, seed=seed,
-                                    straggler_boost=straggler_boost)
+                                    straggler_boost=straggler_boost,
+                                    churn=churn)
         self.sim = C3Sim(workload, preset, sim_cfg, n_devices)
         self.state = self.thermal.init_state()
         self.G = n_devices
+        self.preset = preset
         self.history: List[dict] = []
         self.iteration = 0
         # warm up thermals: a few iterations to reach operating temperature
         for _ in range(30):
             self.step()
         self.history.clear()
+        # churn clocks start at operational time zero, post warm-up
+        self.thermal.t_sim = 0.0
 
     def set_power_caps(self, caps: np.ndarray) -> None:
         self.state.cap = np.asarray(caps, float).copy()
@@ -490,13 +669,20 @@ class NodeSim:
         return self.sim.run_iteration(self._freq_used)
 
     def commit(self, trace: IterationTrace,
-               t_interval: Optional[float] = None) -> None:
+               t_interval: Optional[float] = None,
+               active_wait: bool = False) -> None:
         """Thermal/DVFS update over `t_interval` (default: local t_iter).
         When the node is barrier-bound by a slower peer, its devices idle
         for t_interval - t_iter, lowering utilization (and so power) over
-        the stretched interval."""
+        the stretched interval.  Under `active_wait` (tensor parallelism)
+        the wait happens *inside* collective kernels that keep the device
+        near peak power — utilization stays high over the whole interval,
+        so waiting on a straggler heats the waiters (paper §II-B)."""
         t = trace.t_iter if t_interval is None else t_interval
-        util = trace.util * (trace.t_iter / t)
+        if active_wait:
+            util = (trace.util * trace.t_iter + (t - trace.t_iter)) / t
+        else:
+            util = trace.util * (trace.t_iter / t)
         self.thermal.update(self.state, util, t)
         self.history.append({
             "iter": self.iteration,

@@ -1,56 +1,77 @@
-"""Cluster-scale Lit Silicon: N thermally-independent nodes coupled by
-data parallelism.
+"""Cluster-scale Lit Silicon: N thermally-independent nodes coupled by a
+parallelism topology.
 
 Each node runs the paper's intra-node C3/thermal dynamics (`NodeSim`).
-Across nodes, data parallelism adds a per-iteration gradient all-reduce over
-the (much slower) inter-node fabric plus a global barrier: the fleet
-iteration time is the *slowest* node's local time plus the ring all-reduce.
-A single hot GPU on one node therefore straggles every node in the fleet —
-the aggregation step that turns the paper's node-level observation into the
-datacenter-scale cost claim ("Not All GPUs Are Created Equal" measures the
-same compounding on real fleets).
+Across nodes, the `Topology` (topology.py) maps the per-node local
+iteration times plus a link model onto the fleet iteration time and per-node
+lead signals: data parallelism adds a gradient ring all-reduce over the
+slower inter-node fabric plus a global barrier (the paper's case — one hot
+GPU straggles every node in the fleet); pipeline parallelism couples stages
+point-to-point so a hot stage only bubbles the pipeline; tensor parallelism
+syncs every layer on the fast link so waits happen inside collectives at
+near-peak power.
 
-Thermal feedback is barrier-aware: nodes that finish early idle at the
-barrier, so their devices run at lower average utilization over the
-stretched interval, draw less power, and cool — which is exactly the wasted
-provisioned power the FleetPowerManager reallocates toward the straggler.
+Thermal feedback is wait-aware: under barrier/bubble topologies, nodes that
+finish early idle and cool — the wasted provisioned power the
+FleetPowerManager reallocates toward the straggler.  Under tensor
+parallelism the waiters stay hot inside collective kernels and throttle
+toward the straggler (tighter coupling).
+
+Fleets may be heterogeneous (per-node `DevicePreset`, e.g. mixed air- and
+liquid-cooled chassis) and may churn (per-node `ChurnModel` degrading
+cooling over simulated time so stragglers emerge and migrate mid-run).
 """
 from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass
-from typing import List, Optional
+from typing import Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
-from repro.core.c3sim import IterationTrace, NodeSim, SimConfig
-from repro.core.thermal import DevicePreset
+from repro.core.c3sim import (IterationTrace, NodeSim, SimConfig,
+                              vector_iteration)
+from repro.core.thermal import PRESETS, ChurnModel, DevicePreset
+from repro.core.topology import Topology, make_topology, ring_allreduce_time
 from repro.core.workload import Workload
+
+__all__ = ["ClusterConfig", "ClusterSim", "ring_allreduce_time"]
 
 
 @dataclass
 class ClusterConfig:
     n_nodes: int = 4
-    inter_node_gbps: float = 12.5     # per-device effective DP-fabric GB/s
-    grad_bytes: Optional[float] = None  # all-reduce payload per device;
+    inter_node_gbps: float = 12.5     # per-device effective inter-node GB/s
+    grad_bytes: Optional[float] = None  # DP all-reduce payload per device;
     #                                     default: sum of the workload's
     #                                     gradient reduce-scatter payloads
     straggler_node: int = 0           # node hosting the hot GPU
     straggler_boost: float = 1.28     # r_th multiplier for that GPU
     healthy_boost: float = 1.0        # boost on every other node's worst slot
-    engine: str = "batched"           # C3Sim engine for node iterations
-
-
-def ring_allreduce_time(payload_bytes: float, n_nodes: int,
-                        gbps: float) -> float:
-    """Bandwidth term of a ring all-reduce: 2(N-1)/N chunks over the link."""
-    if n_nodes <= 1 or payload_bytes <= 0:
-        return 0.0
-    return 2.0 * (n_nodes - 1) / n_nodes * payload_bytes / (gbps * 1e9)
+    engine: str = "batched"           # C3Sim engine for node iterations:
+    #                                   "batched" | "event" | "vector"
+    #                                   (vector batches all nodes per step)
+    # ---------------------------------------------------------- topology
+    topology: str = "dp"              # dp | pp | tp (see topology.py)
+    microbatches: int = 8             # PP: microbatches per iteration
+    act_bytes: Optional[float] = None  # PP p2p / TP sync payload override;
+    #                                    default: Workload.act_bytes
+    tp_gbps: float = 300.0            # TP collectives ride the fast link
+    tp_bytes: Optional[float] = None  # TP per-sync payload override
+    tp_syncs: Optional[int] = None    # TP sync points; default 2 per layer
+    tp_jitter: float = 0.01           # TP per-segment lognormal sigma
+    tp_skew_cost: float = 1.0         # ring-collective stretch per unit of
+    #                                   arrival skew at each sync point
+    # ------------------------------------------------- fleet heterogeneity
+    node_presets: Optional[Sequence[Union[str, DevicePreset]]] = None
+    # per-node DevicePreset (or PRESETS name); default: the ClusterSim
+    # `preset` argument on every node (homogeneous fleet)
+    churn: Optional[Dict[int, ChurnModel]] = None
+    # node index -> cooling-churn model for that node's devices
 
 
 class ClusterSim:
-    """N `NodeSim`s under data parallelism with a global iteration barrier."""
+    """N `NodeSim`s coupled by a parallelism `Topology`."""
 
     def __init__(self, workload: Workload, preset: DevicePreset,
                  sim_cfg: SimConfig, cluster_cfg: ClusterConfig,
@@ -59,17 +80,20 @@ class ClusterSim:
         self.cfg = cc
         self.N = cc.n_nodes
         self.G = devices_per_node
-        self.preset = preset
-        node_sim_cfg = dataclasses.replace(sim_cfg, engine=cc.engine)
+        self.presets: List[DevicePreset] = self._resolve_presets(preset)
+        self.preset = self.presets[0]
+        node_engine = "batched" if cc.engine == "vector" else cc.engine
+        node_sim_cfg = dataclasses.replace(sim_cfg, engine=node_engine)
+        churn = cc.churn or {}
         self.nodes: List[NodeSim] = []
         for n in range(self.N):
             boost = (cc.straggler_boost if n == cc.straggler_node
                      else cc.healthy_boost)
             self.nodes.append(NodeSim(
-                workload, preset,
+                workload, self.presets[n],
                 dataclasses.replace(node_sim_cfg, seed=sim_cfg.seed + n),
                 n_devices=devices_per_node, seed=seed + 7919 * n,
-                straggler_boost=boost))
+                straggler_boost=boost, churn=churn.get(n)))
         grad = cc.grad_bytes
         if grad is None:
             grad = sum(c.bytes for c in workload.comm
@@ -77,11 +101,23 @@ class ClusterSim:
             if grad <= 0:
                 grad = workload.total_bytes / 3.0
         self.grad_bytes = float(grad)
+        self.topology: Topology = make_topology(
+            cc, self.N, workload, self.grad_bytes, seed=seed)
         self.history: List[dict] = []
         self.iteration = 0
 
+    def _resolve_presets(self, preset: DevicePreset) -> List[DevicePreset]:
+        np_cfg = self.cfg.node_presets
+        if np_cfg is None:
+            return [preset] * self.N
+        if len(np_cfg) != self.N:
+            raise ValueError(f"node_presets has {len(np_cfg)} entries for "
+                             f"{self.N} nodes")
+        return [PRESETS[p] if isinstance(p, str) else p for p in np_cfg]
+
     # ------------------------------------------------------------------ api
     def allreduce_time(self) -> float:
+        """DP gradient ring all-reduce time (informational for pp/tp)."""
         return ring_allreduce_time(self.grad_bytes, self.N,
                                    self.cfg.inter_node_gbps)
 
@@ -91,14 +127,30 @@ class ClusterSim:
     def get_node_caps(self, node: int) -> np.ndarray:
         return self.nodes[node].state.cap.copy()
 
+    def _run_nodes(self) -> List[IterationTrace]:
+        if self.cfg.engine == "vector" and self.N > 1:
+            # one vectorized pass over all N*G lanes; per-node RNG streams
+            # are drawn exactly as a per-node run would
+            freqs, noises = [], []
+            for node in self.nodes:
+                node._freq_used = node.state.freq.copy()
+                freqs.append(node._freq_used)
+                noises.append(node.sim._draw_noise())
+            return vector_iteration([n.sim for n in self.nodes],
+                                    freqs, noises)
+        return [node.run_only() for node in self.nodes]
+
     def step(self) -> List[IterationTrace]:
-        """One data-parallel iteration: all nodes execute, then the gradient
-        all-reduce and global barrier stretch everyone to the slowest."""
-        traces = [node.run_only() for node in self.nodes]
+        """One coupled iteration: all nodes execute locally, then the
+        topology resolves the fleet time and per-node lead signals, and
+        every node commits thermals over the stretched interval."""
+        traces = self._run_nodes()
         t_local = np.array([tr.t_iter for tr in traces])
-        t_fleet = float(t_local.max()) + self.allreduce_time()
+        fs = self.topology.step(t_local)
+        t_fleet = fs.t_fleet
         for node, tr in zip(self.nodes, traces):
-            node.commit(tr, t_interval=t_fleet)
+            node.commit(tr, t_interval=t_fleet,
+                        active_wait=self.topology.wait_active)
         power = np.array([float(np.sum(n.state.power)) for n in self.nodes])
         self.history.append({
             "iter": self.iteration,
@@ -108,6 +160,9 @@ class ClusterSim:
             "node_power": power,
             "power": float(power.sum()),
             "slowest_node": int(np.argmax(t_local)),
+            "lead": fs.lead,
+            "comm_time": fs.comm_time,
+            "topology": self.topology.name,
         })
         self.iteration += 1
         return traces

@@ -147,20 +147,26 @@ class FleetManagerConfig(ManagerConfig):
 
 
 class FleetPowerManager:
-    """Hierarchical Lit Silicon control for an N-node data-parallel fleet.
+    """Hierarchical Lit Silicon control for an N-node fleet.
 
     Two nested instances of the paper's detect→mitigate loop:
 
       * per node, an unmodified `PowerManager` runs Algorithms 1-3 over that
         node's kernel-start traces, within the node's current power budget;
-      * across nodes, the *same* Algorithms 2+3 run at node granularity —
-        a node's "lead" is its barrier wait (t_slowest - t_local), the
-        straggling node has lead ~0 and receives budget sloshed from the
-        nodes that idle at the barrier, projected onto the cluster budget.
+      * across nodes, the *same* Algorithms 2+3 run at node granularity over
+        the **topology-defined lead signal** (`ClusterSimBackend.node_leads`):
+        barrier wait under data parallelism, bubble time under pipeline
+        parallelism, exposed collective wait under tensor parallelism.  The
+        straggling node has lead ~0 under all three and receives budget
+        sloshed from the waiting nodes, projected onto the cluster budget.
 
-    The node-level loop needs only one scalar per node per sample (its local
-    iteration time), i.e. the same O(small allgather) telemetry cost the
-    paper's §VIII-B deployment sketch budgets for.
+    Heterogeneous fleets are supported: per-node TDPs (mixed presets) bound
+    each node's budget and floor individually; the initial budget split is
+    proportional to each node's provisioned cap.
+
+    The node-level loop needs only one scalar per node per sample, i.e. the
+    same O(small allgather) telemetry cost the paper's §VIII-B deployment
+    sketch budgets for.
     """
 
     def __init__(self, backend, cfg: FleetManagerConfig):
@@ -172,18 +178,24 @@ class FleetPowerManager:
         self.N = backend.n_nodes
         self.G = backend.n_devices
         self.tdp = backend.tdp
-        per_node_cap = cfg.node_cap(self.G, self.tdp)
+        self.node_tdps = np.asarray(
+            getattr(backend, "node_tdps", np.full(self.N, self.tdp)), float)
+        per_node_caps = np.array([cfg.node_cap(self.G, t)
+                                  for t in self.node_tdps])
         self.cluster_budget = (cfg.cluster_power_budget
                                if cfg.cluster_power_budget is not None
-                               else self.N * per_node_cap)
-        self.node_budgets = np.full(self.N, self.cluster_budget / self.N)
+                               else float(per_node_caps.sum()))
+        # initial split proportional to each node's provisioned cap
+        # (uniform when the fleet is homogeneous)
+        self.node_budgets = (per_node_caps * self.cluster_budget
+                             / per_node_caps.sum())
         self.node_cfgs = [dataclasses.replace(
             cfg, node_cap_override=float(b)) for b in self.node_budgets]
         self.managers = [PowerManager(v, c) for v, c in
                          zip(backend.node_views, self.node_cfgs)]
         self.node_global_max = 0.0
         self.samples_seen = 0
-        self.t_local_window: List[np.ndarray] = []
+        self.lead_window: List[np.ndarray] = []
         self.budget_log: List[np.ndarray] = []
 
     # ----------------------------------------------------------------- hook
@@ -195,27 +207,42 @@ class FleetPowerManager:
             mgr.on_iteration(iteration, tr)
         if iteration % self.cfg.sampling_period:
             return
-        t_local = np.array([tr.t_iter for tr in traces])
+        lead = None
+        if hasattr(self.backend, "node_leads"):
+            lead = self.backend.node_leads()
+        if lead is None:       # non-topology backend: barrier-wait fallback
+            t_local = np.array([tr.t_iter for tr in traces])
+            lead = t_local.max() - t_local
         self.samples_seen += 1
         if self.samples_seen <= self.cfg.warmup:
             return
-        self.t_local_window.append(t_local)
-        if len(self.t_local_window) < self.cfg.node_window_size:
+        self.lead_window.append(np.asarray(lead, float))
+        if len(self.lead_window) < self.cfg.node_window_size:
             return
-        t_avg = np.mean(self.t_local_window, axis=0)
-        self.t_local_window.clear()
-        self.adjust_node_budgets(t_avg)
+        lead_avg = np.mean(self.lead_window, axis=0)
+        self.lead_window.clear()
+        self._adjust_from_lead(lead_avg)
 
     def adjust_node_budgets(self, t_local: np.ndarray) -> np.ndarray:
-        """Algorithms 2+3 at node granularity: barrier wait is the lead."""
-        lead = t_local.max() - t_local         # slowest node leads by 0
+        """Direct-drive entry point from per-node iteration times: the
+        barrier-wait lead (data-parallel semantics).  The closed loop goes
+        through `_adjust_from_lead` with the topology's own signal."""
+        t_local = np.asarray(t_local, float)
+        return self._adjust_from_lead(t_local.max() - t_local)
+
+    def _adjust_from_lead(self, lead: np.ndarray) -> np.ndarray:
+        """Algorithms 2+3 at node granularity over the lead signal
+        (the straggling node leads by ~0)."""
         inc, self.node_global_max = inc_power_gpu(
             lead, self.cfg.max_node_adjustment, self.node_global_max,
             self.cfg.node_scale)
         budgets = adj_power_node(inc, self.node_budgets,
-                                 tdp=self.G * self.tdp,
+                                 tdp=self.G * float(self.node_tdps.max()),
                                  node_cap=self.cluster_budget)
-        floor = self.G * self.tdp * 0.25
+        # heterogeneous fleets: each node is individually bound by its own
+        # provisioned silicon (no-op when all presets match)
+        budgets = np.minimum(budgets, self.G * self.node_tdps)
+        floor = self.G * self.node_tdps * 0.25
         budgets = np.maximum(budgets, floor)
         # flooring after the projection can overshoot the cluster budget:
         # claw the excess back from nodes with headroom above the floor

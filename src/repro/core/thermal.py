@@ -13,7 +13,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Optional
+from typing import List, Optional
 
 import numpy as np
 
@@ -53,7 +53,57 @@ V5E_PRESET = DevicePreset(
 
 MI300X_PRESET = DevicePreset()
 
-PRESETS = {"mi300x": MI300X_PRESET, "v5e": V5E_PRESET}
+
+def derated_preset(preset: DevicePreset, r_th_factor: float,
+                   suffix: str = "-air") -> DevicePreset:
+    """A cooling-derated variant of ``preset``: same silicon, worse heat
+    path (air-cooled chassis vs liquid, clogged filters, bad slot).  The
+    Cooling Matters setup mixes exactly such nodes in one fleet."""
+    return dataclasses.replace(preset, name=preset.name + suffix,
+                               r_th_mean=preset.r_th_mean * r_th_factor)
+
+
+MI300X_AIR_PRESET = derated_preset(MI300X_PRESET, 1.22)
+
+PRESETS = {"mi300x": MI300X_PRESET, "v5e": V5E_PRESET,
+           "mi300x-air": MI300X_AIR_PRESET}
+
+
+# --------------------------------------------------------------------------- #
+# Cooling churn: degradation over simulated operating time
+# --------------------------------------------------------------------------- #
+@dataclass
+class ChurnEvent:
+    """From simulated second ``t`` on, device ``device``'s thermal
+    resistance is multiplied by ``factor`` (>1 degrades, <1 is a fan swap /
+    filter clean).  Events compose multiplicatively."""
+
+    t: float
+    device: int
+    factor: float
+
+
+@dataclass
+class ChurnModel:
+    """Cooling efficiency drift over simulated time.
+
+    "Not All GPUs Are Created Equal" observes fleets degrading
+    heterogeneously over months: dust, fan wear, thermal-paste pump-out.
+    ``drift_rate`` applies a uniform fractional r_th growth per simulated
+    hour; ``events`` schedule discrete per-device changes, so a straggler
+    can *emerge* mid-run and *migrate* (degrade device A, later repair A /
+    degrade B harder).
+    """
+
+    drift_rate: float = 0.0                 # fractional r_th growth / hour
+    events: List[ChurnEvent] = field(default_factory=list)
+
+    def multipliers(self, t: float, n_devices: int) -> np.ndarray:
+        m = np.full(n_devices, 1.0 + self.drift_rate * t / 3600.0)
+        for ev in self.events:
+            if t >= ev.t:
+                m[ev.device] *= ev.factor
+        return m
 
 
 @dataclass
@@ -68,9 +118,12 @@ class ThermalModel:
     """Vectorized physics for G devices."""
 
     def __init__(self, preset: DevicePreset, n_devices: int, seed: int = 0,
-                 straggler_boost: float = 1.28):
+                 straggler_boost: float = 1.28,
+                 churn: Optional[ChurnModel] = None):
         self.preset = preset
         self.G = n_devices
+        self.churn = churn
+        self.t_sim = 0.0                 # simulated operating time (churn)
         rng = np.random.default_rng(seed)
         # cooling heterogeneity: smooth spread + one notably worse slot
         # (paper Fig 7 top node: a single persistent straggler; §VIII-C:
@@ -125,11 +178,18 @@ class ThermalModel:
                 + self.m_eff(state.temp) * state.freq * u_pow)
         return np.minimum(draw, state.cap)
 
+    def effective_r_th(self) -> np.ndarray:
+        """Per-device thermal resistance at the current simulated time —
+        the static spread plus any churn degradation accrued so far."""
+        if self.churn is None:
+            return self.r_th
+        return self.r_th * self.churn.multipliers(self.t_sim, self.G)
+
     def step_thermal(self, state: DeviceState, power: np.ndarray,
                      dt: float) -> None:
         """First-order RC: dT/dt = (T_amb + R*P - T) / tau."""
         p = self.preset
-        t_ss = p.t_amb + self.r_th * power
+        t_ss = p.t_amb + self.effective_r_th() * power
         a = 1.0 - np.exp(-dt / p.tau)
         state.temp = state.temp + a * (t_ss - state.temp)
         state.power = power
@@ -140,3 +200,4 @@ class ThermalModel:
         power = self.power_draw(state, util)
         self.step_thermal(state, power, dt)
         state.freq = self.governor_freq(state)
+        self.t_sim += dt

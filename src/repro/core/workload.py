@@ -40,6 +40,11 @@ class Workload:
     comp: List[CompKernel]
     comm: List[CommKernel]
     name: str = ""
+    act_bytes: float = 0.0             # per-boundary activation payload —
+    #                                    the PP point-to-point / TP per-sync
+    #                                    link-model default (topology.py)
+    n_layers: int = 0                  # layers represented; TP defaults to
+    #                                    2 sync points per layer (AG + RS)
 
     @property
     def total_gflop(self) -> float:
@@ -144,4 +149,5 @@ def fsdp_llm_iteration(cfg: ModelConfig, *, batch: int = 2,
     # optimizer step after the last reduce-scatter
     comp.append(CompKernel("opt_step", gbyte=3 * layer_bytes * L / n_shards
                            / 1e9, wait_comm=len(comm) - 1))
-    return Workload(comp, comm, name=f"{cfg.name}-b{batch}s{seq // 1024}k")
+    return Workload(comp, comm, name=f"{cfg.name}-b{batch}s{seq // 1024}k",
+                    act_bytes=float(T * d * dtype_bytes), n_layers=L)

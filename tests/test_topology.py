@@ -1,0 +1,365 @@
+"""Parallelism topologies: DP/PP/TP coupling structure, heterogeneous
+fleets, cooling churn, and the vectorized cluster engine.
+
+Acceptance (ISSUE 3): for each of DP/PP/TP — (a) one hot GPU measurably
+stretches fleet iteration time, (b) coupling strength orders TP >= DP >= PP
+for the same workload, (c) `FleetPowerManager` recovers >= 50% of the
+straggler gap; plus edge cases (1-node cluster, PP depth 1 == DP without
+all-reduce, preset-driven straggler, churn-driven straggler migration) and
+the vector engine's trace identity with the event reference.
+"""
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from conftest import small_workload
+from repro.core.backends import ClusterSimBackend
+from repro.core.c3sim import C3Sim, SimConfig
+from repro.core.cluster import ClusterConfig, ClusterSim
+from repro.core.manager import FleetManagerConfig, run_fleet_closed_loop
+from repro.core.thermal import (MI300X_PRESET, ChurnEvent, ChurnModel,
+                                PRESETS, ThermalModel, derated_preset)
+from repro.core.topology import (DataParallel, PipelineParallel,
+                                 TensorParallel, make_topology)
+
+CAP = 700.0
+N_NODES = 4
+TOPOLOGIES = ("dp", "pp", "tp")
+
+
+def make_cluster(topo, boost, seed=5, n_nodes=N_NODES, caps=CAP, **cc_kw):
+    """Fleet over a fast-ish DP fabric so the all-reduce constant does not
+    drown the coupling term (the quantity under test)."""
+    wl = small_workload(n_layers=8)
+    cc_kw.setdefault("inter_node_gbps", 100.0)
+    cl = ClusterSim(wl, MI300X_PRESET, SimConfig(seed=1, comm_gbps=40.0),
+                    ClusterConfig(n_nodes=n_nodes, straggler_boost=boost,
+                                  topology=topo, **cc_kw),
+                    devices_per_node=8, seed=seed)
+    if caps is not None:
+        for n in range(n_nodes):
+            cl.set_node_caps(n, np.full(8, float(caps)))
+    return cl
+
+
+@pytest.fixture(scope="module")
+def topo_fleets():
+    """Per topology: (healthy, straggler-unmanaged, straggler-managed)."""
+    out = {}
+    for topo in TOPOLOGIES:
+        healthy = make_cluster(topo, 1.0)
+        strag = make_cluster(topo, 1.28)
+        for _ in range(60):
+            healthy.step()
+            strag.step()
+        managed = make_cluster(topo, 1.28)
+        mgr = run_fleet_closed_loop(
+            ClusterSimBackend(managed),
+            FleetManagerConfig(use_case="gpu-realloc", sampling_period=2,
+                               warmup=2, window_size=2, node_window_size=2,
+                               power_cap=CAP,
+                               cluster_power_budget=N_NODES * 8 * CAP),
+            120, tune_after=20)
+        out[topo] = (healthy, strag, managed, mgr)
+    return out
+
+
+# ----------------------------------------------------------- DP invariants
+def test_dp_preserves_barrier_allreduce_arithmetic():
+    """The refactor routes DP through `Topology` but the arithmetic is the
+    original ClusterSim's, bit for bit."""
+    cl = make_cluster("dp", 1.28, caps=None, inter_node_gbps=12.5)
+    cl.step()
+    h = cl.history[-1]
+    assert h["t_fleet"] == float(h["t_local"].max()) + cl.allreduce_time()
+    np.testing.assert_array_equal(h["lead"], h["t_local"].max() - h["t_local"])
+    assert h["topology"] == "dp"
+    assert not cl.topology.wait_active          # barrier waits idle and cool
+
+
+# --------------------------------------------------------------- edge cases
+@pytest.mark.parametrize("topo", TOPOLOGIES)
+def test_single_node_cluster_is_uncoupled(topo):
+    cl = make_cluster(topo, 1.28, n_nodes=1, caps=None)
+    cl.step()
+    h = cl.history[-1]
+    # no peers: fleet time is the node's own time (TP comm is 0 at N=1)
+    assert h["t_fleet"] == pytest.approx(float(h["t_local"].max()))
+    np.testing.assert_allclose(h["lead"], 0.0, atol=1e-12)
+
+
+def test_pp_depth_1_equals_dp_without_allreduce():
+    """A 1-stage pipeline is just the node itself — identical, step for
+    step, to data parallelism with no gradient all-reduce."""
+    pp = make_cluster("pp", 1.28, n_nodes=1, caps=None)
+    dp = make_cluster("dp", 1.28, n_nodes=1, caps=None)
+    assert dp.allreduce_time() == 0.0
+    for _ in range(5):
+        pp.step()
+        dp.step()
+    t_pp = [h["t_fleet"] for h in pp.history]
+    t_dp = [h["t_fleet"] for h in dp.history]
+    np.testing.assert_allclose(t_pp, t_dp, rtol=1e-12)
+
+
+def test_pp_fleet_time_bounds():
+    """Pipeline fleet time is at least the slowest stage (throughput bound)
+    and carries the fill/drain bubble on top."""
+    cl = make_cluster("pp", 1.28)
+    cl.step()
+    h = cl.history[-1]
+    assert h["t_fleet"] >= h["t_local"].max()
+    assert (h["lead"] >= 0).all()
+    # the straggling stage has the least bubble
+    assert int(np.argmin(h["lead"])) == int(np.argmax(h["t_local"]))
+
+
+def test_tp_exposes_skew_and_waits_active():
+    cl = make_cluster("tp", 1.28)
+    cl.step()
+    h = cl.history[-1]
+    assert cl.topology.wait_active              # waits burn near-peak power
+    assert h["t_fleet"] >= h["t_local"].max()
+    assert (h["lead"] >= -1e-12).all()
+    assert int(np.argmin(h["lead"])) == int(np.argmax(h["t_local"]))
+
+
+def test_make_topology_rejects_unknown():
+    wl = small_workload(n_layers=4)
+    with pytest.raises(ValueError):
+        make_topology(ClusterConfig(topology="ring-of-fire"), 4, wl, 1e9)
+
+
+def test_topology_classes_direct():
+    dp = DataParallel(4, grad_bytes=1e9, gbps=100.0)
+    pp = PipelineParallel(4, act_bytes=1e8, gbps=100.0, microbatches=8)
+    tp = TensorParallel(4, sync_bytes=1e8, gbps=300.0, n_syncs=16,
+                        jitter=0.0)
+    t_local = np.array([1.1, 1.0, 1.0, 1.0])
+    s_dp, s_pp, s_tp = dp.step(t_local), pp.step(t_local), tp.step(t_local)
+    assert s_dp.t_fleet == pytest.approx(1.1 + dp.comm_time())
+    # PP: sum/M + (M-1)/M * max + fill/drain p2p
+    assert s_pp.t_fleet == pytest.approx(4.1 / 8 + 7 / 8 * 1.1
+                                         + pp.comm_time())
+    # TP, jitter 0: max + skew_cost * (max - min) + per-layer collectives
+    assert s_tp.t_fleet == pytest.approx(1.1 + 0.1 + tp.comm_time())
+    for s in (s_dp, s_pp, s_tp):
+        assert int(np.argmin(s.lead)) == 0      # straggler leads by ~0
+
+
+# ------------------------------------------------- the paper's claim, per topo
+@pytest.mark.parametrize("topo", TOPOLOGIES)
+def test_hot_gpu_stretches_fleet(topo, topo_fleets):
+    healthy, strag, _, _ = topo_fleets[topo]
+    tp_h, tp_s = healthy.fleet_throughput(), strag.fleet_throughput()
+    assert (tp_h - tp_s) / tp_h > 0.002         # (a) measurable stretch
+    slowest = [h["slowest_node"] for h in strag.history[-20:]]
+    assert np.mean(np.array(slowest) == 0) > 0.8
+
+
+def test_coupling_strength_orders_tp_dp_pp(topo_fleets):
+    """(b) per-layer sync on the fast link couples tighter than the global
+    barrier, which upper-bounds the pipeline's point-to-point bubbles."""
+    coupling = {}
+    for topo in TOPOLOGIES:
+        healthy, strag, _, _ = topo_fleets[topo]
+        tp_h, tp_s = healthy.fleet_throughput(), strag.fleet_throughput()
+        coupling[topo] = (tp_h - tp_s) / tp_h
+    assert coupling["tp"] >= coupling["dp"] >= coupling["pp"]
+
+
+@pytest.mark.parametrize("topo", TOPOLOGIES)
+def test_fleet_manager_recovers_half_the_gap(topo, topo_fleets):
+    """(c) the hierarchical manager, fed the topology's own lead signal,
+    recovers at least half the straggler gap under every topology."""
+    healthy, strag, managed, mgr = topo_fleets[topo]
+    tp_h, tp_s = healthy.fleet_throughput(), strag.fleet_throughput()
+    tp_m = managed.fleet_throughput()
+    assert tp_h > tp_s
+    recovery = (tp_m - tp_s) / (tp_h - tp_s)
+    assert recovery >= 0.5
+    # the straggler node won budget from the waiting peers
+    assert mgr.node_budgets[0] == mgr.node_budgets.max()
+    assert mgr.node_budgets.sum() <= N_NODES * 8 * CAP + 1e-6
+
+
+def test_manager_consumes_topology_lead(topo_fleets):
+    _, strag, _, _ = topo_fleets["tp"]
+    be = ClusterSimBackend(strag)
+    lead = be.node_leads()
+    np.testing.assert_array_equal(lead, strag.history[-1]["lead"])
+    assert int(np.argmin(lead)) == 0            # straggler waits least
+
+
+# ------------------------------------------------------ heterogeneous fleets
+def test_preset_creates_the_straggler():
+    """No boosted device anywhere: the straggler is the air-cooled *node*
+    (its preset, not its thermal draw, is the root cause)."""
+    cl = make_cluster("dp", 1.0, node_presets=["mi300x", "mi300x-air",
+                                               "mi300x", "mi300x"])
+    for _ in range(50):
+        cl.step()
+    slowest = np.array([h["slowest_node"] for h in cl.history[-30:]])
+    assert np.mean(slowest == 1) > 0.8
+    homo = make_cluster("dp", 1.0)
+    for _ in range(50):
+        homo.step()
+    assert cl.fleet_throughput() < homo.fleet_throughput()
+
+
+def test_hetero_backend_and_budget_bounds():
+    presets = ["mi300x", "mi300x-air", "mi300x", "v5e"]
+    cl = make_cluster("dp", 1.0, node_presets=presets, caps=None)
+    be = ClusterSimBackend(cl)
+    np.testing.assert_array_equal(
+        be.node_tdps, [PRESETS[p].tdp for p in presets])
+    mgr = run_fleet_closed_loop(
+        ClusterSimBackend(cl),
+        FleetManagerConfig(use_case="gpu-realloc", sampling_period=2,
+                           warmup=2, window_size=2, node_window_size=2,
+                           power_cap=240.0), 40, tune_after=4)
+    # every node's budget respects its own silicon and floor
+    assert (mgr.node_budgets <= 8 * mgr.node_tdps + 1e-6).all()
+    assert (mgr.node_budgets >= 8 * mgr.node_tdps * 0.25 - 1e-6).all()
+    assert mgr.node_budgets.sum() <= mgr.cluster_budget + 1e-6
+
+
+def test_node_presets_length_mismatch():
+    with pytest.raises(ValueError):
+        make_cluster("dp", 1.0, node_presets=["mi300x"])
+
+
+def test_derated_preset():
+    air = derated_preset(MI300X_PRESET, 1.22)
+    assert air.r_th_mean == pytest.approx(MI300X_PRESET.r_th_mean * 1.22)
+    assert air.tdp == MI300X_PRESET.tdp         # same silicon, worse cooling
+
+
+# ------------------------------------------------------------- cooling churn
+def test_churn_multipliers():
+    cm = ChurnModel(drift_rate=0.1,
+                    events=[ChurnEvent(100.0, 2, 1.5),
+                            ChurnEvent(200.0, 2, 0.5)])
+    np.testing.assert_allclose(cm.multipliers(0.0, 4), 1.0)
+    m = cm.multipliers(3600.0, 4)               # 1 h drift + both events
+    np.testing.assert_allclose(m[[0, 1, 3]], 1.1)
+    assert m[2] == pytest.approx(1.1 * 1.5 * 0.5)
+
+
+def test_churn_drift_heats_devices():
+    tm_still = ThermalModel(MI300X_PRESET, 4, seed=0)
+    tm_drift = ThermalModel(MI300X_PRESET, 4, seed=0,
+                            churn=ChurnModel(drift_rate=2.0))
+    s1, s2 = tm_still.init_state(), tm_drift.init_state()
+    util = np.full(4, 0.9)
+    for _ in range(400):                        # ~400 s simulated
+        tm_still.update(s1, util, 1.0)
+        tm_drift.update(s2, util, 1.0)
+    assert (s2.temp > s1.temp).all()
+    assert (s2.freq <= s1.freq).all()
+
+
+def test_churn_migrates_the_straggler():
+    """Cooling degrades over simulated time: node 0 straggles first, then
+    a harder degradation on node 2 takes over mid-run."""
+    probe = make_cluster("dp", 1.0)
+    probe.step()
+    t1 = probe.history[0]["t_fleet"]
+    churn = {0: ChurnModel(events=[ChurnEvent(0.0, 3, 1.35)]),
+             2: ChurnModel(events=[ChurnEvent(30 * t1, 5, 1.8)])}
+    cl = make_cluster("dp", 1.0, churn=churn)
+    for _ in range(80):
+        cl.step()
+    slowest = np.array([h["slowest_node"] for h in cl.history])
+    assert np.mean(slowest[5:25] == 0) > 0.8    # before the second event
+    assert np.mean(slowest[-25:] == 2) > 0.8    # after it
+
+
+# ------------------------------------------------------------- vector engine
+def _trace_pair(n_layers=4, seed=3, freq_lo=1.5, spike_p=0.0):
+    wl = small_workload(n_layers=n_layers)
+    freq = np.linspace(freq_lo, 2.1, 8)
+    kw = dict(seed=seed, comm_gbps=40.0, comm_spike_p=spike_p)
+    t_e = C3Sim(wl, MI300X_PRESET, SimConfig(**kw), 8).run_iteration(
+        freq, engine="event")
+    t_v = C3Sim(wl, MI300X_PRESET, SimConfig(**kw), 8).run_iteration(
+        freq, engine="vector")
+    return t_e, t_v
+
+
+def test_vector_engine_identical_traces():
+    t_e, t_v = _trace_pair()
+    for field in ("comp_start", "comp_end", "comp_overlap",
+                  "comm_start", "comm_end", "util"):
+        np.testing.assert_allclose(getattr(t_e, field), getattr(t_v, field),
+                                   rtol=1e-9, atol=1e-12, err_msg=field)
+    assert t_e.t_iter == pytest.approx(t_v.t_iter, rel=1e-12)
+
+
+@settings(deadline=None, max_examples=12)
+@given(seed=st.integers(0, 2 ** 16), freq_lo=st.floats(1.0, 2.05),
+       spike_p=st.sampled_from([0.0, 0.05]))
+def test_vector_engine_identical_property(seed, freq_lo, spike_p):
+    """Property: the vector engine consumes the same RNG stream and emits
+    the event engine's trace for any seed/frequency spread/spike setting —
+    detection and the cluster layer are engine-independent."""
+    t_e, t_v = _trace_pair(seed=seed, freq_lo=freq_lo, spike_p=spike_p)
+    np.testing.assert_allclose(t_e.comp_end, t_v.comp_end,
+                               rtol=1e-9, atol=1e-12)
+    np.testing.assert_allclose(t_e.comm_end, t_v.comm_end,
+                               rtol=1e-9, atol=1e-12)
+
+
+def test_vector_engine_moe_blocking():
+    from repro.configs import get_config
+    from repro.core.workload import fsdp_llm_iteration
+
+    cfg = get_config("deepseek-v3-16b").replace(n_layers=4)
+    wl = fsdp_llm_iteration(cfg, batch=2, seq=4096, n_shards=8)
+    freq = np.linspace(1.4, 2.1, 8)
+    kw = dict(seed=7, comm_gbps=40.0)
+    t_e = C3Sim(wl, MI300X_PRESET, SimConfig(**kw), 8).run_iteration(
+        freq, engine="event")
+    t_v = C3Sim(wl, MI300X_PRESET, SimConfig(**kw), 8).run_iteration(
+        freq, engine="vector")
+    for field in ("comp_start", "comp_end", "comm_end"):
+        np.testing.assert_allclose(getattr(t_e, field), getattr(t_v, field),
+                                   rtol=1e-9, atol=1e-12, err_msg=field)
+
+
+@pytest.mark.parametrize("cc_kw", [
+    {},
+    {"node_presets": ["mi300x", "mi300x-air", "mi300x", "v5e"]},
+], ids=["homogeneous", "heterogeneous"])
+def test_cluster_vector_engine_identical(cc_kw):
+    """engine='vector' batches all N*G lanes in one numpy pass and must
+    reproduce the per-node batched run exactly — including heterogeneous
+    per-node presets (per-lane rates)."""
+    cb = make_cluster("dp", 1.28, engine="batched", **cc_kw)
+    cv = make_cluster("dp", 1.28, engine="vector", **cc_kw)
+    for _ in range(4):
+        tb, tv = cb.step(), cv.step()
+        for a, b in zip(tb, tv):
+            np.testing.assert_array_equal(a.comp_end, b.comp_end)
+            np.testing.assert_array_equal(a.comm_end, b.comm_end)
+    assert cb.history[-1]["t_fleet"] == cv.history[-1]["t_fleet"]
+
+
+# -------------------------------------------------------------- bench harness
+@pytest.mark.slow
+def test_bench_only_unknown_name_errors():
+    """`benchmarks/run.py --only bogus` must fail loudly, not silently
+    run nothing."""
+    import os
+    root = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(root, "src")
+    proc = subprocess.run(
+        [sys.executable, os.path.join(root, "benchmarks", "run.py"),
+         "--only", "no-such-bench"],
+        capture_output=True, text=True, cwd=root, env=env)
+    assert proc.returncode != 0
+    assert "no benchmark section" in proc.stderr.lower()
