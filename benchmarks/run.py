@@ -5,6 +5,8 @@ Prints ``name,us_per_call,derived`` CSV.  Sections:
   * kernels_bench  — Pallas kernel oracles + interpret-mode correctness
   * dryrun_summary — multi-pod dry-run / roofline aggregates
   * cluster_sweep  — N-node fleet scaling / straggler placement / recovery
+  * telemetry      — recording overhead, replay fidelity, detection
+                     robustness vs sensor noise
 
 Usage:
   python benchmarks/run.py [--smoke] [--only PREFIX]
@@ -34,14 +36,17 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (cluster_sweep, dryrun_summary, kernels_bench,
-                            paper_figs)
+                            paper_figs, telemetry_bench)
     sections = [("kernels", kernels_bench.run),
                 ("dryrun", dryrun_summary.run),
-                ("cluster", cluster_sweep.run)]
+                ("cluster", cluster_sweep.run),
+                ("telemetry", telemetry_bench.run)]
     sections += [(fn.__name__, fn) for fn in paper_figs.ALL]
     if args.smoke:
         cluster_sweep.SMOKE = True
-        fast = {"dryrun", "cluster", "fig3_overlap_and_duration",
+        telemetry_bench.SMOKE = True
+        fast = {"dryrun", "cluster", "telemetry",
+                "fig3_overlap_and_duration",
                 "fig5_thermal_profile", "fig7_lead_waves"}
         sections = [(n, fn) for n, fn in sections if n in fast]
     if args.only:

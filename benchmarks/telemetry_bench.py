@@ -1,0 +1,149 @@
+"""Telemetry benchmarks: recording overhead and detection robustness.
+
+Rows:
+  * telemetry_overhead_{engine} — per-iteration cost of an attached
+                                  lossless collector vs a bare sim
+  * telemetry_replay            — record a short cluster run, replay the
+                                  fleet manager offline, check the cap
+                                  schedule matches bit-for-bit
+  * telemetry_detect_s{i}       — straggler-detection accuracy + lead
+                                  error vs sensor noise (offline degrade
+                                  of one lossless recording)
+  * telemetry_detect_monotonic  — the accuracy curve is non-increasing
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import Row, make_node
+from repro.core.backends import ClusterSimBackend
+from repro.core.c3sim import SimConfig
+from repro.core.cluster import ClusterConfig, ClusterSim
+from repro.core.manager import FleetManagerConfig, run_fleet_closed_loop
+from repro.core.thermal import MI300X_PRESET
+from repro.core.workload import fsdp_llm_iteration
+from repro.configs import get_config
+from repro.telemetry import (SensorConfig, SensorModel, TelemetryCollector,
+                             TelemetryTrace, degrade, detection_report,
+                             fleet_replay_matches, replay_fleet)
+
+SMOKE = False           # run.py --smoke trims iterations for CI
+
+NOISE_LEVELS = (0.0, 0.002, 0.01, 0.05, 0.2)
+
+
+def _iters(full: int) -> int:
+    return max(10, full // 4) if SMOKE else full
+
+
+def collector_overhead() -> List[Row]:
+    """Recording cost per engine: the collector must stay a few percent of
+    the iteration budget or nobody leaves it attached in production."""
+    rows: List[Row] = []
+    engines = ("batched",) if SMOKE else ("batched", "event", "vector")
+    reps = _iters(24)
+    for engine in engines:
+        bare = make_node(n_layers=8, engine=engine)
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            bare.step()
+        base_us = (time.perf_counter() - t0) / reps * 1e6
+        rec = make_node(n_layers=8, engine=engine)
+        TelemetryCollector(max_samples=reps + 1).attach_node(rec)
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            rec.step()
+        rec_us = (time.perf_counter() - t0) / reps * 1e6
+        over = (rec_us - base_us) / base_us
+        rows.append((f"telemetry_overhead_{engine}", rec_us,
+                     f"base_us={base_us:.0f};recorded_us={rec_us:.0f};"
+                     f"overhead_pct={over * 100:.1f}"))
+    return rows
+
+
+def fleet_cfg(n_nodes: int = 2) -> FleetManagerConfig:
+    return FleetManagerConfig(use_case="gpu-realloc", sampling_period=2,
+                              warmup=2, window_size=2, node_window_size=2,
+                              power_cap=700.0,
+                              cluster_power_budget=n_nodes * 8 * 700.0)
+
+
+def record_managed_cluster(n_nodes: int = 2, iters: int = 40,
+                           tune_after: int = 10):
+    """The reference record-and-replay setup: a managed 2-node cluster with
+    one hot GPU, recorded losslessly.  Returns (cluster, collector,
+    live_manager).  Shared with scripts/telemetry_smoke.py so the CI smoke
+    and the benchmark validate the exact same configuration.  The managed
+    loop needs enough horizon to produce cap adjustments — otherwise a
+    caps-match check is vacuous — and is cheap under the batched engine,
+    so callers do not trim it in smoke mode."""
+    cfg = get_config("llama3.1-8b").replace(n_layers=8)
+    wl = fsdp_llm_iteration(cfg, batch=2, seq=4096, n_shards=8)
+    cl = ClusterSim(wl, MI300X_PRESET, SimConfig(seed=1, comm_gbps=40.0),
+                    ClusterConfig(n_nodes=n_nodes, straggler_boost=1.28),
+                    devices_per_node=8, seed=5)
+    for n in range(n_nodes):
+        cl.set_node_caps(n, np.full(8, 700.0))
+    col = TelemetryCollector(max_samples=n_nodes * iters + iters)
+    col.attach_cluster(cl)
+    live = run_fleet_closed_loop(ClusterSimBackend(cl), fleet_cfg(n_nodes),
+                                 iters, tune_after=tune_after, collector=col)
+    return cl, col, live
+
+
+def replay_fidelity() -> List[Row]:
+    """Record a managed 2-node cluster, replay the fleet manager offline,
+    and report whether the replayed cap schedule matches bit-for-bit."""
+    t0 = time.perf_counter()
+    cl, col, live = record_managed_cluster()
+    rp = replay_fleet(TelemetryTrace.from_collector(col), fleet_cfg(),
+                      tune_after=10)
+    live_caps = np.stack([cl.get_node_caps(n) for n in range(2)])
+    match = fleet_replay_matches(live, rp, live_caps)
+    us = (time.perf_counter() - t0) * 1e6
+    return [("telemetry_replay", us,
+             f"samples={len(col.samples)};adjusts={len(live.budget_log)};"
+             f"caps_match={int(match)}")]
+
+
+def detection_robustness() -> List[Row]:
+    """Detection accuracy / lead error vs timestamp noise, offline from one
+    lossless recording (5 sensor seeds per level)."""
+    node = make_node(seed=1)
+    col = TelemetryCollector(max_samples=128).attach_node(node)
+    t0 = time.perf_counter()
+    for _ in range(_iters(60)):
+        node.step()
+    trace = TelemetryTrace.from_collector(col)
+    rows: List[Row] = []
+    accs = []
+    for i, sigma in enumerate(NOISE_LEVELS):
+        t1 = time.perf_counter()
+        acc, err = [], []
+        for seed in range(5):
+            rep = detection_report(degrade(trace, SensorModel(
+                SensorConfig(noise_time_s=sigma, sample_period=10,
+                             seed=seed))))
+            acc.append(rep.accuracy)
+            err.append(rep.lead_rel_error)
+        accs.append(float(np.mean(acc)))
+        us = (time.perf_counter() - t1) * 1e6
+        rows.append((f"telemetry_detect_s{i}", us,
+                     f"sigma={sigma};acc={np.mean(acc):.3f};"
+                     f"lead_err={np.mean(err):.3f}"))
+    mono = all(hi <= lo + 0.05 for lo, hi in zip(accs, accs[1:]))
+    us = (time.perf_counter() - t0) * 1e6
+    rows.append(("telemetry_detect_monotonic", us,
+                 f"levels={len(NOISE_LEVELS)};monotonic={int(mono)};"
+                 f"acc_first={accs[0]:.3f};acc_last={accs[-1]:.3f}"))
+    return rows
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    for fn in (collector_overhead, replay_fidelity, detection_robustness):
+        rows.extend(fn())
+    return rows

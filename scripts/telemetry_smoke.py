@@ -1,0 +1,66 @@
+"""CI telemetry smoke: record a short managed cluster run, persist the
+trace (JSONL + Chrome trace artifacts), replay the fleet manager offline,
+and fail unless the replayed cap schedule matches the live one bit-for-bit.
+
+The cluster/manager setup is ``benchmarks.telemetry_bench.
+record_managed_cluster`` — the same configuration the benchmark's
+``telemetry_replay`` row measures — so CI validates one setup, not two
+drifting copies.
+
+    PYTHONPATH=src python scripts/telemetry_smoke.py --out DIR
+
+Exit status 0 = replay matched; 1 = mismatch (prints the first divergence).
+"""
+import argparse
+import os
+import sys
+
+_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+import numpy as np                                            # noqa: E402
+
+from benchmarks.telemetry_bench import (fleet_cfg,            # noqa: E402
+                                        record_managed_cluster)
+from repro.telemetry import (export_chrome_trace,             # noqa: E402
+                             fleet_replay_matches, load_trace,
+                             replay_fleet, save_trace)
+
+N_NODES, ITERS, TUNE_AFTER = 2, 40, 10
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="telemetry_smoke",
+                    help="artifact directory (JSONL + Chrome trace)")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    cl, col, live = record_managed_cluster(N_NODES, ITERS, TUNE_AFTER)
+
+    jsonl = os.path.join(args.out, "cluster_trace.jsonl")
+    chrome = os.path.join(args.out, "cluster_trace.chrome.json")
+    lines = save_trace(col, jsonl)
+    events = export_chrome_trace(col, chrome, max_samples=5 * N_NODES)
+    print(f"recorded {len(col.samples)} node-samples, "
+          f"{len(col.actions)} manager actions "
+          f"({lines} JSONL lines, {events} Chrome-trace events)")
+
+    rp = replay_fleet(load_trace(jsonl), fleet_cfg(N_NODES),
+                      tune_after=TUNE_AFTER)
+    live_caps = np.stack([cl.get_node_caps(n) for n in range(N_NODES)])
+    rp.export_caps(os.path.join(args.out, "caps_node0.json"))
+
+    ok = fleet_replay_matches(live, rp, live_caps, log=print)
+    if ok:
+        print(f"replay matched live bit-for-bit: "
+              f"{len(live.budget_log)} budget adjustments, "
+              f"{sum(len(m.adjust_log) for m in live.managers)} node cap "
+              f"adjustments, final caps identical")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -26,12 +26,16 @@ class PowerBackend(Protocol):
 
 
 class SimBackend:
-    """Backend over the discrete-event node simulator."""
+    """Backend over the discrete-event node simulator.  ``collector``
+    (a ``repro.telemetry.TelemetryCollector``) attaches to the node so
+    every committed iteration is offered to the trace recorder."""
 
-    def __init__(self, node: NodeSim):
+    def __init__(self, node: NodeSim, collector=None):
         self.node = node
         self.n_devices = node.G
         self.tdp = node.thermal.preset.tdp
+        if collector is not None:
+            collector.attach_node(node)
 
     def run_iteration(self) -> IterationTrace:
         return self.node.step()
@@ -81,7 +85,7 @@ class ClusterSimBackend:
     the per-node traces of one data-parallel step; per-node cap control is
     exposed through `NodeViewBackend` views."""
 
-    def __init__(self, cluster: ClusterSim):
+    def __init__(self, cluster: ClusterSim, collector=None):
         self.cluster = cluster
         self.n_nodes = cluster.N
         self.n_devices = cluster.G
@@ -89,6 +93,8 @@ class ClusterSimBackend:
         self.node_tdps = np.array([p.tdp for p in cluster.presets])
         self.node_views = [NodeViewBackend(cluster, n)
                            for n in range(cluster.N)]
+        if collector is not None:
+            collector.attach_cluster(cluster)
 
     def run_iteration(self) -> List[IterationTrace]:
         return self.cluster.step()

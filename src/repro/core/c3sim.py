@@ -651,6 +651,9 @@ class NodeSim:
         self.preset = preset
         self.history: List[dict] = []
         self.iteration = 0
+        # telemetry hook (repro.telemetry.TelemetryCollector.attach_node):
+        # None during warmup, so recordings start at operational time zero
+        self.collector = None
         # warm up thermals: a few iterations to reach operating temperature
         for _ in range(30):
             self.step()
@@ -696,6 +699,8 @@ class NodeSim:
             "throughput": 1.0 / t,
             "energy": float(np.sum(self.state.power) * t),
         })
+        if self.collector is not None:
+            self.collector.on_node_commit(self, trace, t, self.iteration)
         self.iteration += 1
 
     def step(self) -> IterationTrace:

@@ -105,6 +105,9 @@ class ClusterSim:
             cc, self.N, workload, self.grad_bytes, seed=seed)
         self.history: List[dict] = []
         self.iteration = 0
+        # telemetry hook (TelemetryCollector.attach_cluster) — fleet-scope
+        # records; the per-node hooks live on each NodeSim
+        self.collector = None
 
     def _resolve_presets(self, preset: DevicePreset) -> List[DevicePreset]:
         np_cfg = self.cfg.node_presets
@@ -164,6 +167,8 @@ class ClusterSim:
             "comm_time": fs.comm_time,
             "topology": self.topology.name,
         })
+        if self.collector is not None:
+            self.collector.on_cluster_step(self, traces)
         self.iteration += 1
         return traces
 

@@ -16,12 +16,15 @@ import numpy as np
 def lead_values(start: np.ndarray) -> np.ndarray:
     """Algorithm 1 lines 1-4.  start: (G, K) kernel-start timestamps.
 
-    Returns lead_value: (G, K).  NaN starts (never-ran kernels) -> 0 lead.
+    Returns lead_value: (G, K).  NaN starts (never-ran kernels, or readings
+    a lossy telemetry sensor dropped) -> 0 lead; an all-NaN kernel column
+    (no device reported it) is 0 lead everywhere rather than a warning —
+    noisy sensor streams hit this case routinely.
     """
     t = np.asarray(start, float)
-    t_max = np.nanmax(t, axis=0, keepdims=True)
-    lead = t_max - t
-    return np.nan_to_num(lead, nan=0.0)
+    finite = np.isfinite(t)
+    t_max = np.where(finite, t, -np.inf).max(axis=0, keepdims=True)
+    return np.where(finite & np.isfinite(t_max), t_max - t, 0.0)
 
 
 def aggregate_lead(lead: np.ndarray, mode: str = "sum") -> np.ndarray:

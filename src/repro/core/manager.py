@@ -68,11 +68,34 @@ class ManagerConfig:
 
 
 class PowerManager:
-    """Continuous measure-and-correct controller (paper Fig 8)."""
+    """Continuous measure-and-correct controller (paper Fig 8).
 
-    def __init__(self, backend: PowerBackend, cfg: ManagerConfig):
+    Two telemetry paths:
+
+      * **oracle** (default, ``sensor=None``): the exact kernel-start
+        matrix the simulator produced, sampled every
+        ``cfg.sampling_period`` iterations — arithmetic unchanged since
+        the first version of this layer;
+      * **sensor-backed** (``sensor=SensorModel(...)``): starts are
+        observed through a noisy/quantized/dropping sensor, and the
+        *sensor's* ``sample_period``/``phase_jitter`` decide which
+        iterations yield a reading — what a deployment consuming
+        rocm-smi-style counters sees.  A lossless sensor with
+        ``sample_period == cfg.sampling_period`` reproduces the oracle
+        path bit-for-bit.
+
+    ``collector``, when given, records every applied cap vector as a
+    ``ManagerAction`` so traces carry the mitigation decisions alongside
+    the signals that caused them.
+    """
+
+    def __init__(self, backend: PowerBackend, cfg: ManagerConfig,
+                 sensor=None, collector=None, collector_node: int = 0):
         self.backend = backend
         self.cfg = cfg
+        self.sensor = sensor
+        self.collector = collector
+        self.collector_node = collector_node   # which node actions name
         self.G = backend.n_devices
         self.tdp = backend.tdp
         self.global_max = 0.0
@@ -81,6 +104,7 @@ class PowerManager:
         self.lead_log: List[np.ndarray] = []
         self.adjust_log: List[np.ndarray] = []
         self.enabled = True
+        self._last_iteration = -1
         backend.set_power_caps(cfg.initial_caps(self.G, self.tdp))
 
     # ----------------------------------------------------------------- hook
@@ -90,9 +114,16 @@ class PowerManager:
         this iteration was sampled (else None)."""
         if not self.enabled or trace is None:
             return
-        if iteration % self.cfg.sampling_period:
-            return
-        lead = lead_value_detect(trace.comp_start, self.cfg.aggregation)
+        if self.sensor is not None:
+            if not self.sensor.take_sample(iteration):
+                return
+            start = self.sensor.observe_starts(trace.comp_start)
+        else:
+            if iteration % self.cfg.sampling_period:
+                return
+            start = trace.comp_start
+        self._last_iteration = iteration
+        lead = lead_value_detect(start, self.cfg.aggregation)
         self.lead_log.append(lead)
         self.samples_seen += 1
         if self.samples_seen <= self.cfg.warmup:
@@ -112,6 +143,9 @@ class PowerManager:
                               self.cfg.node_cap(self.G, self.tdp))
         self.backend.set_power_caps(caps)
         self.adjust_log.append(caps.copy())
+        if self.collector is not None:
+            self.collector.on_manager_action("caps", self._last_iteration,
+                                             caps, node=self.collector_node)
         # one-time profiling: freeze once the cap distribution stabilizes
         w = self.cfg.freeze_window
         if (self.cfg.convergence_freeze and len(self.adjust_log) > w):
@@ -169,12 +203,14 @@ class FleetPowerManager:
     sketch budgets for.
     """
 
-    def __init__(self, backend, cfg: FleetManagerConfig):
+    def __init__(self, backend, cfg: FleetManagerConfig, collector=None):
         if not hasattr(backend, "node_views"):
             raise TypeError("FleetPowerManager needs a cluster backend "
                             "exposing per-node views (ClusterSimBackend)")
         self.backend = backend
         self.cfg = cfg
+        self.collector = collector
+        self._last_iteration = -1
         self.N = backend.n_nodes
         self.G = backend.n_devices
         self.tdp = backend.tdp
@@ -191,8 +227,10 @@ class FleetPowerManager:
                              / per_node_caps.sum())
         self.node_cfgs = [dataclasses.replace(
             cfg, node_cap_override=float(b)) for b in self.node_budgets]
-        self.managers = [PowerManager(v, c) for v, c in
-                         zip(backend.node_views, self.node_cfgs)]
+        self.managers = [
+            PowerManager(v, c, collector=collector, collector_node=n)
+            for n, (v, c) in enumerate(zip(backend.node_views,
+                                           self.node_cfgs))]
         self.node_global_max = 0.0
         self.samples_seen = 0
         self.lead_window: List[np.ndarray] = []
@@ -203,6 +241,7 @@ class FleetPowerManager:
                      traces: Optional[List[IterationTrace]]) -> None:
         if traces is None:
             return
+        self._last_iteration = iteration
         for mgr, tr in zip(self.managers, traces):
             mgr.on_iteration(iteration, tr)
         if iteration % self.cfg.sampling_period:
@@ -254,6 +293,9 @@ class FleetPowerManager:
                 budgets -= headroom * min(1.0, excess / total)
         self.node_budgets = budgets
         self.budget_log.append(budgets.copy())
+        if self.collector is not None:
+            self.collector.on_manager_action("budgets", self._last_iteration,
+                                             budgets)
         for n, mgr in enumerate(self.managers):
             if abs(mgr.cfg.node_cap_override - budgets[n]) > 1e-6:
                 mgr.cfg.node_cap_override = float(budgets[n])
@@ -262,11 +304,11 @@ class FleetPowerManager:
 
 
 def run_fleet_closed_loop(backend, cfg: FleetManagerConfig, iterations: int,
-                          tune_after: Optional[int] = None):
+                          tune_after: Optional[int] = None, collector=None):
     """Cluster counterpart of `run_closed_loop`: run `iterations` fleet
     steps, enabling hierarchical tuning from `tune_after` (default
     halfway).  Returns the FleetPowerManager."""
-    mgr = FleetPowerManager(backend, cfg)
+    mgr = FleetPowerManager(backend, cfg, collector=collector)
     tune_after = iterations // 2 if tune_after is None else tune_after
     enabled = False
     for i in range(iterations):
@@ -279,10 +321,15 @@ def run_fleet_closed_loop(backend, cfg: FleetManagerConfig, iterations: int,
 
 
 def run_closed_loop(backend: PowerBackend, cfg: ManagerConfig,
-                    iterations: int, tune_after: Optional[int] = None):
+                    iterations: int, tune_after: Optional[int] = None,
+                    sensor=None, collector=None):
     """Convenience driver: run `iterations`, tuning from `tune_after` on
-    (default: halfway, as in paper Fig 9).  Returns (manager, history)."""
-    mgr = PowerManager(backend, cfg)
+    (default: halfway, as in paper Fig 9).  Returns the PowerManager (the
+    node's history lives on ``backend.node.history``).  ``sensor``/
+    ``collector`` flow into the ``PowerManager`` (telemetry-backed
+    detection / action recording); defaults leave the oracle path
+    untouched."""
+    mgr = PowerManager(backend, cfg, sensor=sensor, collector=collector)
     tune_after = iterations // 2 if tune_after is None else tune_after
     mgr.enabled = False
     for i in range(iterations):

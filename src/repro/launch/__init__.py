@@ -1,0 +1,3 @@
+"""Launchers: mesh construction, train/serve entry points, multi-pod
+dry-run planner.  A regular package (not an implicit namespace package) so
+src-layout discovery and editable installs always ship it."""

@@ -1,0 +1,3 @@
+"""Roofline analysis: HLO parsing, hardware ceilings, per-op intensity
+accounting and explanations.  A regular package (not an implicit namespace
+package) so src-layout discovery and editable installs always ship it."""

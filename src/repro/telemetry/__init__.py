@@ -1,0 +1,33 @@
+"""Telemetry subsystem: noisy sensor models, streaming trace recording,
+versioned persistence (JSONL + Chrome trace), and offline replay of the
+paper's detection/mitigation stack over recorded data.
+
+The live simulators hand the manager perfect kernel-start matrices; real
+deployments run Algorithms 1-3 from sampled, noisy counters.  This package
+closes that gap: record any sim (node / cluster, every engine) through a
+``SensorModel``, persist the trace, replay detection + mitigation offline
+(bit-for-bit from a lossless trace), and measure how detection degrades as
+sensor fidelity drops.
+"""
+from repro.telemetry.collector import (FleetSample, ManagerAction,
+                                       NodeSample, TelemetryCollector)
+from repro.telemetry.replay import (DetectionReport, FleetReplay,
+                                    NodeReplay, ReplayCapBackend,
+                                    degrade, detection_report,
+                                    fleet_replay_matches,
+                                    replay_fleet, replay_node)
+from repro.telemetry.sensors import (LOSSLESS, ROCM_SMI_LIKE, SensorConfig,
+                                     SensorModel)
+from repro.telemetry.trace_io import (TRACE_FORMAT, TRACE_VERSION,
+                                      TelemetryTrace, export_chrome_trace,
+                                      load_trace, save_trace)
+
+__all__ = [
+    "SensorConfig", "SensorModel", "LOSSLESS", "ROCM_SMI_LIKE",
+    "TelemetryCollector", "NodeSample", "FleetSample", "ManagerAction",
+    "TelemetryTrace", "TRACE_FORMAT", "TRACE_VERSION",
+    "save_trace", "load_trace", "export_chrome_trace",
+    "ReplayCapBackend", "NodeReplay", "FleetReplay",
+    "replay_node", "replay_fleet", "fleet_replay_matches", "degrade",
+    "DetectionReport", "detection_report",
+]

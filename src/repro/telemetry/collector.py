@@ -1,0 +1,220 @@
+"""Streaming telemetry collector over the node/cluster simulators.
+
+``TelemetryCollector`` attaches to a ``NodeSim`` or a ``ClusterSim`` and
+records, per sampled iteration: kernel start/end matrices and overlap (the
+Algorithm-1 input), per-device power / temperature / frequency / cap, and —
+at cluster scope — the topology lead signal and fleet timing.  Manager
+actions (cap schedules) are recorded when a ``PowerManager`` is handed the
+collector.  All signals pass through a ``SensorModel`` first, so a trace is
+either an exact record (lossless default — the replay bit-for-bit
+guarantee) or a realistic degraded one (noise / quantization / sampling /
+dropout studies).
+
+Hooks fire inside ``NodeSim.commit`` and ``ClusterSim.step``, i.e. *after*
+the engine produced the iteration — so every engine (event, batched,
+vector) records identically; the collector never perturbs execution.
+
+Buffers are bounded ring buffers (``deque(maxlen=...)``): a collector left
+attached to a long-running fleet holds the most recent ``max_samples``
+records at a fixed memory footprint instead of growing without bound.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, Dict, List, Optional
+
+import numpy as np
+
+from repro.telemetry.sensors import LOSSLESS, SensorConfig, SensorModel
+
+
+@dataclass
+class NodeSample:
+    """One node's observed telemetry for one sampled iteration."""
+
+    iteration: int
+    node: int
+    t_local: float                  # node-local iteration time (s)
+    t_wall: float                   # committed (fleet-stretched) interval
+    comp_start: np.ndarray          # (G, Kc) observed kernel starts
+    comp_end: np.ndarray            # (G, Kc)
+    overlap: np.ndarray             # (G, Kc) comm-overlap seconds (exact)
+    power: np.ndarray               # (G,) observed W
+    temp: np.ndarray                # (G,) observed °C
+    freq: np.ndarray                # (G,) GHz (governor state, exact)
+    cap: np.ndarray                 # (G,) W (manager-set, exact)
+    truth_start: Optional[np.ndarray] = None  # kept when sensor is lossy
+
+
+@dataclass
+class FleetSample:
+    """Cluster-scope signals for one sampled iteration."""
+
+    iteration: int
+    t_fleet: float
+    lead: np.ndarray                # (N,) topology lead signal
+    t_local: np.ndarray             # (N,) per-node local iteration times
+    node_power: np.ndarray          # (N,) summed node power (W)
+    topology: str
+
+
+@dataclass
+class ManagerAction:
+    """A mitigation decision: the cap/budget vector a manager applied.
+
+    ``iteration`` is -1 when the manager's adjust path was driven directly
+    (e.g. ``adjust_node_budgets``) rather than through ``on_iteration`` —
+    the decision then belongs to no sampled iteration."""
+
+    iteration: int
+    kind: str                       # "caps" (node) | "budgets" (fleet)
+    node: int                       # -1 for fleet-scope actions
+    values: np.ndarray
+
+
+@dataclass
+class TelemetryCollector:
+    sensor_cfg: SensorConfig = LOSSLESS
+    max_samples: int = 2048         # sampled iterations retained; a cluster
+    #                                 attach scales the node ring by N so
+    #                                 all buffers cover the same window
+    keep_truth: bool = False        # store exact starts beside lossy ones
+    with_kernels: bool = True       # False: drop (G,K) matrices (counters
+    #                                 only — cheap long-horizon recording)
+    meta: Dict = field(default_factory=dict)
+
+    def __post_init__(self):
+        self.samples: Deque[NodeSample] = deque(maxlen=self.max_samples)
+        self.fleet: Deque[FleetSample] = deque(maxlen=self.max_samples)
+        self.actions: Deque[ManagerAction] = deque(maxlen=self.max_samples)
+        self._sensors: Dict[int, SensorModel] = {}
+        self._last_iter: Optional[int] = None
+        self._last_decision = False
+
+    # ------------------------------------------------------------ attaching
+    def sensor_for(self, node_index: int) -> SensorModel:
+        if node_index not in self._sensors:
+            self._sensors[node_index] = SensorModel(
+                self.sensor_cfg, seed_offset=node_index)
+        return self._sensors[node_index]
+
+    def attach_node(self, node, node_index: int = 0) -> "TelemetryCollector":
+        """Hook a ``NodeSim``: every subsequent ``commit`` is offered to the
+        sampler.  Returns self so attach chains at construction sites."""
+        node.collector = self
+        self.sensor_for(node_index)
+        node._telemetry_index = node_index
+        # recording-relative clock: NodeSim's counter is already past its
+        # thermal warmup at attach time (and a cluster's nodes are offset
+        # from the cluster counter), so rebase every stream to "iterations
+        # since recording started" — the same numbering a training loop
+        # (run_closed_loop) drives the manager with
+        node._telemetry_iter0 = node.iteration
+        self.meta.setdefault("n_devices", node.G)
+        self.meta.setdefault("tdp", float(node.preset.tdp))
+        self.meta.setdefault("preset", node.preset.name)
+        self.meta.setdefault("comp_names", list(node.sim.arrays["comp_names"]))
+        self.meta.setdefault("comm_names", list(node.sim.arrays["comm_names"]))
+        self.meta.setdefault("straggler_hint", {})
+        self.meta["straggler_hint"][node_index] = int(
+            node.thermal.straggler_hint)
+        self.meta.setdefault("sensor", self.sensor_cfg.to_dict())
+        return self
+
+    def attach_cluster(self, cluster) -> "TelemetryCollector":
+        """Hook a ``ClusterSim`` and all of its nodes.  The node-sample
+        ring is rescaled to N x max_samples records so every buffer
+        (node, fleet, actions) retains the same most-recent-
+        ``max_samples``-iterations window — otherwise the fleet stream
+        would outlive the node streams it is analyzed against."""
+        cluster.collector = self
+        cluster._telemetry_iter0 = cluster.iteration
+        target_samples = self.max_samples * cluster.N
+        target_actions = self.max_samples * (cluster.N + 1)
+        if self.samples.maxlen != target_samples:
+            self.samples = deque(self.samples, maxlen=target_samples)
+        if self.actions.maxlen != target_actions:
+            self.actions = deque(self.actions, maxlen=target_actions)
+        for n, node in enumerate(cluster.nodes):
+            self.attach_node(node, n)
+        self.meta["n_nodes"] = cluster.N
+        self.meta["topology"] = cluster.topology.name
+        self.meta["node_tdps"] = [float(p.tdp) for p in cluster.presets]
+        self.meta["straggler_node"] = int(cluster.cfg.straggler_node)
+        return self
+
+    # ------------------------------------------------------------- sampling
+    def _sampled(self, iteration: int) -> bool:
+        """One sampling decision per iteration, shared by every node of a
+        fleet and the fleet record itself (node 0's sensor is the poller)."""
+        if iteration == self._last_iter:
+            return self._last_decision
+        self._last_iter = iteration
+        self._last_decision = self.sensor_for(0).take_sample(iteration)
+        return self._last_decision
+
+    # ---------------------------------------------------------------- hooks
+    def on_node_commit(self, node, trace, t_interval: float,
+                       iteration: int) -> None:
+        idx = getattr(node, "_telemetry_index", 0)
+        iteration -= getattr(node, "_telemetry_iter0", 0)
+        if not self._sampled(iteration):
+            return
+        sensor = self.sensor_for(idx)
+        lossy = not self.sensor_cfg.lossless
+        if self.with_kernels:
+            truth = np.array(trace.comp_start, float, copy=True)
+            start = sensor.observe_starts(truth)
+            end = sensor.observe_times(
+                np.array(trace.comp_end, float, copy=True))
+            ovl = np.array(trace.comp_overlap, float, copy=True)
+        else:
+            truth = start = end = ovl = np.empty((node.G, 0))
+        s = node.state
+        self.samples.append(NodeSample(
+            iteration=iteration, node=idx,
+            t_local=float(trace.t_iter), t_wall=float(t_interval),
+            comp_start=start, comp_end=end, overlap=ovl,
+            power=np.asarray(sensor.observe_power(s.power), float).copy(),
+            temp=np.asarray(sensor.observe_temp(s.temp), float).copy(),
+            freq=s.freq.copy(), cap=s.cap.copy(),
+            truth_start=(truth if (lossy and self.keep_truth
+                                   and self.with_kernels) else None)))
+
+    def on_cluster_step(self, cluster, traces) -> None:
+        h = cluster.history[-1]
+        iteration = int(h["iter"]) - getattr(cluster, "_telemetry_iter0", 0)
+        if not self._sampled(iteration):
+            return
+        self.fleet.append(FleetSample(
+            iteration=iteration, t_fleet=float(h["t_fleet"]),
+            lead=np.asarray(h["lead"], float).copy(),
+            t_local=np.asarray(h["t_local"], float).copy(),
+            node_power=np.asarray(h["node_power"], float).copy(),
+            topology=str(h["topology"])))
+
+    def on_manager_action(self, kind: str, iteration: int,
+                          values: np.ndarray, node: int = -1) -> None:
+        self.actions.append(ManagerAction(
+            iteration=int(iteration), kind=kind, node=node,
+            values=np.asarray(values, float).copy()))
+
+    # ------------------------------------------------------------ accessors
+    def node_samples(self, node: int = 0) -> List[NodeSample]:
+        return [s for s in self.samples if s.node == node]
+
+    def iterations(self) -> List[int]:
+        return sorted({s.iteration for s in self.samples})
+
+    def clear(self) -> None:
+        """Drop all buffered records *and* rebuild the sensor models, so a
+        recording started after clear() is bit-for-bit what a fresh
+        collector with the same config would record (the sensors' RNG
+        streams restart rather than continuing mid-stream)."""
+        self.samples.clear()
+        self.fleet.clear()
+        self.actions.clear()
+        self._sensors = {}
+        self._last_iter = None
+        self._last_decision = False

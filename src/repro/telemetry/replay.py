@@ -1,0 +1,313 @@
+"""Offline replay: re-run detection + mitigation over a recorded trace.
+
+This is the paper's Fig-12 workflow made concrete: the detect→mitigate loop
+(Algorithm 1 + Algorithms 2/3 inside an unmodified ``PowerManager``) runs
+in *dry-run* mode against recorded telemetry — caps live in memory, no
+simulator or hardware behind them — so a trace recorded once can be
+analyzed, re-tuned, and its converged cap schedule exported, offline.
+
+Two guarantees, both tested:
+
+  * **Bit-for-bit**: replaying a lossless trace (default sensor, every
+    iteration recorded) with the live run's ManagerConfig reproduces the
+    live cap schedule exactly — same floats, every adjustment, under the
+    event, batched, and vector engines.  The cap arithmetic is a pure
+    function of the kernel-start stream, the config, and the initial caps;
+    a lossless trace preserves all three.
+  * **Degradation is measurable**: ``degrade`` re-observes a recorded
+    trace through an arbitrary ``SensorModel`` (noise / quantization /
+    subsampling / dropout) without re-simulating, and
+    ``detection_report`` quantifies what the detector loses — straggler
+    identification accuracy and lead-estimate error as sensor fidelity
+    drops.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from dataclasses import dataclass
+from types import SimpleNamespace
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.detect import lead_value_detect
+from repro.core.manager import (FleetManagerConfig, FleetPowerManager,
+                                ManagerConfig, PowerManager)
+from repro.telemetry.collector import NodeSample
+from repro.telemetry.sensors import SensorModel
+from repro.telemetry.trace_io import TelemetryTrace
+
+
+class ReplayCapBackend:
+    """Dry-run ``PowerBackend``: caps are plain state, nothing executes."""
+
+    def __init__(self, n_devices: int, tdp: float):
+        self.n_devices = n_devices
+        self.tdp = tdp
+        self._caps = np.full(n_devices, float(tdp))
+
+    def run_iteration(self):
+        raise NotImplementedError(
+            "ReplayCapBackend is offline: iterations come from the trace")
+
+    def set_power_caps(self, caps: np.ndarray) -> None:
+        self._caps = np.asarray(caps, float).copy()
+
+    def get_power_caps(self) -> np.ndarray:
+        return self._caps.copy()
+
+    def telemetry(self) -> dict:
+        return {"cap": self._caps.copy()}
+
+
+class _FleetReplayBackend:
+    """Fleet-scope dry-run backend: per-node cap views + the recorded
+    topology lead signal (what ``FleetPowerManager`` consumes live)."""
+
+    def __init__(self, n_nodes: int, n_devices: int, node_tdps):
+        self.n_nodes = n_nodes
+        self.n_devices = n_devices
+        self.node_tdps = np.asarray(node_tdps, float)
+        self.tdp = float(self.node_tdps[0])
+        self.node_views = [ReplayCapBackend(n_devices, t)
+                           for t in self.node_tdps]
+        self._lead: Optional[np.ndarray] = None
+
+    def node_leads(self) -> Optional[np.ndarray]:
+        return self._lead
+
+    def get_power_caps(self) -> np.ndarray:
+        return np.stack([v.get_power_caps() for v in self.node_views])
+
+
+def _trace_view(start: np.ndarray) -> SimpleNamespace:
+    """The slice of ``IterationTrace`` the manager consumes offline."""
+    return SimpleNamespace(comp_start=start)
+
+
+# --------------------------------------------------------------------------- #
+# node-level replay
+# --------------------------------------------------------------------------- #
+@dataclass
+class NodeReplay:
+    manager: PowerManager
+    cap_schedule: List[np.ndarray]      # every adjustment, in order
+    lead_log: List[np.ndarray]
+    final_caps: np.ndarray
+
+    def export_caps(self, path: str) -> None:
+        """Same caps-file format as the live manager (Fig 12): a replayed
+        schedule can warm-start a future run via ``import_caps``."""
+        self.manager.export_caps(path)
+
+
+def replay_node(trace: TelemetryTrace, cfg: ManagerConfig, node: int = 0,
+                tune_after: Optional[int] = None,
+                sensor: Optional[SensorModel] = None) -> NodeReplay:
+    """Drive an unmodified ``PowerManager`` over node ``node``'s recorded
+    kernel-start stream.  For a bit-for-bit match, ``tune_after`` must be
+    the enable point the live run used — note ``run_closed_loop`` defaults
+    it to ``iterations // 2``, while here ``None`` means enabled from the
+    first sample (there is no way to infer the live loop's horizon from a
+    trace, so nothing is guessed).  ``sensor`` optionally degrades the
+    stream on the way in (on top of whatever the recording sensor already
+    did)."""
+    samples = trace.node_samples(node)
+    if not samples:
+        raise ValueError(f"trace holds no samples for node {node}")
+    G = samples[0].comp_start.shape[0]
+    tdp = float(trace.meta.get("tdp", 750.0))
+    mgr = PowerManager(ReplayCapBackend(G, tdp), cfg, sensor=sensor)
+    armed = tune_after is None
+    mgr.enabled = armed
+    for s in samples:
+        if not armed and s.iteration >= tune_after:
+            mgr.enabled = True
+            armed = True
+        mgr.on_iteration(s.iteration, _trace_view(s.comp_start))
+    return NodeReplay(manager=mgr,
+                      cap_schedule=[c.copy() for c in mgr.adjust_log],
+                      lead_log=[v.copy() for v in mgr.lead_log],
+                      final_caps=mgr.backend.get_power_caps())
+
+
+# --------------------------------------------------------------------------- #
+# fleet-level replay
+# --------------------------------------------------------------------------- #
+@dataclass
+class FleetReplay:
+    manager: FleetPowerManager
+    budget_log: List[np.ndarray]
+    node_cap_schedules: List[List[np.ndarray]]   # per node, every adjustment
+    final_caps: np.ndarray                       # (N, G)
+    skipped_iterations: List[int]                # fleet samples missing some
+    #                                              node samples (truncation)
+
+    def export_caps(self, path: str, node: int = 0) -> None:
+        self.manager.managers[node].export_caps(path)
+
+
+def replay_fleet(trace: TelemetryTrace, cfg: FleetManagerConfig,
+                 tune_after: int = 0) -> FleetReplay:
+    """Drive an unmodified ``FleetPowerManager`` (nested node managers +
+    node-budget loop) over a recorded cluster trace.  For a bit-for-bit
+    match, ``tune_after`` must be the enable point the live run used
+    (``run_fleet_closed_loop`` defaults it to ``iterations // 2``; the
+    default here enables from the first sample).  Fleet samples whose node
+    samples were partially evicted by the recording ring buffer cannot be
+    replayed — they are skipped with a warning and listed in
+    ``FleetReplay.skipped_iterations``, so a truncated trace reads as
+    truncation, not as a replay mismatch."""
+    if not trace.fleet:
+        raise ValueError("trace holds no fleet samples (record through "
+                         "TelemetryCollector.attach_cluster)")
+    N = trace.n_nodes
+    node_tdps = trace.meta.get("node_tdps") or [trace.meta.get("tdp", 750.0)] * N
+    by_iter: Dict[int, Dict[int, NodeSample]] = {}
+    for s in trace.samples:
+        by_iter.setdefault(s.iteration, {})[s.node] = s
+    backend = _FleetReplayBackend(N, trace.n_devices, node_tdps)
+    mgr = FleetPowerManager(backend, cfg)
+    skipped: List[int] = []
+    for fs in trace.fleet:
+        if fs.iteration < tune_after:
+            continue
+        nodes = by_iter.get(fs.iteration, {})
+        if len(nodes) != N:
+            skipped.append(fs.iteration)
+            continue
+        traces = [_trace_view(nodes[n].comp_start) for n in range(N)]
+        backend._lead = fs.lead
+        mgr.on_iteration(fs.iteration, traces)
+    if skipped:
+        warnings.warn(
+            f"replay_fleet: {len(skipped)} fleet sample(s) "
+            f"(iterations {skipped[:5]}{'...' if len(skipped) > 5 else ''}) "
+            f"lacked node samples for all {N} nodes — the recording ring "
+            "buffer truncated them; raise TelemetryCollector.max_samples "
+            "to replay the full run", stacklevel=2)
+    return FleetReplay(
+        manager=mgr,
+        budget_log=[b.copy() for b in mgr.budget_log],
+        node_cap_schedules=[[c.copy() for c in m.adjust_log]
+                            for m in mgr.managers],
+        final_caps=backend.get_power_caps(),
+        skipped_iterations=skipped)
+
+
+def fleet_replay_matches(live: FleetPowerManager, rp: FleetReplay,
+                         live_caps: Optional[np.ndarray] = None,
+                         log=None) -> bool:
+    """Bit-for-bit comparison of a live fleet run against its replay:
+    budget schedule, every node's cap schedule, and (when given) the final
+    live cap matrix.  ``log`` (e.g. ``print``) receives one line per
+    divergence — the single checker the CI smoke and the benchmark share,
+    so the two cannot drift apart."""
+    log = log or (lambda *_: None)
+    ok = True
+    if len(rp.budget_log) != len(live.budget_log):
+        log(f"MISMATCH: {len(rp.budget_log)} replayed budget steps vs "
+            f"{len(live.budget_log)} live")
+        ok = False
+    for i, (a, b) in enumerate(zip(rp.budget_log, live.budget_log)):
+        if not np.array_equal(a, b):
+            log(f"MISMATCH: budget step {i}: replay={a} live={b}")
+            ok = False
+            break
+    for n, (sched, mgr) in enumerate(zip(rp.node_cap_schedules,
+                                         live.managers)):
+        if len(sched) != len(mgr.adjust_log):
+            log(f"MISMATCH: node {n}: {len(sched)} replayed cap steps vs "
+                f"{len(mgr.adjust_log)} live")
+            ok = False
+        for i, (a, b) in enumerate(zip(sched, mgr.adjust_log)):
+            if not np.array_equal(a, b):
+                log(f"MISMATCH: node {n} cap step {i}: replay={a} live={b}")
+                ok = False
+                break
+    if live_caps is not None and not np.array_equal(rp.final_caps,
+                                                    live_caps):
+        log(f"MISMATCH: final caps: replay={rp.final_caps} live={live_caps}")
+        ok = False
+    return ok
+
+
+# --------------------------------------------------------------------------- #
+# sensor-fidelity studies
+# --------------------------------------------------------------------------- #
+def degrade(trace: TelemetryTrace, sensor: SensorModel) -> TelemetryTrace:
+    """Re-observe a recorded trace through a (worse) sensor — offline, no
+    re-simulation.  Ground truth is taken from ``truth_start`` when the
+    recording sensor was already lossy, else from the recorded starts.
+    The sensor's ``sample_period``/``phase_jitter`` subsample which
+    iterations survive; noise/quantization/dropout degrade the rest.  The
+    returned trace keeps the truth beside the observation so
+    ``detection_report`` can quantify the damage."""
+    out = TelemetryTrace(meta=dict(trace.meta))
+    out.meta["sensor"] = sensor.cfg.to_dict()
+    keep = {it for it in sorted({s.iteration for s in trace.samples})
+            if sensor.take_sample(it)}
+    for s in trace.samples:
+        if s.iteration not in keep:
+            continue
+        truth = s.truth_start if s.truth_start is not None else s.comp_start
+        out.samples.append(dataclasses.replace(
+            s, comp_start=sensor.observe_starts(truth),
+            comp_end=sensor.observe_times(s.comp_end),
+            power=np.asarray(sensor.observe_power(s.power), float),
+            temp=np.asarray(sensor.observe_temp(s.temp), float),
+            truth_start=np.array(truth, float, copy=True)))
+    out.fleet = [fs for fs in trace.fleet if fs.iteration in keep]
+    out.actions = list(trace.actions)
+    return out
+
+
+@dataclass
+class DetectionReport:
+    n_samples: int
+    accuracy: float             # fraction of samples naming the straggler
+    majority_device: int        # argmin of the mean observed lead
+    majority_correct: bool
+    lead_rel_error: float       # mean ‖observed − true lead‖ / true span
+    true_straggler: int
+
+    def row(self) -> str:
+        return (f"samples={self.n_samples};acc={self.accuracy:.3f};"
+                f"majority_ok={int(self.majority_correct)};"
+                f"lead_err={self.lead_rel_error:.4f}")
+
+
+def detection_report(trace: TelemetryTrace, node: int = 0,
+                     mode: str = "sum",
+                     true_straggler: Optional[int] = None) -> DetectionReport:
+    """How well Algorithm 1 does on this trace's observed stream, against
+    the ground truth the trace carries (``truth_start``, or the observed
+    stream itself for a lossless recording)."""
+    samples = trace.node_samples(node)
+    if not samples:
+        raise ValueError(f"trace holds no samples for node {node}")
+    if true_straggler is None:
+        hint = trace.meta.get("straggler_hint", {})
+        if node not in hint:
+            raise ValueError("no straggler_hint in trace meta; pass "
+                             "true_straggler explicitly")
+        true_straggler = int(hint[node])
+    hits, errs, leads = 0, [], []
+    for s in samples:
+        obs = lead_value_detect(s.comp_start, mode)
+        truth_start = (s.truth_start if s.truth_start is not None
+                       else s.comp_start)
+        truth = lead_value_detect(truth_start, mode)
+        hits += int(np.argmin(obs) == true_straggler)
+        span = float(truth.max() - truth.min())
+        errs.append(float(np.sqrt(np.mean((obs - truth) ** 2)))
+                    / max(span, 1e-12))
+        leads.append(obs)
+    mean_lead = np.mean(leads, axis=0)
+    maj = int(np.argmin(mean_lead))
+    return DetectionReport(
+        n_samples=len(samples), accuracy=hits / len(samples),
+        majority_device=maj, majority_correct=(maj == true_straggler),
+        lead_rel_error=float(np.mean(errs)),
+        true_straggler=true_straggler)

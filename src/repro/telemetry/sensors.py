@@ -1,0 +1,161 @@
+"""Noisy sensor models: how telemetry actually reaches a power manager.
+
+On real systems the paper's detection (Algorithm 1) never sees ground
+truth.  Kernel timestamps come from a profiler hook with finite clock
+resolution; power and temperature come from rocm-smi-style counters that
+quantize to 1 W / 1 °C, are sampled at a period (with scheduling jitter on
+the sampling phase), carry additive read noise, and occasionally drop a
+reading entirely.  Every degradation here is a knob, so detection and
+mitigation robustness can be measured as a function of sensor fidelity
+(the telemetry-replay studies in examples/telemetry_study.py).
+
+All stochastic draws come from a dedicated ``numpy`` Generator seeded from
+the sensor config, so a recorded run is reproducible end to end: the same
+seed consumes the same stream regardless of which signals are observed in
+which order per sample (each observation kind draws only when its knob is
+non-zero, and the lossless default draws nothing at all — observations are
+then bit-for-bit the ground truth).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class SensorConfig:
+    """Sensor fidelity knobs.  The default is a lossless oracle sensor:
+    no noise, no quantization, every iteration sampled, nothing dropped —
+    recording through it is exact, which is what the bit-for-bit replay
+    guarantee (replay.py) rests on."""
+
+    noise_time_s: float = 0.0       # additive Gaussian σ on timestamps (s)
+    noise_power_w: float = 0.0      # additive Gaussian σ on power reads (W)
+    noise_temp_c: float = 0.0       # additive Gaussian σ on temp reads (°C)
+    quant_time_s: float = 0.0       # timestamp clock resolution (0 = off)
+    quant_power_w: float = 0.0      # power counter step (rocm-smi: 1 W)
+    quant_temp_c: float = 0.0       # temperature counter step (1 °C)
+    sample_period: int = 1          # observe 1 of every N iterations
+    phase_jitter: int = 0           # ± iterations of sampling-phase slack
+    dropout_p: float = 0.0          # P(a device's sample is lost) per read
+    seed: int = 0
+
+    @property
+    def lossless(self) -> bool:
+        return (self.noise_time_s == 0 and self.noise_power_w == 0
+                and self.noise_temp_c == 0 and self.quant_time_s == 0
+                and self.quant_power_w == 0 and self.quant_temp_c == 0
+                and self.sample_period <= 1 and self.phase_jitter == 0
+                and self.dropout_p == 0)
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "SensorConfig":
+        names = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in names})
+
+
+LOSSLESS = SensorConfig()
+
+# A plausible rocm-smi-style counter stack at the paper's Table-II default
+# sampling period.  The constants are placeholders pending calibration
+# against real rocm-smi captures (see ROADMAP): 1 W / 1 °C register steps
+# are the documented interface; noise levels are set to the scale of the
+# simulator's kernel durations (~1 ms median).
+ROCM_SMI_LIKE = SensorConfig(
+    noise_time_s=1e-3, noise_power_w=3.0, noise_temp_c=0.5,
+    quant_time_s=1e-5, quant_power_w=1.0, quant_temp_c=1.0,
+    sample_period=10, phase_jitter=2, dropout_p=0.002,
+)
+
+
+def _quantize(x: np.ndarray, step: float) -> np.ndarray:
+    return np.round(x / step) * step if step > 0 else x
+
+
+class SensorModel:
+    """A stateful observer over one node's ground-truth signals.
+
+    ``take_sample`` decides which iterations are observed (period + phase
+    jitter); the ``observe_*`` methods degrade the signals.  Instantiate
+    one model per recorded node so per-node streams stay independent and
+    reproducible (``seed_offset`` separates them under one config)."""
+
+    def __init__(self, cfg: SensorConfig = LOSSLESS, seed_offset: int = 0):
+        self.cfg = cfg
+        self.rng = np.random.default_rng(cfg.seed + 15485863 * (seed_offset + 1))
+        self._next_sample = 0
+
+    # ------------------------------------------------------------- sampling
+    def take_sample(self, iteration: int) -> bool:
+        """True when this iteration is observed.  Without jitter the poll
+        grid is anchored to absolute iteration numbers (``iteration %
+        sample_period == 0``) — exactly the oracle manager's sampling
+        rule, so a lossless sensor at the manager's period reproduces the
+        oracle schedule no matter when the manager was enabled.  With
+        ``phase_jitter`` the next sample lands ``sample_period ± jitter``
+        iterations after the previous one — the drift a wall-clock poller
+        shows against the iteration clock."""
+        cfg = self.cfg
+        if cfg.sample_period <= 1 and cfg.phase_jitter == 0:
+            return True
+        if cfg.phase_jitter == 0:
+            return iteration % cfg.sample_period == 0
+        if iteration < self._next_sample:
+            return False
+        j = int(self.rng.integers(-cfg.phase_jitter, cfg.phase_jitter + 1))
+        self._next_sample = iteration + max(1, cfg.sample_period + j)
+        return True
+
+    # ---------------------------------------------------------- observation
+    def observe_times(self, t: np.ndarray) -> np.ndarray:
+        """Timestamps (any shape): additive noise then clock quantization.
+        Lossless config returns the input unchanged (no RNG consumed)."""
+        cfg = self.cfg
+        if cfg.noise_time_s == 0 and cfg.quant_time_s == 0:
+            return t
+        out = np.asarray(t, float)
+        if cfg.noise_time_s > 0:
+            out = out + self.rng.normal(0.0, cfg.noise_time_s, out.shape)
+        return _quantize(out, cfg.quant_time_s)
+
+    def observe_power(self, p: np.ndarray) -> np.ndarray:
+        cfg = self.cfg
+        if cfg.noise_power_w == 0 and cfg.quant_power_w == 0:
+            return p
+        out = np.asarray(p, float)
+        if cfg.noise_power_w > 0:
+            out = out + self.rng.normal(0.0, cfg.noise_power_w, out.shape)
+        return _quantize(out, cfg.quant_power_w)
+
+    def observe_temp(self, t: np.ndarray) -> np.ndarray:
+        cfg = self.cfg
+        if cfg.noise_temp_c == 0 and cfg.quant_temp_c == 0:
+            return t
+        out = np.asarray(t, float)
+        if cfg.noise_temp_c > 0:
+            out = out + self.rng.normal(0.0, cfg.noise_temp_c, out.shape)
+        return _quantize(out, cfg.quant_temp_c)
+
+    def drop_mask(self, n_devices: int) -> np.ndarray:
+        """(G,) bool: True where this sample's per-device reading is lost."""
+        if self.cfg.dropout_p <= 0:
+            return np.zeros(n_devices, bool)
+        return self.rng.random(n_devices) < self.cfg.dropout_p
+
+    def observe_starts(self, start: np.ndarray) -> np.ndarray:
+        """The Algorithm-1 input path: (G, K) kernel-start timestamps →
+        noisy/quantized observation with dropped devices as NaN rows
+        (lead_value_detect maps NaN starts to zero lead, so a dropped
+        device is indistinguishable from the straggler that sample — a
+        real failure mode the robustness studies quantify)."""
+        out = self.observe_times(start)
+        drop = self.drop_mask(np.asarray(start).shape[0])
+        if drop.any():
+            out = np.array(out, float, copy=True)
+            out[drop] = np.nan
+        return out

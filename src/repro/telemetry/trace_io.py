@@ -1,0 +1,228 @@
+"""Versioned JSONL trace persistence + Chrome-trace export.
+
+Format (one JSON object per line):
+
+  line 1   {"format": "lit-silicon-telemetry", "version": 1, "meta": {...}}
+  then     {"type": "node",  "it": ..., "node": ..., "start": [[...]], ...}
+           {"type": "fleet", "it": ..., "lead": [...], ...}
+           {"type": "action", "it": ..., "kind": ..., "values": [...]}
+
+Floats round-trip exactly (json emits the shortest repr that parses back to
+the same IEEE-754 double), and NaN — not valid JSON — is encoded as null,
+so a lossless recording survives save/load bit-for-bit; the offline replay
+guarantee (replay.py) is tested *through* this round trip.
+
+``export_chrome_trace`` writes the Chrome Trace Event format (load in
+Perfetto / chrome://tracing): one process per node, one thread per device,
+complete ("X") events per kernel, and counter ("C") tracks for power,
+temperature and caps.  Unsampled iterations are elided, so the timeline is
+the concatenation of sampled intervals.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.telemetry.collector import (FleetSample, ManagerAction,
+                                       NodeSample, TelemetryCollector)
+
+TRACE_FORMAT = "lit-silicon-telemetry"
+TRACE_VERSION = 1
+
+
+def _enc(a) -> object:
+    """numpy -> JSON-safe nested lists with NaN as null."""
+    if a is None:
+        return None
+    arr = np.asarray(a, float)
+    return np.where(np.isnan(arr), None, arr.astype(object)).tolist()
+
+
+def _dec(x, ndmin: int = 1) -> Optional[np.ndarray]:
+    """JSON nested lists (null = NaN) -> float ndarray."""
+    if x is None:
+        return None
+    arr = np.array(x, dtype=object)
+    out = np.where(arr == None, np.nan, arr).astype(float)    # noqa: E711
+    return np.atleast_1d(out) if ndmin == 1 else out
+
+
+@dataclass
+class TelemetryTrace:
+    """An in-memory trace: what ``load_trace`` returns and what the offline
+    replay / degradation tooling consumes.  Mirrors the collector's buffers
+    minus the ring-buffer bound."""
+
+    meta: Dict = field(default_factory=dict)
+    samples: List[NodeSample] = field(default_factory=list)
+    fleet: List[FleetSample] = field(default_factory=list)
+    actions: List[ManagerAction] = field(default_factory=list)
+
+    @classmethod
+    def from_collector(cls, col: TelemetryCollector) -> "TelemetryTrace":
+        return cls(meta=dict(col.meta), samples=list(col.samples),
+                   fleet=list(col.fleet), actions=list(col.actions))
+
+    def node_samples(self, node: int = 0) -> List[NodeSample]:
+        return [s for s in self.samples if s.node == node]
+
+    @property
+    def n_nodes(self) -> int:
+        return int(self.meta.get("n_nodes", 1))
+
+    @property
+    def n_devices(self) -> int:
+        if "n_devices" in self.meta:
+            return int(self.meta["n_devices"])
+        return int(self.samples[0].power.shape[0]) if self.samples else 0
+
+
+def save_trace(src, path: str, extra_meta: Optional[Dict] = None) -> int:
+    """Write a collector or TelemetryTrace as JSONL; returns line count."""
+    trace = (TelemetryTrace.from_collector(src)
+             if isinstance(src, TelemetryCollector) else src)
+    meta = dict(trace.meta)
+    if extra_meta:
+        meta.update(extra_meta)
+    # straggler_hint keys are ints in memory; JSON makes them strings —
+    # normalize here so save/load/save is stable
+    if isinstance(meta.get("straggler_hint"), dict):
+        meta["straggler_hint"] = {str(k): v for k, v
+                                  in meta["straggler_hint"].items()}
+    lines = 0
+    with open(path, "w") as f:
+        f.write(json.dumps({"format": TRACE_FORMAT,
+                            "version": TRACE_VERSION, "meta": meta}) + "\n")
+        lines += 1
+        for s in trace.samples:
+            f.write(json.dumps({
+                "type": "node", "it": s.iteration, "node": s.node,
+                "t_local": s.t_local, "t_wall": s.t_wall,
+                "start": _enc(s.comp_start), "end": _enc(s.comp_end),
+                "overlap": _enc(s.overlap),
+                "power": _enc(s.power), "temp": _enc(s.temp),
+                "freq": _enc(s.freq), "cap": _enc(s.cap),
+                "truth_start": _enc(s.truth_start)}) + "\n")
+            lines += 1
+        for fs in trace.fleet:
+            f.write(json.dumps({
+                "type": "fleet", "it": fs.iteration, "t_fleet": fs.t_fleet,
+                "lead": _enc(fs.lead), "t_local": _enc(fs.t_local),
+                "node_power": _enc(fs.node_power),
+                "topology": fs.topology}) + "\n")
+            lines += 1
+        for a in trace.actions:
+            f.write(json.dumps({
+                "type": "action", "it": a.iteration, "kind": a.kind,
+                "node": a.node, "values": _enc(a.values)}) + "\n")
+            lines += 1
+    return lines
+
+
+def load_trace(path: str) -> TelemetryTrace:
+    with open(path) as f:
+        header = json.loads(f.readline())
+        if header.get("format") != TRACE_FORMAT:
+            raise ValueError(f"{path}: not a {TRACE_FORMAT} trace "
+                             f"(format={header.get('format')!r})")
+        if "version" not in header:
+            raise ValueError(f"{path}: trace header carries no version")
+        if int(header["version"]) > TRACE_VERSION:
+            raise ValueError(
+                f"{path}: trace version {header['version']} is newer than "
+                f"supported version {TRACE_VERSION}")
+        meta = header.get("meta", {})
+        if isinstance(meta.get("straggler_hint"), dict):
+            meta["straggler_hint"] = {int(k): v for k, v
+                                      in meta["straggler_hint"].items()}
+        trace = TelemetryTrace(meta=meta)
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            r = json.loads(line)
+            if r["type"] == "node":
+                trace.samples.append(NodeSample(
+                    iteration=r["it"], node=r["node"],
+                    t_local=r["t_local"], t_wall=r["t_wall"],
+                    comp_start=_dec(r["start"], ndmin=2),
+                    comp_end=_dec(r["end"], ndmin=2),
+                    overlap=_dec(r["overlap"], ndmin=2),
+                    power=_dec(r["power"]), temp=_dec(r["temp"]),
+                    freq=_dec(r["freq"]), cap=_dec(r["cap"]),
+                    truth_start=_dec(r.get("truth_start"), ndmin=2)))
+            elif r["type"] == "fleet":
+                trace.fleet.append(FleetSample(
+                    iteration=r["it"], t_fleet=r["t_fleet"],
+                    lead=_dec(r["lead"]), t_local=_dec(r["t_local"]),
+                    node_power=_dec(r["node_power"]),
+                    topology=r["topology"]))
+            elif r["type"] == "action":
+                trace.actions.append(ManagerAction(
+                    iteration=r["it"], kind=r["kind"], node=r["node"],
+                    values=_dec(r["values"])))
+    return trace
+
+
+# --------------------------------------------------------------------------- #
+# Chrome trace (Perfetto / chrome://tracing)
+# --------------------------------------------------------------------------- #
+def export_chrome_trace(src, path: str, max_samples: Optional[int] = None,
+                        counters: bool = True) -> int:
+    """Write trace-event JSON; returns the number of events emitted.
+
+    Timestamps are microseconds on a per-node clock that concatenates the
+    *sampled* intervals (elided iterations collapse), which keeps kernels
+    visually aligned across devices within each iteration.
+    """
+    trace = (TelemetryTrace.from_collector(src)
+             if isinstance(src, TelemetryCollector) else src)
+    events: List[dict] = []
+    comp_names = trace.meta.get("comp_names") or []
+    offsets: Dict[int, float] = {}
+    seen_nodes, seen_tids = set(), set()
+    samples = trace.samples[-max_samples:] if max_samples else trace.samples
+    for s in samples:
+        off = offsets.setdefault(s.node, 0.0)
+        if s.node not in seen_nodes:
+            seen_nodes.add(s.node)
+            events.append({"ph": "M", "name": "process_name", "pid": s.node,
+                           "tid": 0, "args": {"name": f"node{s.node}"}})
+        G, K = s.comp_start.shape
+        for g in range(G):
+            if (s.node, g) not in seen_tids:
+                seen_tids.add((s.node, g))
+                events.append({"ph": "M", "name": "thread_name",
+                               "pid": s.node, "tid": g,
+                               "args": {"name": f"gpu{g}"}})
+            for k in range(K):
+                t0, t1 = s.comp_start[g, k], s.comp_end[g, k]
+                if np.isnan(t0) or np.isnan(t1):
+                    continue
+                name = comp_names[k] if k < len(comp_names) else f"k{k}"
+                events.append({
+                    "ph": "X", "name": name, "cat": "compute",
+                    "pid": s.node, "tid": g,
+                    "ts": (off + t0) * 1e6,
+                    "dur": max(t1 - t0, 0.0) * 1e6,
+                    "args": {"iter": s.iteration,
+                             "overlap_s": (float(s.overlap[g, k])
+                                           if s.overlap.size else 0.0)}})
+        if counters:
+            ts = off * 1e6
+            for cname, vec in (("power_w", s.power), ("temp_c", s.temp),
+                               ("cap_w", s.cap), ("freq_ghz", s.freq)):
+                vals = {f"gpu{g}": (None if np.isnan(v) else float(v))
+                        for g, v in enumerate(np.asarray(vec))}
+                events.append({"ph": "C", "name": cname, "pid": s.node,
+                               "tid": 0, "ts": ts, "args": vals})
+        offsets[s.node] = off + s.t_wall
+    with open(path, "w") as f:
+        json.dump({"traceEvents": events,
+                   "displayTimeUnit": "ms",
+                   "otherData": {"format": TRACE_FORMAT,
+                                 "version": TRACE_VERSION}}, f)
+    return len(events)

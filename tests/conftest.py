@@ -8,6 +8,9 @@ import numpy as np
 import pytest
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+# repo root too, so tests can reuse benchmark builders (one setup, no
+# drifting copies — e.g. benchmarks.telemetry_bench.fleet_cfg)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 try:                                   # property tests prefer the real thing
     import hypothesis                  # noqa: F401

@@ -52,6 +52,52 @@ def test_straggler_is_latest_starter():
         assert lead_value_detect(t)[s] == pytest.approx(0.0)
 
 
+def test_aggregate_lead_max_mode():
+    lead = np.array([[1.0, 5.0, 2.0], [0.0, 0.0, 7.0]])
+    np.testing.assert_array_equal(aggregate_lead(lead, "max"), [5.0, 7.0])
+
+
+def test_aggregate_lead_last_mode():
+    lead = np.array([[1.0, 5.0, 2.0], [0.0, 0.0, 7.0]])
+    np.testing.assert_array_equal(aggregate_lead(lead, "last"), [2.0, 7.0])
+
+
+def test_aggregate_lead_unknown_mode_raises():
+    with pytest.raises(ValueError, match="unknown aggregation"):
+        aggregate_lead(np.zeros((2, 3)), "median")
+
+
+def test_all_nan_kernel_column_zero_lead_without_warning():
+    """A kernel no device reported (sensor dropout / never-ran) must not
+    poison the aggregate or emit an all-NaN-slice warning."""
+    t = np.array([[0.0, np.nan, 2.0], [1.0, np.nan, 2.5]])
+    import warnings
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        lead = lead_values(t)
+    np.testing.assert_array_equal(lead[:, 1], [0.0, 0.0])
+    np.testing.assert_allclose(lead[:, 0], [1.0, 0.0])
+    # finite columns unchanged by the NaN column
+    np.testing.assert_allclose(lead_value_detect(t), [1.5, 0.0])
+
+
+def test_dropped_device_row_gets_zero_lead():
+    t = np.array([[np.nan, np.nan], [0.0, 1.0], [0.2, 1.3]])
+    lead = lead_values(t)
+    np.testing.assert_array_equal(lead[0], [0.0, 0.0])
+    # zero lead ties the dropped device with the true straggler (device 2)
+    # and argmin names the dropped one — why dropout corrupts detection
+    assert straggler_index(t) == 0
+
+
+def test_single_device_trace_zero_lead():
+    t = np.array([[0.0, 1.0, 2.0]])
+    np.testing.assert_array_equal(lead_values(t), [[0.0, 0.0, 0.0]])
+    for mode in ("sum", "max", "last"):
+        np.testing.assert_array_equal(lead_value_detect(t, mode), [0.0])
+    assert straggler_index(t) == 0
+
+
 def test_classify_overlap():
     o = np.array([[0.0, 0.5, 1.0], [0.0, 0.1, 1.0]])
     const = classify_overlap(o, tol=0.15)

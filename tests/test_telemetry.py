@@ -1,0 +1,426 @@
+"""Telemetry subsystem: sensor models, trace recording/persistence, and the
+two replay guarantees — lossless traces replay the live cap schedule
+bit-for-bit (all engines), and detection degrades measurably (monotonically
+in expectation) as sensor fidelity drops."""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from benchmarks.telemetry_bench import fleet_cfg
+from conftest import small_node, small_workload
+from repro.core.backends import ClusterSimBackend, SimBackend
+from repro.core.c3sim import SimConfig
+from repro.core.cluster import ClusterConfig, ClusterSim
+from repro.core.manager import (ManagerConfig, PowerManager,
+                                run_closed_loop, run_fleet_closed_loop)
+from repro.core.thermal import MI300X_PRESET
+from repro.telemetry import (LOSSLESS, SensorConfig, SensorModel,
+                             TelemetryCollector, TelemetryTrace, degrade,
+                             detection_report, export_chrome_trace,
+                             load_trace, replay_fleet, replay_node,
+                             save_trace)
+
+
+def mgr_cfg(**kw):
+    kw.setdefault("use_case", "gpu-red")
+    kw.setdefault("sampling_period", 2)
+    kw.setdefault("warmup", 3)
+    kw.setdefault("window_size", 2)
+    return ManagerConfig(**kw)
+
+
+@pytest.fixture(scope="module")
+def recorded_node():
+    """A settled 8-GPU node recorded losslessly for 60 iterations — the
+    shared source for the degradation studies."""
+    node = small_node(seed=1)
+    col = TelemetryCollector(max_samples=256).attach_node(node)
+    for _ in range(60):
+        node.step()
+    return node, TelemetryTrace.from_collector(col)
+
+
+# --------------------------------------------------------------------------- #
+# sensors
+# --------------------------------------------------------------------------- #
+def test_lossless_sensor_is_identity():
+    s = SensorModel(LOSSLESS)
+    t = np.arange(24.0).reshape(4, 6)
+    out = s.observe_starts(t)
+    assert out is t                       # no copy, no RNG consumed
+    assert all(s.take_sample(i) for i in range(10))
+    assert not s.drop_mask(8).any()
+
+
+def test_sensor_noise_and_quantization():
+    s = SensorModel(SensorConfig(noise_time_s=1e-3, quant_time_s=1e-4,
+                                 seed=0))
+    t = np.linspace(0, 1, 50).reshape(5, 10)
+    out = s.observe_starts(t)
+    assert out.shape == t.shape
+    assert not np.allclose(out, t)        # noise applied
+    grid = np.round(out / 1e-4) * 1e-4
+    np.testing.assert_allclose(out, grid, atol=1e-12)   # on the clock grid
+    assert np.abs(out - t).max() < 6e-3   # bounded by ~5 sigma + quantum
+    # power/temp counters quantize to their own steps
+    q = SensorModel(SensorConfig(quant_power_w=1.0, quant_temp_c=1.0))
+    assert np.array_equal(q.observe_power(np.array([700.4, 699.6])),
+                          [700.0, 700.0])
+    assert np.array_equal(q.observe_temp(np.array([61.2])), [61.0])
+
+
+def test_sensor_dropout_marks_devices_nan():
+    s = SensorModel(SensorConfig(dropout_p=0.5, seed=2))
+    t = np.ones((8, 20))
+    dropped_any = False
+    for _ in range(10):
+        out = s.observe_starts(t)
+        rows = np.isnan(out).all(axis=1)
+        # a device's sample is dropped whole, never partially
+        assert (np.isnan(out).any(axis=1) == rows).all()
+        dropped_any |= rows.any()
+    assert dropped_any
+
+
+def test_sensor_sampling_period_and_jitter():
+    s = SensorModel(SensorConfig(sample_period=10, phase_jitter=2, seed=1))
+    sampled = [i for i in range(200) if s.take_sample(i)]
+    assert sampled[0] == 0
+    gaps = np.diff(sampled)
+    assert (gaps >= 8).all() and (gaps <= 12).all()
+    assert len(set(gaps)) > 1             # jitter actually moves the phase
+    # no jitter: exact period
+    s2 = SensorModel(SensorConfig(sample_period=10))
+    assert [i for i in range(50) if s2.take_sample(i)] == [0, 10, 20, 30, 40]
+
+
+def test_sensor_reproducible():
+    t = np.linspace(0, 1, 40).reshape(4, 10)
+    cfg = SensorConfig(noise_time_s=1e-3, dropout_p=0.1, seed=7)
+    a = SensorModel(cfg).observe_starts(t)
+    b = SensorModel(cfg).observe_starts(t)
+    np.testing.assert_array_equal(a, b)
+
+
+# --------------------------------------------------------------------------- #
+# collector
+# --------------------------------------------------------------------------- #
+def test_collector_ring_buffer_bound():
+    node = small_node(seed=2, n_layers=8)
+    col = TelemetryCollector(max_samples=10).attach_node(node)
+    for _ in range(25):
+        node.step()
+    assert len(col.samples) == 10         # bounded
+    its = [s.iteration for s in col.samples]
+    assert its == list(range(15, 25))     # most recent, recording-relative
+
+
+def test_clear_resets_sensor_streams():
+    """Recording after clear() must be bit-for-bit what a fresh collector
+    records: the sensors' RNG streams restart."""
+    cfg = SensorConfig(noise_time_s=1e-3, dropout_p=0.1, seed=5)
+    col = TelemetryCollector(sensor_cfg=cfg)
+    x = np.linspace(0, 1, 16).reshape(2, 8)
+    a = col.sensor_for(0).observe_starts(x)     # consumes the stream
+    col.clear()
+    b = col.sensor_for(0).observe_starts(x)
+    np.testing.assert_array_equal(a, b)
+
+
+def test_cluster_ring_buffers_cover_same_window():
+    """Node and fleet rings must retain the same iteration window even
+    though a cluster writes N node samples per fleet sample."""
+    wl = small_workload(n_layers=8)
+    cl = ClusterSim(wl, MI300X_PRESET, SimConfig(seed=1, comm_gbps=40.0),
+                    ClusterConfig(n_nodes=2, straggler_boost=1.28),
+                    devices_per_node=8, seed=5)
+    col = TelemetryCollector(max_samples=5).attach_cluster(cl)
+    for _ in range(12):
+        cl.step()
+    assert len(col.fleet) == 5
+    assert len(col.samples) == 10               # 2 nodes x 5 iterations
+    assert ({s.iteration for s in col.samples}
+            == {f.iteration for f in col.fleet} == set(range(7, 12)))
+
+
+def test_collector_rebases_iterations_to_recording_start():
+    node = small_node(seed=2, n_layers=8)
+    assert node.iteration > 0             # warmup already consumed some
+    col = TelemetryCollector().attach_node(node)
+    node.step()
+    assert col.samples[0].iteration == 0
+
+
+def test_collector_does_not_perturb_execution():
+    a = small_node(seed=3, n_layers=8)
+    b = small_node(seed=3, n_layers=8)
+    TelemetryCollector().attach_node(b)
+    for _ in range(10):
+        ta = a.step()
+        tb = b.step()
+    np.testing.assert_array_equal(ta.comp_start, tb.comp_start)
+    np.testing.assert_array_equal(a.state.temp, b.state.temp)
+
+
+def test_collector_records_node_state_and_meta(recorded_node):
+    node, trace = recorded_node
+    s = trace.samples[-1]
+    assert s.comp_start.shape == (8, len(trace.meta["comp_names"]))
+    assert s.power.shape == (8,) and s.cap.shape == (8,)
+    np.testing.assert_array_equal(s.cap, node.state.cap)
+    assert trace.meta["straggler_hint"][0] == node.thermal.straggler_hint
+    assert trace.meta["tdp"] == node.preset.tdp
+
+
+# --------------------------------------------------------------------------- #
+# trace io
+# --------------------------------------------------------------------------- #
+def test_jsonl_roundtrip_is_exact(recorded_node, tmp_path):
+    _, trace = recorded_node
+    # poison one reading with NaN to exercise the null encoding
+    trace.samples[0].comp_start[2, 5] = np.nan
+    p = str(tmp_path / "trace.jsonl")
+    save_trace(trace, p)
+    back = load_trace(p)
+    assert len(back.samples) == len(trace.samples)
+    for a, b in zip(trace.samples, back.samples):
+        assert a.iteration == b.iteration
+        np.testing.assert_array_equal(a.comp_start, b.comp_start)
+        np.testing.assert_array_equal(a.power, b.power)
+        np.testing.assert_array_equal(a.cap, b.cap)
+    assert back.meta["comp_names"] == trace.meta["comp_names"]
+    trace.samples[0].comp_start[2, 5] = 0.0   # unpoison the shared fixture
+
+
+def test_trace_format_guard(tmp_path):
+    p = str(tmp_path / "bogus.jsonl")
+    with open(p, "w") as f:
+        f.write(json.dumps({"format": "something-else", "version": 1}) + "\n")
+    with pytest.raises(ValueError, match="not a lit-silicon-telemetry"):
+        load_trace(p)
+    with open(p, "w") as f:
+        f.write(json.dumps({"format": "lit-silicon-telemetry",
+                            "version": 99, "meta": {}}) + "\n")
+    with pytest.raises(ValueError, match="newer than supported"):
+        load_trace(p)
+    with open(p, "w") as f:
+        f.write(json.dumps({"format": "lit-silicon-telemetry",
+                            "meta": {}}) + "\n")
+    with pytest.raises(ValueError, match="no version"):
+        load_trace(p)
+
+
+def test_chrome_trace_export(recorded_node, tmp_path):
+    _, trace = recorded_node
+    p = str(tmp_path / "trace.chrome.json")
+    n = export_chrome_trace(trace, p, max_samples=3)
+    assert n > 0
+    with open(p) as f:
+        doc = json.load(f)
+    phases = {e["ph"] for e in doc["traceEvents"]}
+    assert {"X", "C", "M"} <= phases      # kernels, counters, names
+    xs = [e for e in doc["traceEvents"] if e["ph"] == "X"]
+    assert all(e["dur"] >= 0 for e in xs)
+    assert {e["tid"] for e in xs} == set(range(8))
+
+
+# --------------------------------------------------------------------------- #
+# replay: the bit-for-bit guarantee (acceptance criterion)
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("engine", ["event", "batched", "vector"])
+def test_replay_reproduces_live_caps_bit_for_bit(engine, tmp_path):
+    node = small_node(seed=1, n_layers=8, engine=engine)
+    col = TelemetryCollector(max_samples=4096)
+    live = run_closed_loop(SimBackend(node, collector=col), mgr_cfg(),
+                           80, tune_after=20, collector=col)
+    p = str(tmp_path / "trace.jsonl")
+    save_trace(col, p)                    # through disk: JSONL is lossless
+    rp = replay_node(load_trace(p), mgr_cfg(), tune_after=20)
+    assert len(rp.cap_schedule) == len(live.adjust_log) > 0
+    for a, b in zip(rp.cap_schedule, live.adjust_log):
+        np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(rp.final_caps,
+                                  live.backend.get_power_caps())
+    # the recorded manager actions are that same schedule
+    caps_actions = [a for a in col.actions if a.kind == "caps"]
+    assert len(caps_actions) == len(live.adjust_log)
+    for act, cap in zip(caps_actions, live.adjust_log):
+        np.testing.assert_array_equal(act.values, cap)
+
+
+@pytest.mark.parametrize("engine", ["batched", "vector"])
+def test_fleet_replay_reproduces_live_caps_bit_for_bit(engine, tmp_path):
+    wl = small_workload(n_layers=8)
+    cl = ClusterSim(wl, MI300X_PRESET, SimConfig(seed=1, comm_gbps=40.0),
+                    ClusterConfig(n_nodes=2, straggler_boost=1.28,
+                                  engine=engine),
+                    devices_per_node=8, seed=5)
+    for n in range(2):
+        cl.set_node_caps(n, np.full(8, 700.0))
+    col = TelemetryCollector(max_samples=4096).attach_cluster(cl)
+    live = run_fleet_closed_loop(ClusterSimBackend(cl), fleet_cfg(2),
+                                 60, tune_after=10, collector=col)
+    # the trace carries the mitigation decisions at both scopes, with the
+    # per-node cap actions attributed to their node
+    assert (sum(1 for a in col.actions if a.kind == "budgets")
+            == len(live.budget_log))
+    for n, lm in enumerate(live.managers):
+        acts = [a for a in col.actions
+                if a.kind == "caps" and a.node == n]
+        assert len(acts) == len(lm.adjust_log)
+        for act, cap in zip(acts, lm.adjust_log):
+            np.testing.assert_array_equal(act.values, cap)
+    p = str(tmp_path / "fleet.jsonl")
+    save_trace(col, p)
+    rp = replay_fleet(load_trace(p), fleet_cfg(2), tune_after=10)
+    assert len(rp.budget_log) == len(live.budget_log) > 0
+    for a, b in zip(rp.budget_log, live.budget_log):
+        np.testing.assert_array_equal(a, b)
+    for sched, lm in zip(rp.node_cap_schedules, live.managers):
+        assert len(sched) == len(lm.adjust_log) > 0
+        for a, b in zip(sched, lm.adjust_log):
+            np.testing.assert_array_equal(a, b)
+    live_caps = np.stack([cl.get_node_caps(n) for n in range(2)])
+    np.testing.assert_array_equal(rp.final_caps, live_caps)
+
+
+def test_fleet_replay_flags_truncated_iterations(tmp_path):
+    """A fleet sample whose node samples were evicted must surface as a
+    truncation diagnostic, not as a silent skip."""
+    wl = small_workload(n_layers=8)
+    cl = ClusterSim(wl, MI300X_PRESET, SimConfig(seed=1, comm_gbps=40.0),
+                    ClusterConfig(n_nodes=2, straggler_boost=1.28),
+                    devices_per_node=8, seed=5)
+    col = TelemetryCollector(max_samples=64).attach_cluster(cl)
+    for _ in range(12):
+        cl.step()
+    trace = TelemetryTrace.from_collector(col)
+    cut = trace.fleet[0].iteration
+    trace.samples = [s for s in trace.samples if s.iteration != cut]
+    with pytest.warns(UserWarning, match="truncated"):
+        rp = replay_fleet(trace, fleet_cfg(2))
+    assert rp.skipped_iterations == [cut]
+
+
+def test_replay_emits_live_caps_file_format(tmp_path):
+    """Fig-12 workflow closure: a replayed schedule exports the same caps
+    file a live manager writes, and a live manager can import it."""
+    node = small_node(seed=1, n_layers=8)
+    col = TelemetryCollector(max_samples=4096)
+    live = run_closed_loop(SimBackend(node, collector=col), mgr_cfg(),
+                           80, tune_after=20)
+    rp = replay_node(TelemetryTrace.from_collector(col), mgr_cfg(),
+                     tune_after=20)
+    p_live = str(tmp_path / "caps_live.json")
+    p_replay = str(tmp_path / "caps_replay.json")
+    live.export_caps(p_live)
+    rp.export_caps(p_replay)
+    with open(p_live) as f:
+        doc_live = json.load(f)
+    with open(p_replay) as f:
+        doc_replay = json.load(f)
+    assert doc_live == doc_replay         # identical schedule, same format
+    node2 = small_node(seed=1, n_layers=8)
+    mgr2 = PowerManager(SimBackend(node2), mgr_cfg())
+    mgr2.import_caps(p_replay)
+    np.testing.assert_allclose(node2.state.cap, live.backend.get_power_caps())
+    assert not mgr2.enabled               # warm-started: detection skipped
+
+
+# --------------------------------------------------------------------------- #
+# manager sensor path
+# --------------------------------------------------------------------------- #
+# tune_after=21 is deliberately misaligned with the period-2 grid: the
+# sensor's poll grid must anchor to absolute iterations (like the oracle's
+# modulo), not to whenever the manager happened to be enabled
+@pytest.mark.parametrize("tune_after", [20, 21])
+def test_lossless_sensor_path_matches_oracle_bit_for_bit(tune_after):
+    oracle_node = small_node(seed=4, n_layers=8)
+    oracle = run_closed_loop(SimBackend(oracle_node), mgr_cfg(),
+                             80, tune_after=tune_after)
+    sensed_node = small_node(seed=4, n_layers=8)
+    sensor = SensorModel(SensorConfig(sample_period=2))
+    sensed = run_closed_loop(SimBackend(sensed_node), mgr_cfg(),
+                             80, tune_after=tune_after, sensor=sensor)
+    assert len(sensed.adjust_log) == len(oracle.adjust_log) > 0
+    for a, b in zip(sensed.adjust_log, oracle.adjust_log):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_noisy_sensor_path_stays_within_bounds():
+    node = small_node(seed=4, n_layers=8)
+    sensor = SensorModel(SensorConfig(noise_time_s=2e-3, quant_time_s=1e-5,
+                                      sample_period=2, dropout_p=0.01,
+                                      seed=9))
+    mgr = run_closed_loop(SimBackend(node), mgr_cfg(), 80, tune_after=20,
+                          sensor=sensor)
+    assert len(mgr.adjust_log) > 0        # noisy stream still drives caps
+    caps = node.state.cap
+    assert (caps <= node.preset.tdp + 1e-6).all()
+    assert (caps > 0).all()
+
+
+# --------------------------------------------------------------------------- #
+# detection degradation (acceptance criterion)
+# --------------------------------------------------------------------------- #
+SIGMAS = (0.0, 0.002, 0.01, 0.05, 0.2, 0.8)
+
+
+def test_detection_accuracy_degrades_monotonically_with_noise(recorded_node):
+    _, trace = recorded_node
+    accs, errs = [], []
+    for sigma in SIGMAS:
+        reports = [detection_report(degrade(trace, SensorModel(
+            SensorConfig(noise_time_s=sigma, seed=s)))) for s in range(5)]
+        accs.append(float(np.mean([r.accuracy for r in reports])))
+        errs.append(float(np.mean([r.lead_rel_error for r in reports])))
+    assert accs[0] == 1.0                 # lossless: perfect detection
+    assert errs[0] == 0.0
+    # monotone-in-expectation: averaged over sensor seeds, never improves
+    # as noise grows (small slack for the finite-seed average)
+    for lo, hi in zip(accs, accs[1:]):
+        assert hi <= lo + 0.05
+    for lo, hi in zip(errs, errs[1:]):
+        assert hi >= lo - 1e-9            # lead error strictly noise-driven
+    assert accs[-1] < 0.5                 # heavy noise genuinely breaks it
+
+
+def test_detection_degrades_with_sampling_period(recorded_node):
+    """At high noise, fewer samples -> less reliable majority vote."""
+    _, trace = recorded_node
+    rates = []
+    for period in (1, 5, 15, 30):
+        maj = [detection_report(degrade(trace, SensorModel(SensorConfig(
+            noise_time_s=0.1, sample_period=period, seed=s))))
+            .majority_correct for s in range(12)]
+        rates.append(float(np.mean(maj)))
+    for lo, hi in zip(rates, rates[1:]):
+        assert hi <= lo + 0.1
+    assert rates[0] == 1.0
+    assert rates[-1] < rates[0]
+
+
+def test_straggler_identified_at_paper_default_sampling(recorded_node):
+    """Table-II sampling period (10) + moderate noise (10x the median
+    kernel duration) + phase jitter: the straggler is still named."""
+    node, trace = recorded_node
+    for seed in range(5):
+        d = degrade(trace, SensorModel(SensorConfig(
+            noise_time_s=0.01, sample_period=10, phase_jitter=2,
+            quant_time_s=1e-5, seed=seed)))
+        rep = detection_report(d)
+        assert rep.majority_correct
+        assert rep.accuracy == 1.0
+        assert rep.true_straggler == node.thermal.straggler_hint
+
+
+def test_degrade_keeps_truth_for_error_accounting(recorded_node):
+    _, trace = recorded_node
+    d = degrade(trace, SensorModel(SensorConfig(noise_time_s=0.01, seed=0)))
+    s = d.samples[0]
+    assert s.truth_start is not None
+    assert not np.allclose(s.comp_start, s.truth_start)
+    src = trace.samples[0]
+    np.testing.assert_array_equal(s.truth_start, src.comp_start)
