@@ -2,6 +2,13 @@
 placement, and parallelism topology, plus the hierarchical manager's
 recovery — the datacenter-scale aggregation of the paper's node-level claim.
 
+All fleets are built through the scenario API (`repro.api`): each row is a
+`Scenario` — either a registered one (``cluster/dp``,
+``cluster/hetero-cooling``) or a programmatic variant — run through the
+same `run_scenario`/`build_scenario` driver the CLI uses, with the derived
+metrics bit-identical to the pre-API hand-wired builders (equivalence is
+pinned in tests/test_scenario_api.py).
+
 Rows:
   * cluster_scale_N{n}       — fleet throughput per node as the fleet grows
                                (barrier + slower inter-node all-reduce)
@@ -18,18 +25,16 @@ Rows:
 from __future__ import annotations
 
 import time
-from typing import List
+from typing import List, Optional
 
 import numpy as np
 
 from benchmarks.common import Row, make_node
-from repro.configs import get_config
-from repro.core.backends import ClusterSimBackend
+from repro.api import (NodeSpec, Scenario, WorkloadSpec, build_scenario,
+                       get_scenario, run_scenario)
 from repro.core.c3sim import SimConfig
-from repro.core.cluster import ClusterConfig, ClusterSim
-from repro.core.manager import FleetManagerConfig, run_fleet_closed_loop
-from repro.core.thermal import ChurnEvent, ChurnModel, MI300X_PRESET
-from repro.core.workload import fsdp_llm_iteration
+from repro.core.cluster import ClusterConfig
+from repro.core.thermal import ChurnEvent, ChurnModel
 
 CAP = 700.0
 SMOKE = False           # run.py --smoke trims iterations for CI
@@ -39,56 +44,49 @@ def _iters(full: int) -> int:
     return max(10, full // 4) if SMOKE else full
 
 
-def _workload(n_layers: int = 8):
-    cfg = get_config("llama3.1-8b").replace(n_layers=n_layers)
-    return fsdp_llm_iteration(cfg, batch=2, seq=4096, n_shards=8)
-
-
-def _cluster(wl, n_nodes, boost, seed=5, straggler_node=0, caps=CAP,
-             **cc_kw):
-    cl = ClusterSim(wl, MI300X_PRESET, SimConfig(seed=1, comm_gbps=40.0),
-                    ClusterConfig(n_nodes=n_nodes, straggler_boost=boost,
-                                  straggler_node=straggler_node, **cc_kw),
-                    devices_per_node=8, seed=seed)
-    if caps is not None:
-        for n in range(n_nodes):
-            cl.set_node_caps(n, np.full(8, caps))
-    return cl
+def _scenario(n_nodes: int, boost: float, iterations: int, seed: int = 5,
+              straggler_node: int = 0, caps: Optional[float] = CAP,
+              **cc_kw) -> Scenario:
+    """A fleet scenario with the sweep's shared defaults (8-layer Llama,
+    calibrated sim knobs, 700 W initial caps) — the spec-level analogue of
+    the old hand-wired ``_cluster`` builder."""
+    return Scenario(
+        workload=WorkloadSpec(arch="llama3.1-8b", n_layers=8),
+        sim=SimConfig(seed=1, comm_gbps=40.0, engine="batched"),
+        node=NodeSpec(caps_w=caps),
+        fleet=ClusterConfig(n_nodes=n_nodes, straggler_boost=boost,
+                            straggler_node=straggler_node, **cc_kw),
+        iterations=iterations, seed=seed)
 
 
 def scale_sweep() -> List[Row]:
     """Fleet throughput vs node count (straggler on node 0)."""
-    wl = _workload()
     rows: List[Row] = []
     base = None
     for n_nodes in (1, 2, 4, 8):
         t0 = time.perf_counter()
-        cl = _cluster(wl, n_nodes, boost=1.28)
-        for _ in range(_iters(40)):
-            cl.step()
-        tput = cl.fleet_throughput(last=10)
+        res = run_scenario(_scenario(n_nodes, 1.28, _iters(40)))
+        tput = res.cluster.fleet_throughput(last=10)
         us = (time.perf_counter() - t0) * 1e6
         base = tput if base is None else base
         rows.append((f"cluster_scale_N{n_nodes}", us,
                      f"fleet_tput={tput:.3f};per_node_eff={tput / base:.3f};"
-                     f"allreduce_ms={cl.allreduce_time() * 1e3:.1f}"))
+                     f"allreduce_ms={res.cluster.allreduce_time() * 1e3:.1f}"))
     return rows
 
 
 def straggler_placement() -> List[Row]:
     """One hot GPU vs healthy fleet, straggler on node 0 vs last node."""
-    wl = _workload()
     rows: List[Row] = []
     cases = [("healthy", 1.0, 0), ("node0", 1.28, 0), ("node3", 1.28, 3)]
     tputs = {}
     for label, boost, where in cases:
         t0 = time.perf_counter()
-        cl = _cluster(wl, 4, boost=boost, straggler_node=where)
-        for _ in range(_iters(60)):
-            cl.step()
-        tputs[label] = cl.fleet_throughput()
+        res = run_scenario(_scenario(4, boost, _iters(60),
+                                     straggler_node=where))
+        tputs[label] = res.cluster.fleet_throughput()
         us = (time.perf_counter() - t0) * 1e6
-        slow = [h["slowest_node"] for h in cl.history[-10:]]
+        slow = [h["slowest_node"] for h in res.cluster.history[-10:]]
         rows.append((f"cluster_straggler_{label}", us,
                      f"fleet_tput={tputs[label]:.4f};"
                      f"slowest_node_mode={int(np.bincount(slow).argmax())}"))
@@ -98,35 +96,29 @@ def straggler_placement() -> List[Row]:
 
 
 def fleet_manager_recovery() -> List[Row]:
-    """FleetPowerManager under a fixed cluster budget of N*G*700 W."""
-    wl = _workload()
+    """FleetPowerManager under a fixed cluster budget of N*G*700 W: the
+    registered ``cluster/dp`` scenario is the managed leg."""
     t0 = time.perf_counter()
-    healthy = _cluster(wl, 4, boost=1.0)
-    strag = _cluster(wl, 4, boost=1.28)
-    for _ in range(60):
-        healthy.step()
-        strag.step()
-    managed = _cluster(wl, 4, boost=1.28)
+    healthy = run_scenario(_scenario(4, 1.0, 60))
+    strag = run_scenario(_scenario(4, 1.28, 60))
     # the closed loop needs its full horizon to converge — not trimmed in
     # smoke mode (it is cheap under the batched engine)
-    mgr = run_fleet_closed_loop(
-        ClusterSimBackend(managed),
-        FleetManagerConfig(use_case="gpu-realloc", sampling_period=2,
-                           warmup=2, window_size=2, node_window_size=2,
-                           power_cap=CAP, cluster_power_budget=4 * 8 * CAP),
-        120, tune_after=20)
+    managed = run_scenario(get_scenario("cluster/dp"))
     us = (time.perf_counter() - t0) * 1e6
-    tp_h, tp_s = healthy.fleet_throughput(), strag.fleet_throughput()
-    tp_m = managed.fleet_throughput()
+    tp_h = healthy.metrics["fleet_tput"]
+    tp_s = strag.metrics["fleet_tput"]
+    tp_m = managed.metrics["fleet_tput"]
     rec = (tp_m - tp_s) / max(tp_h - tp_s, 1e-12)
     return [("cluster_fleet_manager", us,
              f"healthy={tp_h:.4f};straggler={tp_s:.4f};managed={tp_m:.4f};"
              f"recovered={rec:.2f};"
-             f"node0_budget={mgr.node_budgets[0]:.0f}W")]
+             f"node0_budget={managed.manager.node_budgets[0]:.0f}W")]
 
 
 def engine_speedup() -> List[Row]:
-    """Batched fast path vs the event-loop reference engine."""
+    """Batched fast path vs the event-loop reference engine (kernel-level
+    micro-benchmark: times `C3Sim.run_iteration` itself, below the
+    scenario layer)."""
     node = make_node()
     freq = node.state.freq
     reps = 2 if SMOKE else 5
@@ -146,21 +138,18 @@ def topology_coupling() -> List[Row]:
     """Coupling strength per parallelism topology: one hot GPU's relative
     fleet-throughput cost under dp / pp / tp (fast DP fabric so the
     all-reduce constant does not drown the coupling term)."""
-    wl = _workload()
     rows: List[Row] = []
     gaps = {}
     for topo in ("dp", "pp", "tp"):
         t0 = time.perf_counter()
-        healthy = _cluster(wl, 4, boost=1.0, topology=topo,
-                           inter_node_gbps=100.0)
-        hot = _cluster(wl, 4, boost=1.28, topology=topo,
-                       inter_node_gbps=100.0)
         # thermal settling needs the full horizon (tau >> t_iter) — cheap
         # under the batched engine, so not trimmed in smoke mode
-        for _ in range(50):
-            healthy.step()
-            hot.step()
-        tp_h, tp_s = healthy.fleet_throughput(), hot.fleet_throughput()
+        healthy = run_scenario(_scenario(4, 1.0, 50, topology=topo,
+                                         inter_node_gbps=100.0))
+        hot = run_scenario(_scenario(4, 1.28, 50, topology=topo,
+                                     inter_node_gbps=100.0))
+        tp_h = healthy.metrics["fleet_tput"]
+        tp_s = hot.metrics["fleet_tput"]
         gaps[topo] = (tp_h - tp_s) / tp_h
         us = (time.perf_counter() - t0) * 1e6
         rows.append((f"cluster_topology_{topo}", us,
@@ -175,37 +164,31 @@ def topology_coupling() -> List[Row]:
 
 def hetero_fleet() -> List[Row]:
     """Mixed air-/liquid-cooled fleet: the preset, not a boosted device,
-    creates the straggler."""
-    wl = _workload()
+    creates the straggler (the registered ``cluster/hetero-cooling``)."""
     t0 = time.perf_counter()
-    cl = _cluster(wl, 4, boost=1.0, inter_node_gbps=100.0,
-                  node_presets=["mi300x", "mi300x-air", "mi300x", "mi300x"])
-    for _ in range(_iters(50)):
-        cl.step()
+    res = run_scenario(get_scenario("cluster/hetero-cooling"),
+                       iterations=_iters(50))
     us = (time.perf_counter() - t0) * 1e6
-    slow = [h["slowest_node"] for h in cl.history[-10:]]
+    slow = [h["slowest_node"] for h in res.cluster.history[-10:]]
     return [("cluster_hetero", us,
-             f"fleet_tput={cl.fleet_throughput():.4f};"
+             f"fleet_tput={res.metrics['fleet_tput']:.4f};"
              f"slowest_node_mode={int(np.bincount(slow).argmax())}")]
 
 
 def churn_migration() -> List[Row]:
     """Cooling churn: a straggler emerges on node 0, then migrates to
     node 2 when a harder degradation lands there mid-run."""
-    wl = _workload()
     t0 = time.perf_counter()
-    probe = _cluster(wl, 4, boost=1.0, inter_node_gbps=100.0)
-    probe.step()
-    t1 = probe.history[0]["t_fleet"]
+    probe = run_scenario(_scenario(4, 1.0, 1, inter_node_gbps=100.0))
+    t1 = probe.cluster.history[0]["t_fleet"]
     # churn dynamics ride the thermal time constant — full horizon always
     iters = 80
     churn = {0: ChurnModel(events=[ChurnEvent(0.0, 3, 1.35)]),
              2: ChurnModel(events=[ChurnEvent(0.4 * iters * t1, 5, 1.8)])}
-    cl = _cluster(wl, 4, boost=1.0, inter_node_gbps=100.0, churn=churn)
-    for _ in range(iters):
-        cl.step()
+    res = run_scenario(_scenario(4, 1.0, iters, inter_node_gbps=100.0,
+                                 churn=churn))
     us = (time.perf_counter() - t0) * 1e6
-    slow = np.array([h["slowest_node"] for h in cl.history])
+    slow = np.array([h["slowest_node"] for h in res.cluster.history])
     early = int(np.bincount(slow[5:iters // 3]).argmax())
     late = int(np.bincount(slow[-iters // 4:]).argmax())
     return [("cluster_churn", us,
@@ -216,15 +199,15 @@ def churn_migration() -> List[Row]:
 def vector_speedup() -> List[Row]:
     """Vectorized all-lanes cluster engine vs per-node batched runs at
     sweep scale (the ROADMAP per-window device-loop item)."""
-    wl = _workload()
     n_nodes = 8 if SMOKE else 16
     reps = _iters(12)
     out = {}
     for engine in ("batched", "vector"):
-        cl = _cluster(wl, n_nodes, boost=1.28, engine=engine)
+        built = build_scenario(_scenario(n_nodes, 1.28, reps,
+                                         engine=engine))
         t0 = time.perf_counter()
         for _ in range(reps):
-            cl.step()
+            built.cluster.step()
         out[engine] = (time.perf_counter() - t0) / reps * 1e6
     return [("cluster_vector_speedup", out["vector"],
              f"nodes={n_nodes};batched_us={out['batched']:.0f};"

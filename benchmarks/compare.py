@@ -11,6 +11,12 @@ Usage:
   python benchmarks/run.py --smoke | tee bench.csv
   python benchmarks/compare.py --baseline benchmarks/BENCH_cluster.json \
       --fresh bench.csv [--write-fresh bench_metrics.json]
+
+The scenario-smoke CI step feeds a ``python -m repro run --json`` result
+instead of a CSV (``--fresh-json``) and names which scenario metric maps
+onto which baseline key (``--map fleet_tput=cluster_fleet_manager:managed``,
+repeatable) — the same tolerance gate then applies to just the mapped
+pairs.
 """
 from __future__ import annotations
 
@@ -44,32 +50,66 @@ def parse_bench_csv(path: str) -> Dict[str, float]:
     return metrics
 
 
+def load_fresh_json(path: str) -> Dict[str, float]:
+    """``python -m repro run --json`` output (or any ``{"metrics": {...}}``
+    document) -> flat numeric metrics dict."""
+    with open(path) as f:
+        data = json.load(f)
+    metrics = data.get("metrics", data)
+    return {k: float(v) for k, v in metrics.items()
+            if isinstance(v, (int, float))}
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--baseline", required=True,
                     help="committed baseline JSON (BENCH_cluster.json)")
-    ap.add_argument("--fresh", required=True,
+    ap.add_argument("--fresh", default=None,
                     help="fresh run.py CSV output to check")
+    ap.add_argument("--fresh-json", default=None,
+                    help="fresh scenario-result JSON ({'metrics': ...}) "
+                         "instead of a CSV")
+    ap.add_argument("--map", action="append", default=None,
+                    metavar="FRESHKEY=BASEKEY",
+                    help="compare only these fresh->baseline metric pairs "
+                         "(repeatable; required with --fresh-json)")
     ap.add_argument("--write-fresh", default=None,
                     help="dump all parsed fresh metrics as JSON (artifact)")
     args = ap.parse_args()
+    if (args.fresh is None) == (args.fresh_json is None):
+        ap.error("give exactly one of --fresh / --fresh-json")
 
     with open(args.baseline) as f:
         baseline = json.load(f)
     tol = float(baseline.get("tolerance", 0.20))
-    fresh = parse_bench_csv(args.fresh)
+    fresh = (parse_bench_csv(args.fresh) if args.fresh
+             else load_fresh_json(args.fresh_json))
 
     if args.write_fresh:
         with open(args.write_fresh, "w") as f:
             json.dump({"tolerance": tol, "metrics": fresh}, f, indent=2,
                       sort_keys=True)
 
+    if args.map:
+        pairs = []
+        for m in args.map:
+            if "=" not in m:
+                ap.error(f"--map expects FRESHKEY=BASEKEY, got {m!r}")
+            fk, bk = m.split("=", 1)
+            if bk not in baseline["metrics"]:
+                ap.error(f"--map: {bk!r} not in the baseline")
+            pairs.append((fk, bk))
+        checks = [(fk, baseline["metrics"][bk], fk) for fk, bk in pairs]
+    else:
+        checks = [(key, base, key)
+                  for key, base in sorted(baseline["metrics"].items())]
+
     failures = []
-    for key, base in sorted(baseline["metrics"].items()):
-        if key not in fresh:
-            failures.append(f"MISSING  {key} (baseline {base:.4f})")
+    for fresh_key, base, key in checks:
+        if fresh_key not in fresh:
+            failures.append(f"MISSING  {fresh_key} (baseline {base:.4f})")
             continue
-        val = fresh[key]
+        val = fresh[fresh_key]
         rel = (val - base) / abs(base) if base else 0.0
         status = "REGRESSED" if rel < -tol else "ok"
         print(f"{status:9s} {key}: fresh={val:.4f} baseline={base:.4f} "
@@ -83,7 +123,7 @@ def main() -> None:
             print(f"  {f_}", file=sys.stderr)
         sys.exit(1)
     print(f"\nbenchmark regression gate passed "
-          f"({len(baseline['metrics'])} metrics within -{tol:.0%})")
+          f"({len(checks)} metrics within -{tol:.0%})")
 
 
 if __name__ == "__main__":

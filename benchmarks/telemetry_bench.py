@@ -1,5 +1,11 @@
 """Telemetry benchmarks: recording overhead and detection robustness.
 
+The recorded runs are scenario-API builds: the record/replay reference is
+the registered ``telemetry/replay`` scenario (the same spec the CI smoke
+runs — one configuration, zero drifting copies), and the overhead /
+robustness nodes are programmatic `Scenario` variants driven through
+`build_scenario`.
+
 Rows:
   * telemetry_overhead_{engine} — per-iteration cost of an attached
                                   lossless collector vs a bare sim
@@ -13,21 +19,20 @@ Rows:
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from typing import List
 
 import numpy as np
 
-from benchmarks.common import Row, make_node
-from repro.core.backends import ClusterSimBackend
+from benchmarks.common import Row
+from repro.api import (NodeSpec, Scenario, TelemetrySpec, WorkloadSpec,
+                       build_scenario, get_scenario, run_scenario,
+                       with_overrides)
 from repro.core.c3sim import SimConfig
-from repro.core.cluster import ClusterConfig, ClusterSim
-from repro.core.manager import FleetManagerConfig, run_fleet_closed_loop
-from repro.core.thermal import MI300X_PRESET
-from repro.core.workload import fsdp_llm_iteration
-from repro.configs import get_config
-from repro.telemetry import (SensorConfig, SensorModel, TelemetryCollector,
-                             TelemetryTrace, degrade, detection_report,
+from repro.core.manager import FleetManagerConfig
+from repro.telemetry import (SensorConfig, SensorModel, TelemetryTrace,
+                             degrade, detection_report,
                              fleet_replay_matches, replay_fleet)
 
 SMOKE = False           # run.py --smoke trims iterations for CI
@@ -39,6 +44,14 @@ def _iters(full: int) -> int:
     return max(10, full // 4) if SMOKE else full
 
 
+def _node_scenario(n_layers: int = 8, engine: str = "batched",
+                   telemetry=None) -> Scenario:
+    return Scenario(
+        workload=WorkloadSpec(arch="llama3.1-8b", n_layers=n_layers),
+        sim=SimConfig(seed=1, comm_gbps=40.0, engine=engine),
+        node=NodeSpec(), telemetry=telemetry, seed=1)
+
+
 def collector_overhead() -> List[Row]:
     """Recording cost per engine: the collector must stay a few percent of
     the iteration budget or nobody leaves it attached in production."""
@@ -46,13 +59,14 @@ def collector_overhead() -> List[Row]:
     engines = ("batched",) if SMOKE else ("batched", "event", "vector")
     reps = _iters(24)
     for engine in engines:
-        bare = make_node(n_layers=8, engine=engine)
+        bare = build_scenario(_node_scenario(engine=engine)).node
         t0 = time.perf_counter()
         for _ in range(reps):
             bare.step()
         base_us = (time.perf_counter() - t0) / reps * 1e6
-        rec = make_node(n_layers=8, engine=engine)
-        TelemetryCollector(max_samples=reps + 1).attach_node(rec)
+        rec = build_scenario(_node_scenario(
+            engine=engine,
+            telemetry=TelemetrySpec(max_samples=reps + 1))).node
         t0 = time.perf_counter()
         for _ in range(reps):
             rec.step()
@@ -65,33 +79,27 @@ def collector_overhead() -> List[Row]:
 
 
 def fleet_cfg(n_nodes: int = 2) -> FleetManagerConfig:
-    return FleetManagerConfig(use_case="gpu-realloc", sampling_period=2,
-                              warmup=2, window_size=2, node_window_size=2,
-                              power_cap=700.0,
-                              cluster_power_budget=n_nodes * 8 * 700.0)
+    """The reference fleet-manager knobs — taken from the registered
+    ``telemetry/replay`` scenario so the benchmark, the CI smoke and the
+    tests all consume the one definition."""
+    cfg = get_scenario("telemetry/replay").manager.config
+    return dataclasses.replace(cfg,
+                               cluster_power_budget=n_nodes * 8 * 700.0)
 
 
 def record_managed_cluster(n_nodes: int = 2, iters: int = 40,
                            tune_after: int = 10):
-    """The reference record-and-replay setup: a managed 2-node cluster with
-    one hot GPU, recorded losslessly.  Returns (cluster, collector,
-    live_manager).  Shared with scripts/telemetry_smoke.py so the CI smoke
-    and the benchmark validate the exact same configuration.  The managed
-    loop needs enough horizon to produce cap adjustments — otherwise a
-    caps-match check is vacuous — and is cheap under the batched engine,
-    so callers do not trim it in smoke mode."""
-    cfg = get_config("llama3.1-8b").replace(n_layers=8)
-    wl = fsdp_llm_iteration(cfg, batch=2, seq=4096, n_shards=8)
-    cl = ClusterSim(wl, MI300X_PRESET, SimConfig(seed=1, comm_gbps=40.0),
-                    ClusterConfig(n_nodes=n_nodes, straggler_boost=1.28),
-                    devices_per_node=8, seed=5)
-    for n in range(n_nodes):
-        cl.set_node_caps(n, np.full(8, 700.0))
-    col = TelemetryCollector(max_samples=n_nodes * iters + iters)
-    col.attach_cluster(cl)
-    live = run_fleet_closed_loop(ClusterSimBackend(cl), fleet_cfg(n_nodes),
-                                 iters, tune_after=tune_after, collector=col)
-    return cl, col, live
+    """Run the ``telemetry/replay`` scenario (resized if asked): a managed
+    cluster with one hot GPU, recorded losslessly.  Returns (cluster,
+    collector, live_manager) — the record-and-replay reference shared with
+    scripts/telemetry_smoke.py."""
+    sc = get_scenario("telemetry/replay")
+    if n_nodes != sc.fleet.n_nodes:
+        sc = with_overrides(sc, {"fleet.n_nodes": n_nodes})
+        sc.manager.config = fleet_cfg(n_nodes)
+    sc.manager.tune_after = tune_after
+    res = run_scenario(sc, iterations=iters)
+    return res.cluster, res.collector, res.manager
 
 
 def replay_fidelity() -> List[Row]:
@@ -112,12 +120,13 @@ def replay_fidelity() -> List[Row]:
 def detection_robustness() -> List[Row]:
     """Detection accuracy / lead error vs timestamp noise, offline from one
     lossless recording (5 sensor seeds per level)."""
-    node = make_node(seed=1)
-    col = TelemetryCollector(max_samples=128).attach_node(node)
+    built = build_scenario(_node_scenario(
+        n_layers=32, telemetry=TelemetrySpec(max_samples=128)))
+    node = built.node
     t0 = time.perf_counter()
     for _ in range(_iters(60)):
         node.step()
-    trace = TelemetryTrace.from_collector(col)
+    trace = TelemetryTrace.from_collector(built.collector)
     rows: List[Row] = []
     accs = []
     for i, sigma in enumerate(NOISE_LEVELS):

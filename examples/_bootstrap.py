@@ -1,0 +1,13 @@
+"""Shared example bootstrap: make ``src/`` (and the repo root) importable
+when a script is run straight from a checkout — the one piece of
+boilerplate every example used to carry itself.
+
+    import _bootstrap  # noqa: F401
+"""
+import os
+import sys
+
+_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)

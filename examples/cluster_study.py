@@ -1,49 +1,15 @@
-"""Cluster-scale Lit Silicon study: one hot GPU vs an N-node fleet.
-
-Builds three fleets under the same provisioned power budget (N x 8 x 700 W):
-  1. healthy         — no boosted straggler, uniform 700 W caps
-  2. straggler       — one hot GPU on node 0, uniform caps (unmanaged)
-  3. managed         — same straggler, FleetPowerManager running the paper's
-                       Algorithms 1-3 inside each node *and* across nodes
-                       (a node's lead is the topology's wait signal)
+"""Cluster-scale Lit Silicon study: healthy vs one-hot-GPU vs managed
+fleet under one provisioned budget — thin wrapper over the registered
+``cluster/{dp,pp,tp}`` scenarios (``--topology`` selects how nodes couple:
+barrier + ring all-reduce, pipeline bubbles, or per-layer syncs).
 
     PYTHONPATH=src python examples/cluster_study.py [--nodes 4]
         [--topology dp|pp|tp]
-
-``--topology`` selects how nodes couple: data parallelism (ring all-reduce
-+ barrier — the paper's case), pipeline stages (point-to-point bubbles,
-weaker), or tensor parallelism (per-layer syncs on the fast link, tighter).
 """
 import argparse
-import os
-import sys
 
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
-
-import numpy as np                                            # noqa: E402
-
-from repro.configs import get_config                          # noqa: E402
-from repro.core.backends import ClusterSimBackend             # noqa: E402
-from repro.core.c3sim import SimConfig                        # noqa: E402
-from repro.core.cluster import ClusterConfig, ClusterSim      # noqa: E402
-from repro.core.manager import (FleetManagerConfig,           # noqa: E402
-                                run_fleet_closed_loop)
-from repro.core.thermal import MI300X_PRESET                  # noqa: E402
-from repro.core.workload import fsdp_llm_iteration            # noqa: E402
-
-CAP = 700.0
-
-
-def build(n_nodes, boost, topology="dp", seed=5):
-    cfg = get_config("llama3.1-8b").replace(n_layers=8)
-    wl = fsdp_llm_iteration(cfg, batch=2, seq=4096, n_shards=8)
-    cl = ClusterSim(wl, MI300X_PRESET, SimConfig(seed=1, comm_gbps=40.0),
-                    ClusterConfig(n_nodes=n_nodes, straggler_boost=boost,
-                                  topology=topology),
-                    devices_per_node=8, seed=seed)
-    for n in range(n_nodes):
-        cl.set_node_caps(n, np.full(8, CAP))
-    return cl
+import _bootstrap  # noqa: F401
+from repro.api.reports import recovery_study
 
 
 def main():
@@ -52,47 +18,9 @@ def main():
     ap.add_argument("--iters", type=int, default=60)
     ap.add_argument("--topology", default="dp", choices=["dp", "pp", "tp"])
     args = ap.parse_args()
-    N = args.nodes
-    topo = args.topology
-
-    healthy = build(N, 1.0, topo)
-    strag = build(N, 1.28, topo)
-    for _ in range(args.iters):
-        healthy.step()
-        strag.step()
-    tp_h, tp_s = healthy.fleet_throughput(), strag.fleet_throughput()
-
-    print(f"== {N}-node {topo} fleet, one hot GPU on node 0 ==")
-    print(f"exposed inter-node comm: "
-          f"{strag.history[-1]['comm_time'] * 1e3:.1f} ms per iteration")
-    wait_kind = {"dp": "every node waits at the barrier",
-                 "pp": "downstream stages ride the bubble",
-                 "tp": "every layer's collective drags"}[topo]
-    print(f"healthy fleet:   {tp_h:.4f} iter/s")
-    print(f"with straggler:  {tp_s:.4f} iter/s "
-          f"({(tp_s - tp_h) / tp_h:+.2%} — {wait_kind})")
-    slow = [h["slowest_node"] for h in strag.history[-20:]]
-    print(f"slowest node (last 20 iters): {max(set(slow), key=slow.count)}")
-
-    managed = build(N, 1.28, topo)
-    mgr = run_fleet_closed_loop(
-        ClusterSimBackend(managed),
-        FleetManagerConfig(use_case="gpu-realloc", sampling_period=2,
-                           warmup=2, window_size=2, node_window_size=2,
-                           power_cap=CAP,
-                           cluster_power_budget=N * 8 * CAP),
-        2 * args.iters, tune_after=args.iters // 3)
-    tp_m = managed.fleet_throughput()
-    rec = (tp_m - tp_s) / max(tp_h - tp_s, 1e-12)
-    print(f"\n== FleetPowerManager (cluster budget {N * 8 * CAP:.0f} W) ==")
-    print(f"managed fleet:   {tp_m:.4f} iter/s  "
-          f"(recovers {rec:.0%} of the straggler gap)")
-    print(f"node budgets (W): {np.round(mgr.node_budgets).astype(int)}  "
-          f"<- the topology's lead signal steers budget to the straggler")
-    print(f"node 0 caps (W):  "
-          f"{np.round(managed.get_node_caps(0)).astype(int)}")
-    print(f"fleet power:      {managed.fleet_power():.0f} W "
-          f"(budget {N * 8 * CAP:.0f} W)")
+    report, _ = recovery_study(args.topology, n_nodes=args.nodes,
+                               iterations=args.iters)
+    print(report)
 
 
 if __name__ == "__main__":

@@ -3,17 +3,14 @@ the mesh after a simulated device failure (elastic restart).
 
     PYTHONPATH=src python examples/elastic_restart.py
 """
-import os
-import sys
 import tempfile
 
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+import _bootstrap  # noqa: F401
 
-from repro.configs import (ParallelConfig, TrainConfig,       # noqa: E402
-                           get_reduced_config)
-from repro.train.data import DataConfig                       # noqa: E402
-from repro.train.fault import ElasticPlan                     # noqa: E402
-from repro.train.train_loop import Trainer, TrainerConfig     # noqa: E402
+from repro.configs import ParallelConfig, TrainConfig, get_reduced_config
+from repro.train.data import DataConfig
+from repro.train.fault import ElasticPlan
+from repro.train.train_loop import Trainer, TrainerConfig
 
 
 def main():

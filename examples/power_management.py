@@ -1,74 +1,39 @@
-"""Compare the three power-management use cases (paper Table I) on one node:
-GPU-Red vs GPU-Realloc vs CPU-Slosh, with converged cap export/import.
+"""Compare the three power-management use cases (paper Table I) on one
+node — thin wrapper over the ``paper/table1-tdp`` / ``paper/node-cap`` /
+``paper/cpu-slosh`` scenarios — then show converged-cap reuse (Fig 12):
+export once, import onto a different workload.
 
     PYTHONPATH=src python examples/power_management.py
 """
-import os
-import sys
-import tempfile
+import os, tempfile  # noqa: E401
 
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
-
-import numpy as np                                            # noqa: E402
-
-from repro.configs import get_config                          # noqa: E402
-from repro.core.backends import SimBackend                    # noqa: E402
-from repro.core.c3sim import NodeSim, SimConfig               # noqa: E402
-from repro.core.manager import (ManagerConfig, PowerManager,  # noqa: E402
-                                run_closed_loop)
-from repro.core.thermal import MI300X_PRESET                  # noqa: E402
-from repro.core.workload import fsdp_llm_iteration            # noqa: E402
-
-ITERS = 200
-
-
-def run_case(use_case: str):
-    cfg = get_config("llama3.1-8b")
-    wl = fsdp_llm_iteration(cfg, batch=2, seq=4096, n_shards=8)
-    node = NodeSim(wl, MI300X_PRESET, SimConfig(seed=1, comm_gbps=40.0),
-                   8, seed=1)
-    mgr = run_closed_loop(
-        SimBackend(node),
-        ManagerConfig(use_case=use_case, sampling_period=2, warmup=3,
-                      window_size=2, power_cap=700.0, cpu_budget=20.0),
-        ITERS)
-    h = node.history
-    pre = h[ITERS // 2 - 30: ITERS // 2]
-    post = h[-30:]
-    tput = (np.mean([x["throughput"] for x in post])
-            / np.mean([x["throughput"] for x in pre]))
-    power = (np.mean([np.sum(x["power"]) for x in post])
-             / np.mean([np.sum(x["power"]) for x in pre]))
-    return node, mgr, tput, power
+import _bootstrap  # noqa: F401
+import numpy as np
+from repro.api import get_scenario, run_scenario, with_overrides
+from repro.api.reports import use_case_table
+from repro.core.backends import SimBackend
+from repro.core.manager import ManagerConfig, PowerManager
 
 
 def main():
-    print(f"{'use case':14s} {'throughput':>11s} {'node power':>11s}  "
-          f"(paper: Red ~0%/-4%, Realloc +3%/0%, Slosh +4%/+3%)")
-    managers = {}
-    for uc in ("gpu-red", "gpu-realloc", "cpu-slosh"):
-        node, mgr, tput, power = run_case(uc)
-        managers[uc] = (node, mgr)
-        print(f"{uc:14s} {tput - 1:+10.2%} {power - 1:+10.2%}   "
-              f"caps={np.round(node.history[-1]['cap'], 0).astype(int)}")
+    names = {"gpu-red": "paper/table1-tdp", "gpu-realloc": "paper/node-cap",
+             "cpu-slosh": "paper/cpu-slosh"}
+    results = {uc: run_scenario(get_scenario(n)) for uc, n in names.items()}
+    print(use_case_table(results))
 
-    # converged caps are reusable (paper Fig 12 / §VII-D: tune twice in
-    # three months) — export once, import on the next job
-    node, mgr = managers["gpu-red"]
+    # converged caps are reusable (paper Fig 12 / §VII-D) — export once,
+    # import on the next job, even a different workload
     with tempfile.TemporaryDirectory() as d:
         path = os.path.join(d, "caps.json")
-        mgr.export_caps(path)
-        cfg = get_config("mistral-7b")              # different workload!
-        wl = fsdp_llm_iteration(cfg, batch=2, seq=4096, n_shards=8)
-        node2 = NodeSim(wl, MI300X_PRESET,
-                        SimConfig(seed=1, comm_gbps=40.0), 8, seed=1)
-        mgr2 = PowerManager(SimBackend(node2),
+        results["gpu-red"].manager.export_caps(path)
+        other = run_scenario(with_overrides(
+            get_scenario("paper/characterization"),
+            {"workload.arch": "mistral-7b"}), iterations=1)
+        mgr2 = PowerManager(SimBackend(other.node),
                             ManagerConfig(use_case="gpu-red"))
         mgr2.import_caps(path)
-        p0 = np.sum(node2.step().util * 0 + node2.state.power)
-        for _ in range(30):
-            node2.step()
-        p1 = np.mean([np.sum(h["power"]) for h in node2.history[-10:]])
+        for _ in range(30): other.node.step()  # noqa: E701
+        p1 = np.mean([np.sum(h["power"]) for h in other.node.history[-10:]])
         print(f"\nimported caps onto mistral-7b: node power {p1:.0f} W "
               f"(detection cost amortized — paper §VII-D)")
 

@@ -3,20 +3,16 @@ power-management layer enabled (GPU-Red), end to end.
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import os
-import sys
 import tempfile
 
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
-
-import numpy as np                                            # noqa: E402
+import _bootstrap  # noqa: F401
+import numpy as np
 
 from repro.configs import (ParallelConfig, TrainConfig, get_config,
-                           get_reduced_config)                # noqa: E402
-from repro.core.manager import ManagerConfig                  # noqa: E402
-from repro.train.data import DataConfig                       # noqa: E402
-from repro.train.train_loop import (LitSiliconHook, Trainer,
-                                    TrainerConfig)            # noqa: E402
+                           get_reduced_config)
+from repro.core.manager import ManagerConfig
+from repro.train.data import DataConfig
+from repro.train.train_loop import LitSiliconHook, Trainer, TrainerConfig
 
 
 def main():

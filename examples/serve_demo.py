@@ -2,18 +2,14 @@
 
     PYTHONPATH=src python examples/serve_demo.py
 """
-import os
-import sys
+import _bootstrap  # noqa: F401
+import jax
+import numpy as np
 
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
-
-import jax                                                    # noqa: E402
-import numpy as np                                            # noqa: E402
-
-from repro.configs import get_reduced_config                  # noqa: E402
-from repro.models import build_model                          # noqa: E402
-from repro.models.common import init_params                   # noqa: E402
-from repro.serve.decode import ServeConfig, ServingLoop       # noqa: E402
+from repro.configs import get_reduced_config
+from repro.models import build_model
+from repro.models.common import init_params
+from repro.serve.decode import ServeConfig, ServingLoop
 
 
 def main():

@@ -1,71 +1,18 @@
 """Telemetry study: how sensor fidelity degrades Lit Silicon detection.
 
-Records one lossless trace per parallelism topology (a 4-node cluster with
-one hot GPU), then degrades it offline through sensor models sweeping
-timestamp noise and sampling period, and reports straggler-detection
-accuracy and lead-estimate error — the robustness surface a deployment
-needs before trusting rocm-smi-grade counters to drive power caps.
+Records one lossless trace per parallelism topology (the ``cluster/*``
+scenarios with telemetry attached and the manager stripped), then degrades
+it offline through a noise × sampling-period sensor grid
+(`repro.api.reports.sensor_fidelity_report`).
 
     PYTHONPATH=src python examples/telemetry_study.py [--nodes 4]
         [--iters 60] [--topologies dp,pp,tp] [--save-trace PREFIX]
-
-``--save-trace PREFIX`` additionally writes PREFIX_{topo}.jsonl and a
-Perfetto-loadable PREFIX_{topo}.chrome.json for visual inspection.
 """
 import argparse
-import os
-import sys
 
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
-
-import numpy as np                                            # noqa: E402
-
-from repro.configs import get_config                          # noqa: E402
-from repro.core.c3sim import SimConfig                        # noqa: E402
-from repro.core.cluster import ClusterConfig, ClusterSim      # noqa: E402
-from repro.core.thermal import MI300X_PRESET                  # noqa: E402
-from repro.core.workload import fsdp_llm_iteration            # noqa: E402
-from repro.telemetry import (SensorConfig, SensorModel,       # noqa: E402
-                             TelemetryCollector, TelemetryTrace, degrade,
-                             detection_report, export_chrome_trace,
-                             save_trace)
-
-NOISES = (0.0, 0.002, 0.01, 0.05, 0.2)
-PERIODS = (1, 10, 25)
-SEEDS = 5
-
-
-def record(topology, n_nodes, iters, seed=5):
-    cfg = get_config("llama3.1-8b").replace(n_layers=8)
-    wl = fsdp_llm_iteration(cfg, batch=2, seq=4096, n_shards=8)
-    cl = ClusterSim(wl, MI300X_PRESET, SimConfig(seed=1, comm_gbps=40.0),
-                    ClusterConfig(n_nodes=n_nodes, straggler_boost=1.28,
-                                  topology=topology),
-                    devices_per_node=8, seed=seed)
-    for n in range(n_nodes):
-        cl.set_node_caps(n, np.full(8, 700.0))
-    col = TelemetryCollector(max_samples=n_nodes * iters + 1)
-    col.attach_cluster(cl)
-    for _ in range(iters):
-        cl.step()
-    return cl, TelemetryTrace.from_collector(col)
-
-
-def sweep(trace, node=0):
-    """accuracy[noise][period] on the straggler node's device stream."""
-    grid = {}
-    for sigma in NOISES:
-        for period in PERIODS:
-            accs, errs = [], []
-            for s in range(SEEDS):
-                d = degrade(trace, SensorModel(SensorConfig(
-                    noise_time_s=sigma, sample_period=period,
-                    quant_time_s=1e-5, seed=s)))
-                rep = detection_report(d, node=node)
-                accs.append(rep.accuracy)
-                errs.append(rep.lead_rel_error)
-            grid[sigma, period] = (float(np.mean(accs)), float(np.mean(errs)))
-    return grid
+import _bootstrap  # noqa: F401
+from repro.api import get_scenario, run_scenario, with_overrides
+from repro.api.reports import sensor_fidelity_report
 
 
 def main():
@@ -77,32 +24,22 @@ def main():
     args = ap.parse_args()
 
     for topo in args.topologies.split(","):
-        cl, trace = record(topo, args.nodes, args.iters)
-        strag_node = trace.meta["straggler_node"]
+        sc = with_overrides(get_scenario(f"cluster/{topo}"),
+                            {"manager": None, "telemetry": {},
+                             "fleet.n_nodes": args.nodes})
+        sv = args.save_trace and f"{args.save_trace}_{topo}"
+        res = run_scenario(sc, iterations=args.iters,
+                           save_trace_path=sv and sv + ".jsonl",
+                           chrome_trace_path=sv and sv + ".chrome.json")
+        trace = res.trace()
+        strag = trace.meta["straggler_node"]
         print(f"\n=== topology {topo}: {args.nodes} nodes x 8 GPUs, "
-              f"straggler on node {strag_node} "
-              f"(device {trace.meta['straggler_hint'][strag_node]}), "
+              f"straggler on node {strag} "
+              f"(device {trace.meta['straggler_hint'][strag]}), "
               f"{len(trace.samples)} node-samples recorded ===")
-        if args.save_trace:
-            p = f"{args.save_trace}_{topo}.jsonl"
-            save_trace(trace, p)
-            c = f"{args.save_trace}_{topo}.chrome.json"
-            export_chrome_trace(trace, c, max_samples=5 * args.nodes)
-            print(f"  wrote {p} and {c} (load the latter in Perfetto)")
-        grid = sweep(trace, node=strag_node)
-        head = "  noise_s   " + "  ".join(f"period={p:<3d} " for p in PERIODS)
-        print(head + "  (straggler-detection accuracy / lead error)")
-        for sigma in NOISES:
-            cells = []
-            for period in PERIODS:
-                acc, err = grid[sigma, period]
-                cells.append(f"{acc:.2f}/{err:6.2f}")
-            print(f"  {sigma:<8g}  " + "  ".join(cells))
-        # fleet-level: the topology lead signal names the straggler node
-        slow = [int(np.argmin(fs.lead)) for fs in trace.fleet[-20:]]
-        named = int(np.bincount(slow).argmax())
-        print(f"  fleet lead signal names node {named} "
-              f"({'correct' if named == strag_node else 'WRONG'})")
+        if res.trace_path:
+            print(f"  wrote {res.trace_path} (+ Perfetto chrome trace)")
+        print(sensor_fidelity_report(trace, node=strag))
 
 
 if __name__ == "__main__":

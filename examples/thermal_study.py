@@ -1,25 +1,16 @@
-"""Reproduce the paper's characterization study (Figs 3-7) in one script:
-settle a node at TDP, print the straggler/leader structure, correlations,
-and the lead-wave dynamics.
+"""Reproduce the paper's characterization study (Figs 3-7): settle a node
+at TDP, print the straggler/leader structure, correlations, and the
+lead-wave dynamics.  Thin wrapper over the ``paper/characterization``
+scenario — ``python -m repro run paper/characterization`` is equivalent
+minus the study-specific report.
 
     PYTHONPATH=src python examples/thermal_study.py [--arch llama3.1-8b]
 """
 import argparse
-import os
-import sys
 
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
-
-import numpy as np                                            # noqa: E402
-
-from repro.configs import get_config                          # noqa: E402
-from repro.core.c3sim import NodeSim, SimConfig               # noqa: E402
-from repro.core.detect import (classify_overlap,              # noqa: E402
-                               lead_value_detect,
-                               overlap_duration_correlation,
-                               straggler_index)
-from repro.core.thermal import MI300X_PRESET                  # noqa: E402
-from repro.core.workload import fsdp_llm_iteration            # noqa: E402
+import _bootstrap  # noqa: F401
+from repro.api import get_scenario, run_scenario, with_overrides
+from repro.api.reports import characterization_report
 
 
 def main():
@@ -28,51 +19,10 @@ def main():
     ap.add_argument("--iters", type=int, default=45)
     args = ap.parse_args()
 
-    cfg = get_config(args.arch)
-    wl = fsdp_llm_iteration(cfg, batch=2, seq=4096, n_shards=8)
-    node = NodeSim(wl, MI300X_PRESET, SimConfig(seed=1, comm_gbps=40.0),
-                   8, seed=1)
-    for _ in range(args.iters):
-        tr = node.step()
-
-    st = node.state
-    s = straggler_index(tr.comp_start)
-    print(f"== {args.arch}: node settled after {args.iters} iterations ==")
-    print(f"temps  (°C):  {np.round(st.temp, 1)}  "
-          f"ratio {st.temp.max() / st.temp.min():.3f}  (paper: 1.155x)")
-    print(f"freqs  (GHz): {np.round(st.freq, 3)}  "
-          f"ratio {st.freq.max() / st.freq.min():.3f}  (paper: 1.062x)")
-    print(f"straggler: GPU{s} (hottest & slowest)")
-
-    w = tr.comp_dur
-    ov = (tr.overlap_ratio * w).sum(1) / w.sum(1)
-    print(f"\nweighted overlap ratio per GPU: {np.round(ov, 3)}")
-    print(f"straggler has the lowest overlap: "
-          f"{ov[s] == ov.min()} (paper Insight 1)")
-
-    const = classify_overlap(tr.overlap_ratio)
-    dv = tr.comp_dur[:, ~const]
-    dc = tr.comp_dur[:, const]
-    print(f"\nconstant-overlap kernels: {const.sum()}/{len(const)}")
-    if (~const).sum():
-        print(f"straggler vs leaders on VARYING-overlap kernels: "
-              f"{dv[s].mean() / np.delete(dv, s, 0).mean():.2f}x duration "
-              f"(<1: straggler faster — paper Insight 3)")
-    print(f"straggler vs leaders on CONSTANT-overlap kernels: "
-          f"{dc[s].mean() / np.delete(dc, s, 0).mean():.2f}x duration "
-          f"(>1: straggler slower)")
-
-    # per-kernel correlation (paper Fig 4 is per unique kernel)
-    import numpy as _np
-    idx = [i for i, n in enumerate(tr.comp_names) if n == "f_qkv_ip"]
-    p, c = overlap_duration_correlation(tr.overlap_ratio[:, idx],
-                                        tr.comp_dur[:, idx])
-    print(f"\noverlap-vs-duration correlation (f_qkv_ip): pearson={p:.3f} "
-          f"cosine={c:.3f} (paper Fig 4: strong)")
-
-    lead = lead_value_detect(tr.comp_start)
-    print(f"\naggregate lead values (ms): {np.round(lead * 1e3, 1)}")
-    print("straggler lead ~ 0 (everyone waits for it) — paper Fig 7")
+    sc = with_overrides(get_scenario("paper/characterization"),
+                        {"workload.arch": args.arch})
+    print(characterization_report(run_scenario(sc,
+                                               iterations=args.iters)))
 
 
 if __name__ == "__main__":

@@ -1,11 +1,11 @@
-"""CI telemetry smoke: record a short managed cluster run, persist the
-trace (JSONL + Chrome trace artifacts), replay the fleet manager offline,
-and fail unless the replayed cap schedule matches the live one bit-for-bit.
+"""CI telemetry smoke: run the registered ``telemetry/replay`` scenario (a
+short managed cluster recorded losslessly), persist the trace (JSONL +
+Chrome trace artifacts), replay the fleet manager offline, and fail unless
+the replayed cap schedule matches the live one bit-for-bit.
 
-The cluster/manager setup is ``benchmarks.telemetry_bench.
-record_managed_cluster`` — the same configuration the benchmark's
-``telemetry_replay`` row measures — so CI validates one setup, not two
-drifting copies.
+The whole setup is the one scenario definition the benchmark's
+``telemetry_replay`` row measures (``repro.api`` registry) — CI validates
+one configuration, not two drifting copies.
 
     PYTHONPATH=src python scripts/telemetry_smoke.py --out DIR
 
@@ -22,13 +22,9 @@ for _p in (_ROOT, os.path.join(_ROOT, "src")):
 
 import numpy as np                                            # noqa: E402
 
-from benchmarks.telemetry_bench import (fleet_cfg,            # noqa: E402
-                                        record_managed_cluster)
-from repro.telemetry import (export_chrome_trace,             # noqa: E402
-                             fleet_replay_matches, load_trace,
-                             replay_fleet, save_trace)
-
-N_NODES, ITERS, TUNE_AFTER = 2, 40, 10
+from repro.api import get_scenario, run_scenario              # noqa: E402
+from repro.telemetry import (fleet_replay_matches, load_trace,  # noqa: E402
+                             replay_fleet)
 
 
 def main() -> int:
@@ -38,19 +34,19 @@ def main() -> int:
     args = ap.parse_args()
     os.makedirs(args.out, exist_ok=True)
 
-    cl, col, live = record_managed_cluster(N_NODES, ITERS, TUNE_AFTER)
-
+    sc = get_scenario("telemetry/replay")
     jsonl = os.path.join(args.out, "cluster_trace.jsonl")
     chrome = os.path.join(args.out, "cluster_trace.chrome.json")
-    lines = save_trace(col, jsonl)
-    events = export_chrome_trace(col, chrome, max_samples=5 * N_NODES)
+    res = run_scenario(sc, save_trace_path=jsonl,
+                       chrome_trace_path=chrome)
+    col, live = res.collector, res.manager
     print(f"recorded {len(col.samples)} node-samples, "
-          f"{len(col.actions)} manager actions "
-          f"({lines} JSONL lines, {events} Chrome-trace events)")
+          f"{len(col.actions)} manager actions -> {jsonl}")
 
-    rp = replay_fleet(load_trace(jsonl), fleet_cfg(N_NODES),
-                      tune_after=TUNE_AFTER)
-    live_caps = np.stack([cl.get_node_caps(n) for n in range(N_NODES)])
+    rp = replay_fleet(load_trace(jsonl), sc.manager.config,
+                      tune_after=sc.manager.tune_after)
+    live_caps = np.stack([res.cluster.get_node_caps(n)
+                          for n in range(res.cluster.N)])
     rp.export_caps(os.path.join(args.out, "caps_node0.json"))
 
     ok = fleet_replay_matches(live, rp, live_caps, log=print)

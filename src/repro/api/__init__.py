@@ -1,0 +1,20 @@
+"""Unified scenario API: declarative experiment specs, a registry of the
+paper's scenarios, and one driver that composes the existing simulation
+layers (`C3Sim`/`ClusterSim`/`PowerManager`/`FleetPowerManager`/
+`TelemetryCollector`).  ``python -m repro`` is the CLI over this package.
+"""
+from repro.api.registry import (SCENARIOS, get_scenario, list_scenarios,
+                                register, scenario_names, variants)
+from repro.api.runner import (BuiltScenario, ScenarioResult, build_scenario,
+                              run_scenario)
+from repro.api.spec import (SPEC_FORMAT, SPEC_VERSION, ManagerSpec, NodeSpec,
+                            Scenario, TelemetrySpec, WorkloadSpec,
+                            grid_variants, with_overrides)
+
+__all__ = [
+    "Scenario", "WorkloadSpec", "NodeSpec", "ManagerSpec", "TelemetrySpec",
+    "SPEC_FORMAT", "SPEC_VERSION", "with_overrides", "grid_variants",
+    "register", "get_scenario", "list_scenarios", "scenario_names",
+    "variants", "SCENARIOS",
+    "build_scenario", "run_scenario", "BuiltScenario", "ScenarioResult",
+]

@@ -1,0 +1,239 @@
+"""``python -m repro`` — the single entry point over the scenario API.
+
+Commands:
+
+  list                       table of registered scenarios
+  show NAME                  print a scenario's JSON spec
+  run NAME|--spec FILE       run a scenario, print metrics (or --json)
+  sweep NAME --set k=v1,v2   grid sweep over dotted-path overrides
+  replay TRACE.jsonl         offline detect/mitigate over a recorded trace
+
+Exit codes: 0 success, 1 runtime failure, 2 unknown scenario / bad usage
+(matching ``benchmarks/run.py --only``).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import List, Optional
+
+from repro.api.registry import get_scenario, list_scenarios, variants
+from repro.api.runner import run_scenario
+from repro.api.spec import Scenario, TelemetrySpec, parse_set_arg, \
+    with_overrides
+
+
+def _load_scenario(args) -> Scenario:
+    """Resolve NAME / --spec into a Scenario; SystemExit(2) on unknown."""
+    if getattr(args, "spec", None):
+        sc = Scenario.load(args.spec)
+    else:
+        if not args.name:
+            print("error: give a scenario NAME or --spec FILE",
+                  file=sys.stderr)
+            raise SystemExit(2)
+        try:
+            sc = get_scenario(args.name)
+        except KeyError as e:
+            print(f"error: {e.args[0]}", file=sys.stderr)
+            raise SystemExit(2)
+    overrides = dict(parse_set_arg(s) for s in (args.set or []))
+    if getattr(args, "engine", None):
+        key = "fleet.engine" if sc.fleet is not None else "sim.engine"
+        overrides.setdefault(key, args.engine)
+    if getattr(args, "seed", None) is not None:
+        overrides.setdefault("seed", args.seed)
+    if overrides:
+        sc = with_overrides(sc, overrides)
+    return sc
+
+
+def _add_scenario_args(p: argparse.ArgumentParser) -> None:
+    p.add_argument("name", nargs="?", help="registered scenario name")
+    p.add_argument("--spec", help="run a JSON scenario file instead")
+    p.add_argument("--iterations", type=int, default=None,
+                   help="override the scenario's iteration count")
+    p.add_argument("--seed", type=int, default=None)
+    p.add_argument("--engine", choices=["event", "batched", "vector"],
+                   help="override the simulation engine")
+    p.add_argument("--set", action="append", metavar="KEY=VALUE",
+                   help="dotted-path override, e.g. --set sim.noise=0.01")
+
+
+def cmd_list(args) -> int:
+    rows = list_scenarios()
+    if args.json:
+        print(json.dumps([{"name": n, "scope": s, "description": d}
+                          for n, s, d in rows], indent=2))
+        return 0
+    width = max(len(n) for n, _, _ in rows)
+    for name, scope, desc in rows:
+        print(f"{name:<{width}s}  {scope:<5s}  {desc}")
+    return 0
+
+
+def cmd_show(args) -> int:
+    sc = _load_scenario(args)
+    print(sc.to_json())
+    return 0
+
+
+def cmd_run(args) -> int:
+    sc = _load_scenario(args)
+    if (args.save_trace or args.chrome_trace) and sc.telemetry is None:
+        sc = sc.replace(telemetry=TelemetrySpec())   # lossless default
+    res = run_scenario(sc, iterations=args.iterations,
+                       save_trace_path=args.save_trace,
+                       chrome_trace_path=args.chrome_trace)
+    payload = res.to_json_dict()
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+    if args.json:
+        print(json.dumps(payload, indent=2, sort_keys=True))
+    else:
+        from repro.api.reports import format_result
+        print(format_result(res))
+        if res.trace_path:
+            print(f"trace written to {res.trace_path}")
+    return 0
+
+
+def cmd_sweep(args) -> int:
+    sc = _load_scenario(args)
+    grid = {}
+    for s in args.grid or []:
+        key, raw = s.split("=", 1)
+        grid[key.strip()] = [parse_set_arg(f"x={v}")[1]
+                             for v in raw.split(",")]
+    if not grid:
+        print("error: sweep needs at least one --grid KEY=V1,V2,...",
+              file=sys.stderr)
+        return 2
+    rows = []
+    for label, variant in variants(sc, grid):
+        res = run_scenario(variant, iterations=args.iterations)
+        rows.append({"variant": label, **res.metrics})
+        if not args.json:
+            keys = [k for k in res.metrics
+                    if k in ("fleet_tput", "throughput", "detect_accuracy")]
+            brief = "  ".join(f"{k}={res.metrics[k]:.4f}" for k in keys)
+            print(f"{label:<48s} {brief}")
+    if args.json:
+        print(json.dumps(rows, indent=2, sort_keys=True))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(rows, f, indent=2, sort_keys=True)
+    return 0
+
+
+def cmd_replay(args) -> int:
+    import numpy as np
+
+    from repro.core.manager import FleetManagerConfig, ManagerConfig
+    from repro.telemetry import (detection_report, load_trace, replay_fleet,
+                                 replay_node)
+    trace = load_trace(args.trace)
+    scope = args.scope
+    if scope == "auto":
+        scope = "fleet" if trace.fleet else "node"
+    out = {"trace": args.trace, "scope": scope}
+    if scope == "fleet":
+        cfg = FleetManagerConfig(use_case=args.use_case, sampling_period=2,
+                                 warmup=2, window_size=2, node_window_size=2,
+                                 power_cap=700.0)
+        rp = replay_fleet(trace, cfg, tune_after=args.tune_after or 0)
+        out["budget_adjustments"] = len(rp.budget_log)
+        out["final_caps"] = np.asarray(rp.final_caps).tolist()
+    else:
+        cfg = ManagerConfig(use_case=args.use_case, sampling_period=2,
+                            warmup=3, window_size=2, power_cap=700.0)
+        rp = replay_node(trace, cfg, node=args.node,
+                         tune_after=args.tune_after)
+        out["cap_adjustments"] = len(rp.cap_schedule)
+        out["final_caps"] = np.asarray(rp.final_caps).tolist()
+        if args.export_caps:
+            rp.export_caps(args.export_caps)
+            out["caps_file"] = args.export_caps
+    try:
+        rep = detection_report(trace, node=args.node)
+        out["detect"] = {"accuracy": rep.accuracy,
+                         "accuracy_imputed": rep.accuracy_imputed,
+                         "lead_rel_error": rep.lead_rel_error,
+                         "majority_correct": rep.majority_correct}
+    except ValueError:
+        pass
+    if args.json:
+        print(json.dumps(out, indent=2, sort_keys=True))
+    else:
+        for k, v in out.items():
+            print(f"{k}: {v}")
+    return 0
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro",
+        description="Lit Silicon scenario runner (see README 'Scenario "
+                    "API')")
+    sub = ap.add_subparsers(dest="command", required=True)
+
+    p = sub.add_parser("list", help="list registered scenarios")
+    p.add_argument("--json", action="store_true")
+    p.set_defaults(fn=cmd_list)
+
+    p = sub.add_parser("show", help="print a scenario's JSON spec")
+    _add_scenario_args(p)
+    p.set_defaults(fn=cmd_show)
+
+    p = sub.add_parser("run", help="run a scenario and print its metrics")
+    _add_scenario_args(p)
+    p.add_argument("--json", action="store_true",
+                   help="print the result as JSON")
+    p.add_argument("--out", help="also write the result JSON to a file")
+    p.add_argument("--save-trace", metavar="PATH",
+                   help="record + write a telemetry JSONL trace")
+    p.add_argument("--chrome-trace", metavar="PATH",
+                   help="also write a Perfetto-loadable Chrome trace")
+    p.set_defaults(fn=cmd_run)
+
+    p = sub.add_parser("sweep", help="grid sweep a scenario")
+    _add_scenario_args(p)
+    p.add_argument("--grid", action="append", metavar="KEY=V1,V2,...",
+                   help="dotted-path grid axis (repeatable)")
+    p.add_argument("--json", action="store_true")
+    p.add_argument("--out", help="write all rows as JSON")
+    p.set_defaults(fn=cmd_sweep)
+
+    p = sub.add_parser("replay",
+                       help="offline detect/mitigate over a recorded trace")
+    p.add_argument("trace", help="telemetry JSONL file (save_trace output)")
+    p.add_argument("--scope", choices=["auto", "node", "fleet"],
+                   default="auto")
+    p.add_argument("--use-case", default="gpu-realloc")
+    p.add_argument("--tune-after", type=int, default=None)
+    p.add_argument("--node", type=int, default=0)
+    p.add_argument("--export-caps", metavar="PATH",
+                   help="write the replayed converged caps file")
+    p.add_argument("--json", action="store_true")
+    p.set_defaults(fn=cmd_replay)
+    return ap
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    args = build_parser().parse_args(argv)
+    try:
+        return args.fn(args)
+    except SystemExit as e:                      # _load_scenario usage errors
+        return int(e.code or 0)
+    except (ValueError, KeyError, FileNotFoundError) as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+    except Exception as e:                       # genuine runtime failure
+        print(f"error: {type(e).__name__}: {e}", file=sys.stderr)
+        return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,235 @@
+"""Registry of named scenarios: the paper's experiments as specs.
+
+Every entry is a zero-argument factory returning a *fresh* `Scenario`
+(factories, not singletons, so callers can mutate freely), registered under
+a ``family/name`` key.  The configurations are the exact ones the pre-API
+example scripts and benchmarks hand-wired — the equivalence tests in
+tests/test_scenario_api.py pin several of them bit-for-bit against the old
+glue — so `python -m repro run <name>` reproduces the corresponding study.
+
+`variants` sweeps a registered scenario over dotted-path grids (the CLI
+``sweep`` command and examples/telemetry_study.py ride it).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Tuple
+
+from repro.api.spec import (ManagerSpec, NodeSpec, Scenario, TelemetrySpec,
+                            WorkloadSpec, grid_variants)
+from repro.core.c3sim import SimConfig
+from repro.core.cluster import ClusterConfig
+from repro.core.manager import FleetManagerConfig, ManagerConfig
+from repro.core.thermal import ChurnEvent, ChurnModel
+from repro.telemetry.sensors import ROCM_SMI_LIKE
+
+__all__ = ["register", "get_scenario", "list_scenarios", "scenario_names",
+           "variants", "SCENARIOS"]
+
+SCENARIOS: Dict[str, Callable[[], Scenario]] = {}
+
+CAP_W = 700.0
+
+
+def register(factory: Callable[[], Scenario]) -> Callable[[], Scenario]:
+    """Register a scenario factory under the name it assigns."""
+    sc = factory()
+    if not sc.name:
+        raise ValueError("registered scenarios must set Scenario.name")
+    if sc.name in SCENARIOS:
+        raise ValueError(f"duplicate scenario name {sc.name!r}")
+    sc.validate()
+    SCENARIOS[sc.name] = factory
+    return factory
+
+
+def get_scenario(name: str) -> Scenario:
+    """A fresh instance of the named scenario; KeyError lists what exists."""
+    if name not in SCENARIOS:
+        raise KeyError(f"unknown scenario {name!r}; available: "
+                       f"{', '.join(scenario_names())}")
+    return SCENARIOS[name]()
+
+
+def scenario_names() -> List[str]:
+    return sorted(SCENARIOS)
+
+
+def list_scenarios() -> List[Tuple[str, str, str]]:
+    """(name, scope, description) rows for the CLI table."""
+    rows = []
+    for name in scenario_names():
+        sc = SCENARIOS[name]()
+        scope = "fleet" if sc.fleet is not None else "node"
+        rows.append((name, scope, sc.description))
+    return rows
+
+
+def variants(name_or_scenario, grid: Dict[str, list]
+             ) -> List[Tuple[str, Scenario]]:
+    """Grid sweep over a named (or given) scenario; see `grid_variants`."""
+    base = (get_scenario(name_or_scenario)
+            if isinstance(name_or_scenario, str) else name_or_scenario)
+    return grid_variants(base, grid)
+
+
+# --------------------------------------------------------------------------- #
+# shared building blocks (paper Table II defaults)
+# --------------------------------------------------------------------------- #
+def _sim() -> SimConfig:
+    # calibrated defaults every study uses: seed 1, 40 GB/s collectives,
+    # the batched engine (trace-identical to the event reference)
+    return SimConfig(seed=1, comm_gbps=40.0, engine="batched")
+
+
+def _wl8() -> WorkloadSpec:
+    # the cluster studies' reduced 8-layer Llama (fast, same dynamics)
+    return WorkloadSpec(arch="llama3.1-8b", n_layers=8)
+
+
+def _node_mgr(use_case: str) -> ManagerSpec:
+    return ManagerSpec(scope="node", config=ManagerConfig(
+        use_case=use_case, sampling_period=2, warmup=3, window_size=2,
+        power_cap=CAP_W, cpu_budget=20.0))
+
+
+def _fleet_mgr(n_nodes: int) -> ManagerSpec:
+    return ManagerSpec(scope="fleet", tune_after=20,
+                       config=FleetManagerConfig(
+                           use_case="gpu-realloc", sampling_period=2,
+                           warmup=2, window_size=2, node_window_size=2,
+                           power_cap=CAP_W,
+                           cluster_power_budget=n_nodes * 8 * CAP_W))
+
+
+def _managed_fleet(topology: str) -> Scenario:
+    return Scenario(
+        name=f"cluster/{topology}",
+        description=(f"4-node {topology} fleet, one hot GPU on node 0, "
+                     "hierarchical FleetPowerManager under a fixed "
+                     "cluster budget"),
+        workload=_wl8(), sim=_sim(),
+        node=NodeSpec(caps_w=CAP_W),
+        fleet=ClusterConfig(n_nodes=4, straggler_boost=1.28,
+                            topology=topology),
+        manager=_fleet_mgr(4), iterations=120, seed=5)
+
+
+# --------------------------------------------------------------------------- #
+# paper/* — the node-level studies (Table I / Figs 3-9)
+# --------------------------------------------------------------------------- #
+@register
+def paper_characterization() -> Scenario:
+    return Scenario(
+        name="paper/characterization",
+        description="settle one node at TDP and expose the straggler / "
+                    "lead-wave structure (paper Figs 3-7)",
+        workload=WorkloadSpec(), sim=_sim(),
+        node=NodeSpec(), iterations=45, seed=1)
+
+
+def _paper_use_case(name: str, use_case: str, blurb: str) -> Scenario:
+    return Scenario(
+        name=name,
+        description=f"closed-loop {use_case} on one node ({blurb})",
+        workload=WorkloadSpec(), sim=_sim(), node=NodeSpec(),
+        manager=_node_mgr(use_case), iterations=200, seed=1)
+
+
+@register
+def paper_table1_tdp() -> Scenario:
+    return _paper_use_case("paper/table1-tdp", "gpu-red",
+                           "no node cap: leaders capped down, power drops")
+
+
+@register
+def paper_node_cap() -> Scenario:
+    return _paper_use_case("paper/node-cap", "gpu-realloc",
+                           "node cap below provisioned: straggler boosted "
+                           "at equal node power")
+
+
+@register
+def paper_cpu_slosh() -> Scenario:
+    return _paper_use_case("paper/cpu-slosh", "cpu-slosh",
+                           "idle-CPU budget sloshed to the devices")
+
+
+# --------------------------------------------------------------------------- #
+# cluster/* — fleet-scale scenarios
+# --------------------------------------------------------------------------- #
+@register
+def cluster_dp() -> Scenario:
+    return _managed_fleet("dp")
+
+
+@register
+def cluster_pp() -> Scenario:
+    return _managed_fleet("pp")
+
+
+@register
+def cluster_tp() -> Scenario:
+    return _managed_fleet("tp")
+
+
+@register
+def cluster_hetero_cooling() -> Scenario:
+    return Scenario(
+        name="cluster/hetero-cooling",
+        description="mixed air-/liquid-cooled fleet: the preset, not a "
+                    "boosted device, creates the straggler",
+        workload=_wl8(), sim=_sim(), node=NodeSpec(caps_w=CAP_W),
+        fleet=ClusterConfig(n_nodes=4, straggler_boost=1.0,
+                            inter_node_gbps=100.0,
+                            node_presets=["mi300x", "mi300x-air",
+                                          "mi300x", "mi300x"]),
+        iterations=50, seed=5)
+
+
+@register
+def cluster_churn() -> Scenario:
+    # event times pinned to the benchmark's probed schedule (~0.395 s per
+    # fleet iteration at 100 GB/s): emerge on node 0 at t=0, migrate to
+    # node 2 at ~40% of an 80-iteration horizon
+    return Scenario(
+        name="cluster/churn",
+        description="cooling churn: a straggler emerges on node 0 and "
+                    "migrates to node 2 mid-run",
+        workload=_wl8(), sim=_sim(), node=NodeSpec(caps_w=CAP_W),
+        fleet=ClusterConfig(
+            n_nodes=4, straggler_boost=1.0, inter_node_gbps=100.0,
+            churn={0: ChurnModel(events=[ChurnEvent(0.0, 3, 1.35)]),
+                   2: ChurnModel(events=[ChurnEvent(12.6, 5, 1.8)])}),
+        iterations=80, seed=5)
+
+
+# --------------------------------------------------------------------------- #
+# telemetry/* — recording / sensor-fidelity scenarios
+# --------------------------------------------------------------------------- #
+@register
+def telemetry_rocm_smi_like() -> Scenario:
+    return Scenario(
+        name="telemetry/rocm-smi-like",
+        description="record one hot node through the rocm-smi-style "
+                    "sensor preset and report detection quality",
+        workload=_wl8(), sim=_sim(), node=NodeSpec(),
+        telemetry=TelemetrySpec(sensor=ROCM_SMI_LIKE, keep_truth=True),
+        iterations=60, seed=1)
+
+
+@register
+def telemetry_replay() -> Scenario:
+    return Scenario(
+        name="telemetry/replay",
+        description="managed 2-node cluster recorded losslessly — the "
+                    "record/replay bit-for-bit reference (CI smoke + "
+                    "telemetry_bench share it)",
+        workload=_wl8(), sim=_sim(), node=NodeSpec(caps_w=CAP_W),
+        fleet=ClusterConfig(n_nodes=2, straggler_boost=1.28),
+        manager=ManagerSpec(scope="fleet", tune_after=10,
+                            config=FleetManagerConfig(
+                                use_case="gpu-realloc", sampling_period=2,
+                                warmup=2, window_size=2, node_window_size=2,
+                                power_cap=CAP_W,
+                                cluster_power_budget=2 * 8 * CAP_W)),
+        telemetry=TelemetrySpec(), iterations=40, seed=5)

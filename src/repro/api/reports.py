@@ -1,0 +1,203 @@
+"""Study drivers + human-readable reports over scenario results.
+
+The pre-API example scripts each carried ~50 lines of study-specific
+composition and printing; that logic lives here now, shared by the thin
+`examples/*.py` wrappers and the `python -m repro run` human output, so a
+study reads identically from either entry point.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, List, Optional, Tuple
+
+import numpy as np
+
+from repro.api.registry import CAP_W, get_scenario
+from repro.api.runner import ScenarioResult, run_scenario
+from repro.api.spec import Scenario
+from repro.core.detect import (classify_overlap, lead_value_detect,
+                               overlap_duration_correlation, straggler_index)
+from repro.telemetry.replay import detection_report
+from repro.telemetry.sensors import SensorConfig, SensorModel
+from repro.telemetry.trace_io import TelemetryTrace
+
+__all__ = ["characterization_report", "use_case_table", "recovery_study",
+           "sensor_fidelity_report", "metrics_table", "format_result"]
+
+
+def metrics_table(metrics: Dict[str, float]) -> str:
+    width = max((len(k) for k in metrics), default=0)
+    lines = []
+    for k in sorted(metrics):
+        v = metrics[k]
+        val = f"{v:.6g}" if isinstance(v, float) else str(v)
+        lines.append(f"  {k:<{width}s}  {val}")
+    return "\n".join(lines)
+
+
+def format_result(res: ScenarioResult) -> str:
+    sc = res.scenario
+    scope = ("fleet" if sc.fleet is not None else "node")
+    head = (f"== {sc.name or 'scenario'} ({scope}, "
+            f"{res.iterations} iterations, seed {sc.seed}) ==")
+    return head + "\n" + metrics_table(res.metrics)
+
+
+# --------------------------------------------------------------------------- #
+# paper/characterization (thermal_study)
+# --------------------------------------------------------------------------- #
+def characterization_report(res: ScenarioResult) -> str:
+    """Paper Figs 3-7 on a settled node: straggler / overlap / lead-wave
+    structure (the old examples/thermal_study.py output)."""
+    node, tr = res.node, res.last_trace
+    st = node.state
+    s = straggler_index(tr.comp_start)
+    out = [f"== {res.scenario.workload.arch}: node settled after "
+           f"{res.iterations} iterations ==",
+           f"temps  (°C):  {np.round(st.temp, 1)}  "
+           f"ratio {st.temp.max() / st.temp.min():.3f}  (paper: 1.155x)",
+           f"freqs  (GHz): {np.round(st.freq, 3)}  "
+           f"ratio {st.freq.max() / st.freq.min():.3f}  (paper: 1.062x)",
+           f"straggler: GPU{s} (hottest & slowest)"]
+
+    w = tr.comp_dur
+    ov = (tr.overlap_ratio * w).sum(1) / w.sum(1)
+    out += [f"\nweighted overlap ratio per GPU: {np.round(ov, 3)}",
+            f"straggler has the lowest overlap: "
+            f"{ov[s] == ov.min()} (paper Insight 1)"]
+
+    const = classify_overlap(tr.overlap_ratio)
+    dv = tr.comp_dur[:, ~const]
+    dc = tr.comp_dur[:, const]
+    out.append(f"\nconstant-overlap kernels: {const.sum()}/{len(const)}")
+    if (~const).sum():
+        out.append(f"straggler vs leaders on VARYING-overlap kernels: "
+                   f"{dv[s].mean() / np.delete(dv, s, 0).mean():.2f}x "
+                   f"duration (<1: straggler faster — paper Insight 3)")
+    out.append(f"straggler vs leaders on CONSTANT-overlap kernels: "
+               f"{dc[s].mean() / np.delete(dc, s, 0).mean():.2f}x duration "
+               f"(>1: straggler slower)")
+
+    idx = [i for i, n in enumerate(tr.comp_names) if n == "f_qkv_ip"]
+    if idx:
+        p, c = overlap_duration_correlation(tr.overlap_ratio[:, idx],
+                                            tr.comp_dur[:, idx])
+        out.append(f"\noverlap-vs-duration correlation (f_qkv_ip): "
+                   f"pearson={p:.3f} cosine={c:.3f} (paper Fig 4: strong)")
+
+    lead = lead_value_detect(tr.comp_start)
+    out += [f"\naggregate lead values (ms): {np.round(lead * 1e3, 1)}",
+            "straggler lead ~ 0 (everyone waits for it) — paper Fig 7"]
+    return "\n".join(out)
+
+
+# --------------------------------------------------------------------------- #
+# paper/table1-* (power_management)
+# --------------------------------------------------------------------------- #
+def use_case_table(results: Dict[str, ScenarioResult]) -> str:
+    """Table-I comparison over the three managed node scenarios."""
+    out = [f"{'use case':14s} {'throughput':>11s} {'node power':>11s}  "
+           f"(paper: Red ~0%/-4%, Realloc +3%/0%, Slosh +4%/+3%)"]
+    for uc, res in results.items():
+        caps = np.round(res.node.history[-1]["cap"], 0).astype(int)
+        out.append(f"{uc:14s} {res.metrics['tput_ratio'] - 1:+10.2%} "
+                   f"{res.metrics['power_ratio'] - 1:+10.2%}   caps={caps}")
+    return "\n".join(out)
+
+
+# --------------------------------------------------------------------------- #
+# cluster/* recovery comparison (cluster_study)
+# --------------------------------------------------------------------------- #
+def recovery_study(topology: str = "dp", n_nodes: int = 4,
+                   iterations: int = 60) -> Tuple[str, dict]:
+    """Healthy vs one-hot-GPU vs managed fleet under one provisioned
+    budget (the old examples/cluster_study.py).  Returns (report, data).
+
+    The managed leg *is* the registered ``cluster/<topology>`` scenario
+    (resized to ``n_nodes``); the healthy/straggler legs are the same
+    scenario with the manager stripped and the boost varied.
+    """
+    base = get_scenario(f"cluster/{topology}")
+    base = base.replace(
+        fleet=dataclasses.replace(base.fleet, n_nodes=n_nodes),
+        manager=dataclasses.replace(
+            base.manager, config=dataclasses.replace(
+                base.manager.config,
+                cluster_power_budget=n_nodes * 8 * CAP_W)))
+    healthy = base.replace(
+        manager=None, iterations=iterations,
+        fleet=dataclasses.replace(base.fleet, straggler_boost=1.0))
+    strag = base.replace(manager=None, iterations=iterations)
+    managed = base.replace(iterations=2 * iterations)
+    managed.manager.tune_after = iterations // 3
+
+    r_h, r_s = run_scenario(healthy), run_scenario(strag)
+    r_m = run_scenario(managed)
+    tp_h, tp_s = r_h.metrics["fleet_tput"], r_s.metrics["fleet_tput"]
+    tp_m = r_m.metrics["fleet_tput"]
+    rec = (tp_m - tp_s) / max(tp_h - tp_s, 1e-12)
+    budget = n_nodes * 8 * CAP_W
+
+    wait_kind = {"dp": "every node waits at the barrier",
+                 "pp": "downstream stages ride the bubble",
+                 "tp": "every layer's collective drags"}[topology]
+    out = [f"== {n_nodes}-node {topology} fleet, one hot GPU on node 0 ==",
+           f"exposed inter-node comm: "
+           f"{r_s.cluster.history[-1]['comm_time'] * 1e3:.1f} ms per "
+           f"iteration",
+           f"healthy fleet:   {tp_h:.4f} iter/s",
+           f"with straggler:  {tp_s:.4f} iter/s "
+           f"({(tp_s - tp_h) / tp_h:+.2%} — {wait_kind})",
+           f"slowest node (last 20 iters): "
+           f"{int(np.bincount([h['slowest_node'] for h in r_s.cluster.history[-20:]]).argmax())}",
+           f"\n== FleetPowerManager (cluster budget {budget:.0f} W) ==",
+           f"managed fleet:   {tp_m:.4f} iter/s  "
+           f"(recovers {rec:.0%} of the straggler gap)",
+           f"node budgets (W): "
+           f"{np.round(r_m.manager.node_budgets).astype(int)}  "
+           f"<- the topology's lead signal steers budget to the straggler",
+           f"node 0 caps (W):  "
+           f"{np.round(r_m.cluster.get_node_caps(0)).astype(int)}",
+           f"fleet power:      {r_m.metrics['fleet_power_w']:.0f} W "
+           f"(budget {budget:.0f} W)"]
+    data = {"healthy": r_h, "straggler": r_s, "managed": r_m,
+            "recovered": rec}
+    return "\n".join(out), data
+
+
+# --------------------------------------------------------------------------- #
+# telemetry sensor-fidelity sweep (telemetry_study)
+# --------------------------------------------------------------------------- #
+def sensor_fidelity_report(trace: TelemetryTrace, node: int,
+                           noises: Iterable[float] = (0.0, 0.002, 0.01,
+                                                      0.05, 0.2),
+                           periods: Iterable[int] = (1, 10, 25),
+                           n_seeds: int = 5) -> str:
+    """Degrade one recorded trace through a noise × period sensor grid and
+    tabulate straggler-detection accuracy / lead error (the old
+    examples/telemetry_study.py sweep)."""
+    from repro.telemetry.replay import degrade
+    noises, periods = list(noises), list(periods)
+    out = ["  noise_s   "
+           + "  ".join(f"period={p:<3d} " for p in periods)
+           + "  (straggler-detection accuracy / lead error)"]
+    for sigma in noises:
+        cells = []
+        for period in periods:
+            accs, errs = [], []
+            for s in range(n_seeds):
+                d = degrade(trace, SensorModel(SensorConfig(
+                    noise_time_s=sigma, sample_period=period,
+                    quant_time_s=1e-5, seed=s)))
+                rep = detection_report(d, node=node)
+                accs.append(rep.accuracy)
+                errs.append(rep.lead_rel_error)
+            cells.append(f"{np.mean(accs):.2f}/{np.mean(errs):6.2f}")
+        out.append(f"  {sigma:<8g}  " + "  ".join(cells))
+    slow = [int(np.argmin(fs.lead)) for fs in trace.fleet[-20:]]
+    if slow:
+        named = int(np.bincount(slow).argmax())
+        strag = int(trace.meta.get("straggler_node", 0))
+        out.append(f"  fleet lead signal names node {named} "
+                   f"({'correct' if named == strag else 'WRONG'})")
+    return "\n".join(out)

@@ -1,0 +1,279 @@
+"""`run_scenario`: one driver over the existing simulation layers.
+
+The runner owns *composition only*: it builds the workload, the node or
+cluster simulator, an optional telemetry collector and an optional
+closed-loop manager from a :class:`~repro.api.spec.Scenario`, drives the
+run with the same call sequence the hand-wired scripts used (so results
+are bit-identical — tested), and condenses the outcome into a
+:class:`ScenarioResult` whose ``metrics`` dict is flat, JSON-safe and
+stable enough for the CI regression gate to diff.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.api.spec import Scenario
+from repro.core.backends import ClusterSimBackend, SimBackend
+from repro.core.c3sim import IterationTrace, NodeSim
+from repro.core.cluster import ClusterSim
+from repro.core.detect import lead_value_detect, straggler_index
+from repro.core.manager import run_closed_loop, run_fleet_closed_loop
+from repro.telemetry.collector import TelemetryCollector
+from repro.telemetry.replay import detection_report
+from repro.telemetry.sensors import SensorModel
+from repro.telemetry.trace_io import (TelemetryTrace, export_chrome_trace,
+                                      save_trace)
+
+__all__ = ["BuiltScenario", "ScenarioResult", "build_scenario",
+           "run_scenario"]
+
+
+class _CapturingSimBackend(SimBackend):
+    """`SimBackend` that remembers the last iteration's trace (the manager
+    loop otherwise consumes and drops it); arithmetic untouched."""
+
+    last_trace: Optional[IterationTrace] = None
+
+    def run_iteration(self) -> IterationTrace:
+        self.last_trace = super().run_iteration()
+        return self.last_trace
+
+
+class _CapturingClusterBackend(ClusterSimBackend):
+    last_traces: Optional[List[IterationTrace]] = None
+
+    def run_iteration(self) -> List[IterationTrace]:
+        self.last_traces = super().run_iteration()
+        return self.last_traces
+
+
+@dataclass
+class BuiltScenario:
+    """The composed-but-not-yet-run simulation objects — what benchmarks
+    use when they need to own the timing loop themselves."""
+
+    scenario: Scenario
+    workload: object
+    node: Optional[NodeSim] = None          # single-node scenarios
+    cluster: Optional[ClusterSim] = None    # fleet scenarios
+    collector: Optional[TelemetryCollector] = None
+
+    @property
+    def sim(self):
+        return self.node if self.node is not None else self.cluster
+
+
+@dataclass
+class ScenarioResult:
+    scenario: Scenario
+    iterations: int
+    metrics: Dict[str, float] = field(default_factory=dict)
+    # live object handles for study-specific reporting (not serialized)
+    node: Optional[NodeSim] = None
+    cluster: Optional[ClusterSim] = None
+    manager: Optional[object] = None
+    collector: Optional[TelemetryCollector] = None
+    last_trace: Optional[IterationTrace] = None
+    last_traces: Optional[List[IterationTrace]] = None
+    trace_path: Optional[str] = None
+
+    def to_json_dict(self) -> dict:
+        return {"scenario": self.scenario.name or None,
+                "iterations": self.iterations,
+                "seed": self.scenario.seed,
+                "metrics": self.metrics,
+                "trace_path": self.trace_path}
+
+    def trace(self) -> TelemetryTrace:
+        if self.collector is None:
+            raise ValueError("scenario ran without telemetry; set "
+                             "Scenario.telemetry to record a trace")
+        return TelemetryTrace.from_collector(self.collector)
+
+
+# --------------------------------------------------------------------------- #
+# build
+# --------------------------------------------------------------------------- #
+def build_scenario(sc: Scenario,
+                   iterations: Optional[int] = None) -> BuiltScenario:
+    """Compose the simulation objects exactly as the pre-API scripts did
+    (same constructor arguments, same ordering: build, cap, attach)."""
+    sc.validate()
+    iters = sc.iterations if iterations is None else int(iterations)
+    wl = sc.workload.build()
+    preset = sc.node.build_preset()
+    collector = None
+    if sc.telemetry is not None:
+        t = sc.telemetry
+        max_samples = (t.max_samples if t.max_samples is not None
+                       else iters + 8)
+        collector = TelemetryCollector(
+            sensor_cfg=t.sensor, max_samples=max_samples,
+            keep_truth=t.keep_truth, with_kernels=t.with_kernels)
+    if sc.fleet is None:
+        node = NodeSim(wl, preset, sc.sim, n_devices=sc.node.devices,
+                       seed=sc.seed,
+                       straggler_boost=sc.node.straggler_boost)
+        if sc.node.caps_w is not None:
+            node.set_power_caps(np.full(node.G, float(sc.node.caps_w)))
+        if collector is not None:
+            collector.attach_node(node)
+        return BuiltScenario(sc, wl, node=node, collector=collector)
+    cluster = ClusterSim(wl, preset, sc.sim, sc.fleet,
+                         devices_per_node=sc.node.devices, seed=sc.seed)
+    if sc.node.caps_w is not None:
+        for n in range(cluster.N):
+            cluster.set_node_caps(n, np.full(cluster.G,
+                                             float(sc.node.caps_w)))
+    if collector is not None:
+        collector.attach_cluster(cluster)
+    return BuiltScenario(sc, wl, cluster=cluster, collector=collector)
+
+
+# --------------------------------------------------------------------------- #
+# run
+# --------------------------------------------------------------------------- #
+def run_scenario(sc: Scenario, *, iterations: Optional[int] = None,
+                 save_trace_path: Optional[str] = None,
+                 chrome_trace_path: Optional[str] = None) -> ScenarioResult:
+    """Build + drive + summarize one scenario.
+
+    ``iterations`` overrides ``sc.iterations`` (CLI ``--iterations``;
+    registry smoke tests run every scenario at 2).  ``save_trace_path`` /
+    ``chrome_trace_path`` persist the recorded telemetry (requires
+    ``sc.telemetry``; the CLI enables a lossless default when asked to
+    save without one).
+    """
+    if (save_trace_path or chrome_trace_path) and sc.telemetry is None:
+        raise ValueError("saving a trace requires Scenario.telemetry")
+    iters = sc.iterations if iterations is None else int(iterations)
+    built = build_scenario(sc, iterations=iters)
+    result = ScenarioResult(scenario=sc, iterations=iters,
+                            node=built.node, cluster=built.cluster,
+                            collector=built.collector)
+
+    if built.node is not None:
+        _run_node(sc, built, iters, result)
+    else:
+        _run_fleet(sc, built, iters, result)
+
+    result.metrics = _metrics(sc, iters, result)
+    if save_trace_path:
+        save_trace(built.collector, save_trace_path)
+        result.trace_path = save_trace_path
+    if chrome_trace_path:
+        export_chrome_trace(built.collector, chrome_trace_path)
+    return result
+
+
+def _run_node(sc: Scenario, built: BuiltScenario, iters: int,
+              result: ScenarioResult) -> None:
+    node = built.node
+    if sc.manager is not None:
+        backend = _CapturingSimBackend(node)
+        sensor = (SensorModel(sc.manager.sensor)
+                  if sc.manager.sensor is not None else None)
+        result.manager = run_closed_loop(
+            backend, sc.manager.config, iters,
+            tune_after=sc.manager.tune_after, sensor=sensor,
+            collector=built.collector)
+        result.last_trace = backend.last_trace
+    else:
+        for _ in range(iters):
+            result.last_trace = node.step()
+
+
+def _run_fleet(sc: Scenario, built: BuiltScenario, iters: int,
+               result: ScenarioResult) -> None:
+    cluster = built.cluster
+    if sc.manager is not None:
+        backend = _CapturingClusterBackend(cluster)
+        result.manager = run_fleet_closed_loop(
+            backend, sc.manager.config, iters,
+            tune_after=sc.manager.tune_after, collector=built.collector)
+        result.last_traces = backend.last_traces
+    else:
+        for _ in range(iters):
+            result.last_traces = cluster.step()
+
+
+# --------------------------------------------------------------------------- #
+# metrics
+# --------------------------------------------------------------------------- #
+def _mean(xs) -> float:
+    xs = list(xs)
+    return float(np.mean(xs)) if xs else float("nan")
+
+
+def _metrics(sc: Scenario, iters: int, r: ScenarioResult) -> Dict[str, float]:
+    last = max(1, min(30, iters))
+    m: Dict[str, float] = {"iterations": iters}
+    if r.node is not None:
+        h = r.node.history
+        tail = h[-last:]
+        m["throughput"] = _mean(x["throughput"] for x in tail)
+        m["node_power_w"] = _mean(np.sum(x["power"]) for x in tail)
+        st = r.node.state
+        m["temp_ratio"] = float(st.temp.max() / st.temp.min())
+        m["freq_ratio"] = float(st.freq.max() / st.freq.min())
+        if r.last_trace is not None:
+            m["straggler_device"] = straggler_index(r.last_trace.comp_start)
+            lead = lead_value_detect(r.last_trace.comp_start)
+            m["lead_span_ms"] = float((lead.max() - lead.min()) * 1e3)
+        mgr = r.manager
+        if mgr is not None:
+            tune = (sc.manager.tune_after if sc.manager.tune_after
+                    is not None else iters // 2)
+            pre = h[max(0, tune - last):tune]
+            if pre and tail:
+                m["tput_ratio"] = (_mean(x["throughput"] for x in tail)
+                                   / _mean(x["throughput"] for x in pre))
+                m["power_ratio"] = (_mean(np.sum(x["power"]) for x in tail)
+                                    / _mean(np.sum(x["power"])
+                                            for x in pre))
+            caps = mgr.backend.get_power_caps()
+            m["cap_spread_w"] = float(caps.max() - caps.min())
+            m["n_cap_adjustments"] = len(mgr.adjust_log)
+    else:
+        cl = r.cluster
+        m["fleet_tput"] = cl.fleet_throughput(last=last)
+        m["fleet_power_w"] = cl.fleet_power(last=last)
+        tail = cl.history[-last:]
+        if tail:
+            slow = [x["slowest_node"] for x in tail]
+            m["slowest_node_mode"] = int(np.bincount(slow).argmax())
+            m["comm_time_ms"] = float(tail[-1]["comm_time"] * 1e3)
+            m["straggler_node_named"] = int(np.argmin(tail[-1]["lead"]))
+        mgr = r.manager
+        if mgr is not None:
+            m["node0_budget_w"] = float(mgr.node_budgets[0])
+            m["budget_spread_w"] = float(mgr.node_budgets.max()
+                                         - mgr.node_budgets.min())
+            m["n_budget_adjustments"] = len(mgr.budget_log)
+    if r.collector is not None:
+        m["telemetry_samples"] = len(r.collector.samples)
+        m.update(_detection_metrics(sc, r))
+    return m
+
+
+def _detection_metrics(sc: Scenario, r: ScenarioResult) -> Dict[str, float]:
+    """Straggler-detection quality of the recorded (possibly degraded)
+    stream, when the trace carries enough to judge it."""
+    col = r.collector
+    if not col.samples or not sc.telemetry.with_kernels:
+        return {}
+    trace = TelemetryTrace.from_collector(col)
+    node = int(trace.meta.get("straggler_node", 0)) if r.cluster else 0
+    try:
+        rep = detection_report(trace, node=node)
+    except ValueError:
+        return {}
+    out = {"detect_accuracy": rep.accuracy,
+           "detect_lead_err": rep.lead_rel_error}
+    if rep.accuracy_imputed is not None:
+        out["detect_accuracy_imputed"] = rep.accuracy_imputed
+    return out

@@ -1,0 +1,374 @@
+"""Declarative scenario specs: the single serializable front door.
+
+A :class:`Scenario` names everything one Lit Silicon experiment needs —
+workload, simulator knobs, node, optional fleet (topology / heterogeneity /
+churn), optional manager policy, optional telemetry, iteration count and
+seed — as a composition of the repo's *existing* config dataclasses
+(`SimConfig`, `ClusterConfig`, `ManagerConfig`/`FleetManagerConfig`,
+`SensorConfig`).  Nothing is re-modeled: `run_scenario` (runner.py) hands
+these configs to the same constructors the hand-wired scripts used, so a
+spec-driven run is bit-for-bit the script it replaced (tested in
+tests/test_scenario_api.py).
+
+Serialization contract (all tested):
+
+  * versioned envelope — ``{"format": "lit-silicon-scenario", "version": 1,
+    "scenario": {...}}``; unknown newer versions and foreign formats are
+    rejected on load;
+  * exact float round-trip — JSON emits the shortest repr that parses back
+    to the same IEEE-754 double; NaN/±Inf (invalid JSON) are encoded as
+    ``{"$float": "nan" | "inf" | "-inf"}`` so ``allow_nan=False`` can be
+    enforced;
+  * unknown keys are errors, at every nesting level, with the dotted path
+    in the message — a typo'd knob can never silently fall back to a
+    default;
+  * omitted keys take the dataclass defaults, so specs stay minimal.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.core.c3sim import SimConfig
+from repro.core.cluster import ClusterConfig
+from repro.core.manager import FleetManagerConfig, ManagerConfig
+from repro.core.thermal import PRESETS, ChurnEvent, ChurnModel, DevicePreset
+from repro.core.workload import Workload, fsdp_llm_iteration
+from repro.telemetry.sensors import SensorConfig
+
+SPEC_FORMAT = "lit-silicon-scenario"
+SPEC_VERSION = 1
+
+__all__ = [
+    "SPEC_FORMAT", "SPEC_VERSION", "WorkloadSpec", "NodeSpec", "ManagerSpec",
+    "TelemetrySpec", "Scenario", "scenario_from_dict", "with_overrides",
+]
+
+
+# --------------------------------------------------------------------------- #
+# spec dataclasses
+# --------------------------------------------------------------------------- #
+@dataclass
+class WorkloadSpec:
+    """What the devices execute each iteration (workload.py builder args)."""
+
+    arch: str = "llama3.1-8b"
+    n_layers: Optional[int] = None      # None: the architecture's default
+    batch: int = 2
+    seq: int = 4096
+    n_shards: int = 8
+
+    def build(self) -> Workload:
+        from repro.configs import get_config
+        cfg = get_config(self.arch)
+        if self.n_layers is not None:
+            cfg = cfg.replace(n_layers=self.n_layers)
+        return fsdp_llm_iteration(cfg, batch=self.batch, seq=self.seq,
+                                  n_shards=self.n_shards)
+
+
+@dataclass
+class NodeSpec:
+    """Per-node hardware: preset, device count, the boosted hot device
+    (single-node scenarios; fleets take theirs from `ClusterConfig`), and
+    the initial per-device power cap applied before the run."""
+
+    preset: str = "mi300x"              # PRESETS name
+    devices: int = 8
+    straggler_boost: float = 1.28
+    caps_w: Optional[float] = None      # None: leave thermal-model default
+
+    def build_preset(self) -> DevicePreset:
+        if self.preset not in PRESETS:
+            raise ValueError(f"unknown device preset {self.preset!r} "
+                             f"(expected one of {sorted(PRESETS)})")
+        return PRESETS[self.preset]
+
+
+@dataclass
+class ManagerSpec:
+    """Closed-loop power management policy.
+
+    ``scope`` selects the controller: ``"node"`` runs a `PowerManager`
+    over a single node (`config` is a `ManagerConfig`); ``"fleet"`` runs
+    the hierarchical `FleetPowerManager` over a cluster (`config` is a
+    `FleetManagerConfig`).  ``tune_after`` is the iteration the loop is
+    enabled from (None: halfway, the paper-Fig-9 default).  ``sensor``
+    optionally routes the node manager's detection through a noisy
+    `SensorModel` instead of the oracle kernel-start matrices.
+    """
+
+    scope: str = "node"                 # node | fleet
+    config: ManagerConfig = field(default_factory=ManagerConfig)
+    tune_after: Optional[int] = None
+    sensor: Optional[SensorConfig] = None
+
+    def validate(self, has_fleet: bool) -> None:
+        if self.scope not in ("node", "fleet"):
+            raise ValueError(f"manager.scope must be 'node' or 'fleet', "
+                             f"got {self.scope!r}")
+        if self.scope == "fleet" and not has_fleet:
+            raise ValueError("manager.scope='fleet' requires a fleet spec")
+        if self.scope == "node" and has_fleet:
+            raise ValueError("fleet scenarios take manager.scope='fleet' "
+                             "(per-node managers are nested inside the "
+                             "FleetPowerManager)")
+        if self.scope == "fleet" and not isinstance(self.config,
+                                                    FleetManagerConfig):
+            raise ValueError("manager.scope='fleet' needs a "
+                             "FleetManagerConfig")
+
+
+@dataclass
+class TelemetrySpec:
+    """Trace recording through a `TelemetryCollector`."""
+
+    sensor: SensorConfig = field(default_factory=SensorConfig)
+    max_samples: Optional[int] = None   # None: sized to hold the whole run
+    keep_truth: bool = False
+    with_kernels: bool = True
+
+
+@dataclass
+class Scenario:
+    """One reproducible experiment, end to end."""
+
+    name: str = ""
+    description: str = ""
+    workload: WorkloadSpec = field(default_factory=WorkloadSpec)
+    sim: SimConfig = field(default_factory=SimConfig)
+    node: NodeSpec = field(default_factory=NodeSpec)
+    fleet: Optional[ClusterConfig] = None     # None: single-node scenario
+    manager: Optional[ManagerSpec] = None     # None: unmanaged run
+    telemetry: Optional[TelemetrySpec] = None  # None: no recording
+    iterations: int = 60
+    seed: int = 5                       # NodeSim / ClusterSim thermal seed
+
+    # -------------------------------------------------------------- helpers
+    def validate(self) -> "Scenario":
+        self.node.build_preset()
+        if self.manager is not None:
+            self.manager.validate(self.fleet is not None)
+        if self.iterations < 1:
+            raise ValueError("iterations must be >= 1")
+        return self
+
+    def replace(self, **kw) -> "Scenario":
+        return dataclasses.replace(self, **kw)
+
+    # -------------------------------------------------------- serialization
+    def to_dict(self) -> dict:
+        return _encode(self)
+
+    def to_json(self, indent: Optional[int] = 2) -> str:
+        return json.dumps({"format": SPEC_FORMAT, "version": SPEC_VERSION,
+                           "scenario": self.to_dict()},
+                          indent=indent, allow_nan=False)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Scenario":
+        return _decode_dataclass(cls, d, "scenario").validate()
+
+    @classmethod
+    def from_json(cls, text: str) -> "Scenario":
+        data = json.loads(text)
+        if not isinstance(data, dict) or data.get("format") != SPEC_FORMAT:
+            raise ValueError(f"not a {SPEC_FORMAT} document "
+                             f"(format={data.get('format') if isinstance(data, dict) else None!r})")
+        if "version" not in data:
+            raise ValueError("scenario document carries no version")
+        if int(data["version"]) > SPEC_VERSION:
+            raise ValueError(f"scenario version {data['version']} is newer "
+                             f"than supported version {SPEC_VERSION}")
+        unknown = sorted(set(data) - {"format", "version", "scenario"})
+        if unknown:
+            raise ValueError(f"unknown envelope key(s) {unknown} "
+                             f"(expected format/version/scenario)")
+        if "scenario" not in data:
+            raise ValueError("scenario document carries no 'scenario' body")
+        return cls.from_dict(data["scenario"])
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            f.write(self.to_json() + "\n")
+
+    @classmethod
+    def load(cls, path: str) -> "Scenario":
+        with open(path) as f:
+            return cls.from_json(f.read())
+
+
+def scenario_from_dict(d: dict) -> Scenario:
+    return Scenario.from_dict(d)
+
+
+# --------------------------------------------------------------------------- #
+# codec: dataclasses <-> JSON-safe dicts (NaN-safe, unknown keys rejected)
+# --------------------------------------------------------------------------- #
+def _encode(obj: Any) -> Any:
+    if dataclasses.is_dataclass(obj) and not isinstance(obj, type):
+        return {f.name: _encode(getattr(obj, f.name))
+                for f in dataclasses.fields(obj)}
+    if isinstance(obj, float):
+        if math.isnan(obj):
+            return {"$float": "nan"}
+        if math.isinf(obj):
+            return {"$float": "inf" if obj > 0 else "-inf"}
+        return obj
+    if isinstance(obj, dict):
+        return {str(k): _encode(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_encode(v) for v in obj]
+    return obj
+
+
+_SPECIAL_FLOATS = {"nan": math.nan, "inf": math.inf, "-inf": -math.inf}
+
+
+def _decode_value(v: Any, path: str) -> Any:
+    """Plain JSON values: undo the ``$float`` escape, recurse containers."""
+    if isinstance(v, dict):
+        if set(v) == {"$float"}:
+            if v["$float"] not in _SPECIAL_FLOATS:
+                raise ValueError(f"{path}: bad $float {v['$float']!r}")
+            return _SPECIAL_FLOATS[v["$float"]]
+        return {k: _decode_value(x, f"{path}.{k}") for k, x in v.items()}
+    if isinstance(v, list):
+        return [_decode_value(x, f"{path}[{i}]") for i, x in enumerate(v)]
+    return v
+
+
+# nested dataclass-typed fields (Optional nesting handled by None checks)
+_NESTED: Dict[type, Dict[str, type]] = {
+    Scenario: {"workload": WorkloadSpec, "sim": SimConfig, "node": NodeSpec,
+               "fleet": ClusterConfig, "manager": ManagerSpec,
+               "telemetry": TelemetrySpec},
+    ManagerSpec: {"sensor": SensorConfig},
+    TelemetrySpec: {"sensor": SensorConfig},
+}
+
+
+def _decode_dataclass(cls: type, data: Any, path: str) -> Any:
+    if data is None:
+        return None
+    if not isinstance(data, dict):
+        raise ValueError(f"{path}: expected an object for "
+                         f"{cls.__name__}, got {type(data).__name__}")
+    names = [f.name for f in dataclasses.fields(cls)]
+    unknown = sorted(set(data) - set(names))
+    if unknown:
+        raise ValueError(f"{path}: unknown key(s) {unknown} for "
+                         f"{cls.__name__} (known: {sorted(names)})")
+    kw: Dict[str, Any] = {}
+    for f in dataclasses.fields(cls):
+        if f.name not in data:
+            continue
+        v = data[f.name]
+        sub = _NESTED.get(cls, {}).get(f.name)
+        p = f"{path}.{f.name}"
+        if cls is ManagerSpec and f.name == "config":
+            sub = (FleetManagerConfig if data.get("scope", "node") == "fleet"
+                   else ManagerConfig)
+            kw[f.name] = _decode_dataclass(sub, v, p)
+        elif cls is ClusterConfig and f.name == "churn" and v is not None:
+            kw[f.name] = {int(k): _decode_dataclass(ChurnModel, cm,
+                                                    f"{p}[{k}]")
+                          for k, cm in v.items()}
+        elif cls is ClusterConfig and f.name == "node_presets" \
+                and v is not None:
+            kw[f.name] = [(_decode_dataclass(DevicePreset, e, f"{p}[{i}]")
+                           if isinstance(e, dict) else e)
+                          for i, e in enumerate(v)]
+        elif cls is ChurnModel and f.name == "events":
+            kw[f.name] = [_decode_dataclass(ChurnEvent, e, f"{p}[{i}]")
+                          for i, e in enumerate(v)]
+        elif sub is not None:
+            kw[f.name] = _decode_dataclass(sub, v, p)
+        else:
+            kw[f.name] = _decode_value(v, p)
+    try:
+        return cls(**kw)
+    except TypeError as e:                    # frozen/slot mismatches etc.
+        raise ValueError(f"{path}: cannot build {cls.__name__}: {e}") from e
+
+
+# --------------------------------------------------------------------------- #
+# dotted-path overrides (CLI --set, sweep grids)
+# --------------------------------------------------------------------------- #
+def _section_class(cls: Optional[type], cur: dict,
+                   part: str) -> Optional[type]:
+    """The dataclass a section key decodes into, when known (mirrors the
+    decoder's dispatch so null sections can be materialized with real
+    defaults rather than empty dicts)."""
+    if cls is None:
+        return None
+    if cls is ManagerSpec and part == "config":
+        return (FleetManagerConfig if cur.get("scope", "node") == "fleet"
+                else ManagerConfig)
+    return _NESTED.get(cls, {}).get(part)
+
+
+def with_overrides(sc: Scenario, overrides: Dict[str, Any]) -> Scenario:
+    """A new Scenario with dotted-path keys replaced, re-validated through
+    the normal decoder (so types and unknown keys are checked the same way
+    a JSON spec is).  Example: ``{"sim.noise": 0.01, "fleet.n_nodes": 8}``.
+
+    Setting a key under an optional section that is currently null (e.g.
+    ``telemetry.sensor.dropout_p`` on an unrecorded scenario) materializes
+    the section with its dataclass defaults first, however deep the path
+    goes.
+    """
+    d = sc.to_dict()
+    for dotted, value in overrides.items():
+        parts = dotted.split(".")
+        cur = d
+        cls: Optional[type] = Scenario
+        for part in parts[:-1]:
+            if part not in cur:
+                raise KeyError(f"override {dotted!r}: no section {part!r}")
+            sub_cls = _section_class(cls, cur, part)
+            if cur[part] is None:
+                cur[part] = _encode(sub_cls()) if sub_cls else {}
+            cur = cur[part]
+            if not isinstance(cur, dict):
+                raise KeyError(f"override {dotted!r}: {part!r} is not a "
+                               "section")
+            cls = sub_cls
+        cur[parts[-1]] = _encode(value)
+    return Scenario.from_dict(d)
+
+
+def parse_set_arg(arg: str) -> Tuple[str, Any]:
+    """``key=value`` with the value parsed as JSON when possible (so
+    ``--set sim.noise=0.01`` is a float and ``--set node.caps_w=null``
+    clears a knob), else kept as a string."""
+    if "=" not in arg:
+        raise ValueError(f"--set expects key=value, got {arg!r}")
+    key, raw = arg.split("=", 1)
+    try:
+        value = json.loads(raw)
+    except json.JSONDecodeError:
+        value = raw
+    return key.strip(), value
+
+
+def grid_variants(base: Scenario,
+                  grid: Dict[str, List[Any]]) -> List[Tuple[str, Scenario]]:
+    """Cartesian sweep over dotted-path value lists.
+
+    Returns ``(label, scenario)`` pairs in row-major order of the given
+    keys; each scenario re-validates through the decoder.
+    """
+    items: List[Tuple[str, List[Any]]] = [(k, list(vs))
+                                          for k, vs in grid.items()]
+    combos: List[List[Tuple[str, Any]]] = [[]]
+    for key, values in items:
+        combos = [c + [(key, v)] for c in combos for v in values]
+    out = []
+    for combo in combos:
+        label = ",".join(f"{k}={v}" for k, v in combo)
+        out.append((label, with_overrides(base, dict(combo))))
+    return out

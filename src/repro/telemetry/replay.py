@@ -271,11 +271,18 @@ class DetectionReport:
     majority_correct: bool
     lead_rel_error: float       # mean ‖observed − true lead‖ / true span
     true_straggler: int
+    accuracy_imputed: Optional[float] = None  # accuracy after last-known-
+    #                             value fill of dropped rows; None when the
+    #                             stream carries no dropped rows (imputation
+    #                             then changes nothing)
+    dropped_samples: int = 0    # samples with >=1 all-NaN device row
 
     def row(self) -> str:
+        imp = ("" if self.accuracy_imputed is None
+               else f";acc_imputed={self.accuracy_imputed:.3f}")
         return (f"samples={self.n_samples};acc={self.accuracy:.3f};"
                 f"majority_ok={int(self.majority_correct)};"
-                f"lead_err={self.lead_rel_error:.4f}")
+                f"lead_err={self.lead_rel_error:.4f}" + imp)
 
 
 def detection_report(trace: TelemetryTrace, node: int = 0,
@@ -283,7 +290,13 @@ def detection_report(trace: TelemetryTrace, node: int = 0,
                      true_straggler: Optional[int] = None) -> DetectionReport:
     """How well Algorithm 1 does on this trace's observed stream, against
     the ground truth the trace carries (``truth_start``, or the observed
-    stream itself for a lossless recording)."""
+    stream itself for a lossless recording).
+
+    When the stream contains dropped device rows (all-NaN — they read as
+    zero lead and shadow the straggler at argmin), the report additionally
+    scores the *imputed* stream, with each dropped row replaced by that
+    device's last observed row (``accuracy_imputed``) — the recovery the
+    ``SensorConfig.impute_dropout`` mitigation buys a live manager."""
     samples = trace.node_samples(node)
     if not samples:
         raise ValueError(f"trace holds no samples for node {node}")
@@ -293,9 +306,24 @@ def detection_report(trace: TelemetryTrace, node: int = 0,
             raise ValueError("no straggler_hint in trace meta; pass "
                              "true_straggler explicitly")
         true_straggler = int(hint[node])
-    hits, errs, leads = 0, [], []
+    hits, hits_imp, dropped, errs, leads = 0, 0, 0, [], []
+    held: Optional[np.ndarray] = None       # last observed row per device
     for s in samples:
         obs = lead_value_detect(s.comp_start, mode)
+        start_imp = np.asarray(s.comp_start, float)
+        nan_rows = np.isnan(start_imp).all(axis=1) & (start_imp.shape[1] > 0)
+        if nan_rows.any():
+            dropped += 1
+            if held is not None and held.shape == start_imp.shape:
+                start_imp = start_imp.copy()
+                start_imp[nan_rows] = held[nan_rows]
+        if held is None or held.shape != np.asarray(s.comp_start).shape:
+            held = np.array(start_imp, float, copy=True)
+        else:
+            keep = ~np.isnan(start_imp).all(axis=1)
+            held[keep] = start_imp[keep]
+        hits_imp += int(np.argmin(lead_value_detect(start_imp, mode))
+                        == true_straggler)
         truth_start = (s.truth_start if s.truth_start is not None
                        else s.comp_start)
         truth = lead_value_detect(truth_start, mode)
@@ -310,4 +338,6 @@ def detection_report(trace: TelemetryTrace, node: int = 0,
         n_samples=len(samples), accuracy=hits / len(samples),
         majority_device=maj, majority_correct=(maj == true_straggler),
         lead_rel_error=float(np.mean(errs)),
-        true_straggler=true_straggler)
+        true_straggler=true_straggler,
+        accuracy_imputed=(hits_imp / len(samples) if dropped else None),
+        dropped_samples=dropped)

@@ -40,6 +40,7 @@ class SensorConfig:
     sample_period: int = 1          # observe 1 of every N iterations
     phase_jitter: int = 0           # ± iterations of sampling-phase slack
     dropout_p: float = 0.0          # P(a device's sample is lost) per read
+    impute_dropout: bool = False    # last-known-value fill for dropped rows
     seed: int = 0
 
     @property
@@ -89,6 +90,9 @@ class SensorModel:
         self.cfg = cfg
         self.rng = np.random.default_rng(cfg.seed + 15485863 * (seed_offset + 1))
         self._next_sample = 0
+        # last successfully observed per-device start rows, for
+        # ``impute_dropout`` (the ROADMAP dropout-shadowing mitigation)
+        self._last_starts = None
 
     # ------------------------------------------------------------- sampling
     def take_sample(self, iteration: int) -> bool:
@@ -152,10 +156,27 @@ class SensorModel:
         noisy/quantized observation with dropped devices as NaN rows
         (lead_value_detect maps NaN starts to zero lead, so a dropped
         device is indistinguishable from the straggler that sample — a
-        real failure mode the robustness studies quantify)."""
+        real failure mode the robustness studies quantify).
+
+        With ``impute_dropout`` a dropped device's row is replaced by its
+        last successfully observed row instead of NaN: kernel starts drift
+        slowly between samples, so the stale lead stays near the device's
+        true lead and no longer shadows the straggler at argmin.  A device
+        dropped before it was ever observed still reads NaN (there is
+        nothing to hold).  The RNG stream is identical either way — the
+        knob changes only what is reported, never what is drawn."""
         out = self.observe_times(start)
         drop = self.drop_mask(np.asarray(start).shape[0])
         if drop.any():
+            held = self._last_starts
             out = np.array(out, float, copy=True)
-            out[drop] = np.nan
+            if (self.cfg.impute_dropout and held is not None
+                    and held.shape == out.shape):
+                out[drop] = held[drop]
+            else:
+                out[drop] = np.nan
+        if self.cfg.impute_dropout:
+            # remember the per-device rows that were actually observed (or
+            # imputed — still the freshest value the consumer has seen)
+            self._last_starts = np.array(out, float, copy=True)
         return out

@@ -424,3 +424,96 @@ def test_degrade_keeps_truth_for_error_accounting(recorded_node):
     assert not np.allclose(s.comp_start, s.truth_start)
     src = trace.samples[0]
     np.testing.assert_array_equal(s.truth_start, src.comp_start)
+
+
+# --------------------------------------------------------------------------- #
+# dropout imputation (last-known-value fill — the ROADMAP shadowing fix)
+# --------------------------------------------------------------------------- #
+def test_impute_dropout_holds_last_known_row():
+    cfg = SensorConfig(dropout_p=0.5, impute_dropout=True, seed=2)
+    s = SensorModel(cfg)
+    # same RNG stream as the non-imputing sensor: the knob changes what is
+    # reported, never what is drawn
+    ref = SensorModel(SensorConfig(dropout_p=0.5, seed=2))
+    t0 = np.arange(24.0).reshape(8, 3)
+    outs, drops = [], []
+    for k in range(12):
+        t = t0 + k                         # starts drift between samples
+        out = s.observe_starts(t)
+        drops.append(np.isnan(ref.observe_starts(t)).all(axis=1))
+        outs.append(out)
+    drops = np.stack(drops)
+    assert drops.any(), "seed must produce at least one dropped row"
+    for k in range(1, 12):
+        for g in range(8):
+            if drops[k, g] and not drops[:k, g].all():
+                # dropped after at least one observation: held value, not NaN
+                assert not np.isnan(outs[k][g]).any()
+                last_seen = max(j for j in range(k) if not drops[j, g])
+                np.testing.assert_array_equal(outs[k][g], outs[last_seen][g])
+            elif not drops[k, g]:
+                np.testing.assert_array_equal(outs[k][g], t0[g] + k)
+    # a device dropped before it was ever observed still reads NaN
+    first = SensorModel(cfg)
+    out = first.observe_starts(t0)
+    gone = np.isnan(out).all(axis=1)
+    if gone.any():
+        assert np.isnan(out[gone]).all()
+
+
+def test_impute_dropout_off_is_byte_identical_to_before():
+    a = SensorModel(SensorConfig(dropout_p=0.3, noise_time_s=1e-3, seed=5))
+    b = SensorModel(SensorConfig(dropout_p=0.3, noise_time_s=1e-3, seed=5,
+                                 impute_dropout=True))
+    t = np.linspace(0, 1, 40).reshape(8, 5)
+    for _ in range(6):
+        oa, ob = a.observe_starts(t), b.observe_starts(t)
+        keep = ~np.isnan(oa)
+        np.testing.assert_array_equal(oa[keep], ob[keep])
+
+
+def test_detection_report_shows_recovered_accuracy(recorded_node):
+    """Regression for the dropped-row-shadowing failure: a dropped device
+    reads as zero lead and steals argmin from the straggler; last-known-
+    value imputation recovers the detection."""
+    node, trace = recorded_node
+    accs, accs_imp = [], []
+    for seed in range(6):
+        d = degrade(trace, SensorModel(SensorConfig(dropout_p=0.4,
+                                                    seed=seed)))
+        rep = detection_report(d)
+        assert rep.dropped_samples > 0
+        assert rep.accuracy_imputed is not None
+        accs.append(rep.accuracy)
+        accs_imp.append(rep.accuracy_imputed)
+        assert f"acc_imputed={rep.accuracy_imputed:.3f}" in rep.row()
+    # shadowing really bites on the raw stream...
+    assert np.mean(accs) < 0.8
+    # ...and the imputed stream recovers (near-)full accuracy
+    assert np.mean(accs_imp) > np.mean(accs) + 0.2
+    assert np.mean(accs_imp) > 0.9
+
+
+def test_detection_report_no_dropout_reports_none(recorded_node):
+    _, trace = recorded_node
+    rep = detection_report(trace)
+    assert rep.dropped_samples == 0
+    assert rep.accuracy_imputed is None
+    assert "acc_imputed" not in rep.row()
+
+
+def test_degrade_through_imputing_sensor_leaves_no_nan_rows(recorded_node):
+    """An imputing sensor in the degrade path fills dropped rows inline
+    (after the device was first observed), so downstream consumers see a
+    dense stream — what a live PowerManager(sensor=...) receives."""
+    _, trace = recorded_node
+    d = degrade(trace, SensorModel(SensorConfig(dropout_p=0.4,
+                                                impute_dropout=True,
+                                                seed=3)))
+    first = d.samples[0]
+    dense = [s for s in d.samples[1:]]
+    seen = ~np.isnan(first.comp_start).all(axis=1)
+    for s in dense:
+        rows = np.isnan(s.comp_start).all(axis=1)
+        assert not (rows & seen).any()     # once observed, never NaN again
+        seen |= ~rows
