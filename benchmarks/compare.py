@@ -50,14 +50,27 @@ def parse_bench_csv(path: str) -> Dict[str, float]:
     return metrics
 
 
+def _flatten(d: dict, prefix: str = "") -> Dict[str, float]:
+    """Nested numeric dicts -> dotted keys ({"throughput": {"p50": x}} ->
+    {"throughput.p50": x}); non-numeric leaves are dropped."""
+    out: Dict[str, float] = {}
+    for k, v in d.items():
+        key = f"{prefix}{k}"
+        if isinstance(v, dict):
+            out.update(_flatten(v, f"{key}."))
+        elif isinstance(v, (int, float)) and not isinstance(v, bool):
+            out[key] = float(v)
+    return out
+
+
 def load_fresh_json(path: str) -> Dict[str, float]:
-    """``python -m repro run --json`` output (or any ``{"metrics": {...}}``
-    document) -> flat numeric metrics dict."""
+    """``python -m repro run --json`` output (``{"metrics": {...}}``), a
+    ``repro sweep`` artifact (``{"summary": {...}}`` quantiles flattened to
+    dotted keys), or any JSON object of numeric leaves -> flat metrics."""
     with open(path) as f:
         data = json.load(f)
-    metrics = data.get("metrics", data)
-    return {k: float(v) for k, v in metrics.items()
-            if isinstance(v, (int, float))}
+    metrics = data.get("metrics", data.get("summary", data))
+    return _flatten(metrics)
 
 
 def main() -> None:

@@ -32,7 +32,7 @@ from repro.api import (NodeSpec, Scenario, TelemetrySpec, WorkloadSpec,
 from repro.core.c3sim import SimConfig
 from repro.core.manager import FleetManagerConfig
 from repro.telemetry import (SensorConfig, SensorModel, TelemetryTrace,
-                             degrade, detection_report,
+                             degrade, detection_report, fleet_lead_report,
                              fleet_replay_matches, replay_fleet)
 
 SMOKE = False           # run.py --smoke trims iterations for CI
@@ -117,6 +117,25 @@ def replay_fidelity() -> List[Row]:
              f"caps_match={int(match)}")]
 
 
+def fleet_lead_fidelity() -> List[Row]:
+    """The fleet-scope lead estimator scored against the true topology
+    lead: a lossless recording (estimator bias only — zero for DP) and a
+    noisy fleet sensor (bias + sensed-timestamp noise)."""
+    rows: List[Row] = []
+    for tag, noise in (("lossless", 0.0), ("noisy", 0.005)):
+        t0 = time.perf_counter()
+        sc = get_scenario("cluster/dp").replace(
+            telemetry=TelemetrySpec(
+                sensor=SensorConfig(noise_time_s=noise), with_kernels=False,
+                max_samples=64))
+        res = run_scenario(sc, iterations=_iters(40))
+        rep = fleet_lead_report(TelemetryTrace.from_collector(res.collector))
+        us = (time.perf_counter() - t0) * 1e6
+        rows.append((f"telemetry_fleet_lead_{tag}", us,
+                     f"noise_s={noise};{rep.row()}"))
+    return rows
+
+
 def detection_robustness() -> List[Row]:
     """Detection accuracy / lead error vs timestamp noise, offline from one
     lossless recording (5 sensor seeds per level)."""
@@ -153,6 +172,7 @@ def detection_robustness() -> List[Row]:
 
 def run() -> List[Row]:
     rows: List[Row] = []
-    for fn in (collector_overhead, replay_fidelity, detection_robustness):
+    for fn in (collector_overhead, replay_fidelity, fleet_lead_fidelity,
+               detection_robustness):
         rows.extend(fn())
     return rows

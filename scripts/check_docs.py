@@ -1,0 +1,95 @@
+"""CI check: the docs/ tree must cover the living surface area.
+
+Asserts, against the code (not a hand-maintained list):
+
+  * every scenario name in the registry appears somewhere under docs/;
+  * every `python -m repro` subcommand (introspected from the argument
+    parser) appears under docs/;
+  * every `--flag` the sweep and run subcommands accept appears in
+    docs/cli.md, so the CLI reference cannot silently rot.
+
+Exit 0 when covered, 1 with a per-item listing otherwise — same contract
+as the other scripts/ smokes.
+
+Usage: PYTHONPATH=src python scripts/check_docs.py [--docs DIR]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from repro.api.cli import build_parser
+from repro.api.registry import list_scenarios
+
+
+def _docs_text(docs_dir: Path) -> dict:
+    """{relative path: text} for every markdown file under docs/."""
+    files = sorted(docs_dir.rglob("*.md"))
+    if not files:
+        print(f"ERROR: no markdown files under {docs_dir}", file=sys.stderr)
+        sys.exit(1)
+    return {str(p.relative_to(docs_dir)): p.read_text() for p in files}
+
+
+def _subcommands_and_flags():
+    """(subcommand names, {subcommand: flag strings}) from the parser."""
+    ap = build_parser()
+    subs = next(a for a in ap._actions
+                if isinstance(a, argparse._SubParsersAction))
+    names, flags = [], {}
+    for name, sub in subs.choices.items():
+        names.append(name)
+        flags[name] = sorted(
+            opt for a in sub._actions for opt in a.option_strings
+            if opt.startswith("--") and opt != "--help")
+    return names, flags
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--docs", default=None,
+                    help="docs directory (default: <repo>/docs)")
+    args = ap.parse_args()
+    root = Path(__file__).resolve().parent.parent
+    docs_dir = Path(args.docs) if args.docs else root / "docs"
+
+    docs = _docs_text(docs_dir)
+    all_text = "\n".join(docs.values())
+    cli_text = docs.get("cli.md", "")
+    missing = []
+
+    for name, _scope, _desc in list_scenarios():
+        if name not in all_text:
+            missing.append(f"scenario {name!r} is not mentioned under docs/")
+
+    names, flags = _subcommands_and_flags()
+    for name in names:
+        if name not in all_text:
+            missing.append(f"CLI subcommand {name!r} is not mentioned "
+                           f"under docs/")
+    if not cli_text:
+        missing.append("docs/cli.md does not exist")
+    else:
+        for name, opts in flags.items():
+            for opt in opts:
+                if opt not in cli_text:
+                    missing.append(f"`{name}` flag {opt} is not documented "
+                                   f"in docs/cli.md")
+
+    if missing:
+        print(f"check_docs: {len(missing)} item(s) missing from docs/ "
+              f"({len(docs)} file(s) scanned):", file=sys.stderr)
+        for m in missing:
+            print(f"  {m}", file=sys.stderr)
+        return 1
+    n_cmds = len(names)
+    n_flags = sum(len(v) for v in flags.values())
+    print(f"check_docs: ok — {len(list_scenarios())} scenarios, "
+          f"{n_cmds} subcommands, {n_flags} flags covered across "
+          f"{len(docs)} docs file(s)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -5,7 +5,8 @@ Commands:
   list                       table of registered scenarios
   show NAME                  print a scenario's JSON spec
   run NAME|--spec FILE       run a scenario, print metrics (or --json)
-  sweep NAME --set k=v1,v2   grid sweep over dotted-path overrides
+  sweep NAME --grid k=v1,v2  grid sweep over dotted-path overrides
+  sweep NAME --samples N     Monte-Carlo fleet sweep (versioned artifact)
   replay TRACE.jsonl         offline detect/mitigate over a recorded trace
 
 Exit codes: 0 success, 1 runtime failure, 2 unknown scenario / bad usage
@@ -55,7 +56,7 @@ def _add_scenario_args(p: argparse.ArgumentParser) -> None:
     p.add_argument("--iterations", type=int, default=None,
                    help="override the scenario's iteration count")
     p.add_argument("--seed", type=int, default=None)
-    p.add_argument("--engine", choices=["event", "batched", "vector"],
+    p.add_argument("--engine", choices=["event", "batched", "vector", "jax"],
                    help="override the simulation engine")
     p.add_argument("--set", action="append", metavar="KEY=VALUE",
                    help="dotted-path override, e.g. --set sim.noise=0.01")
@@ -101,6 +102,8 @@ def cmd_run(args) -> int:
 
 
 def cmd_sweep(args) -> int:
+    if args.samples is not None or args.sweep_spec:
+        return _cmd_sweep_mc(args)
     sc = _load_scenario(args)
     grid = {}
     for s in args.grid or []:
@@ -108,8 +111,8 @@ def cmd_sweep(args) -> int:
         grid[key.strip()] = [parse_set_arg(f"x={v}")[1]
                              for v in raw.split(",")]
     if not grid:
-        print("error: sweep needs at least one --grid KEY=V1,V2,...",
-              file=sys.stderr)
+        print("error: sweep needs --samples N (Monte-Carlo), --sweep-spec "
+              "FILE, or at least one --grid KEY=V1,V2,...", file=sys.stderr)
         return 2
     rows = []
     for label, variant in variants(sc, grid):
@@ -128,12 +131,66 @@ def cmd_sweep(args) -> int:
     return 0
 
 
+def _cmd_sweep_mc(args) -> int:
+    """Monte-Carlo (or spec-file) sweep → versioned artifact.
+
+    ``--samples N`` builds a default `SweepSpec` over the named scenario
+    (per-sample thermal lotteries, plus any ``--dist`` distributions);
+    ``--sweep-spec FILE`` loads a full spec instead.  The artifact schema
+    is documented in docs/sweeps.md.
+    """
+    from repro.api.sweep import Dist, SweepSpec, run_sweep
+    if args.sweep_spec:
+        spec = SweepSpec.load(args.sweep_spec)
+        if args.name and args.name != spec.scenario:
+            print(f"error: --sweep-spec names scenario "
+                  f"{spec.scenario!r}, not {args.name!r}", file=sys.stderr)
+            return 2
+        if args.samples is not None:
+            spec = SweepSpec.from_dict({**spec.to_dict(),
+                                        "samples": args.samples})
+    else:
+        if not args.name:
+            print("error: give a scenario NAME (or --sweep-spec FILE)",
+                  file=sys.stderr)
+            return 2
+        dists = {}
+        for s in args.dist or []:
+            key, raw = s.split("=", 1)
+            body = json.loads(raw)
+            if not isinstance(body, dict):
+                raise ValueError(f"--dist {key}: expected a JSON object "
+                                 f"like {{\"kind\":\"uniform\",...}}")
+            dists[key.strip()] = Dist(**body)
+        spec = SweepSpec(scenario=args.name, samples=args.samples,
+                         dists=dists, seed=args.seed or 0,
+                         iterations=args.iterations)
+    artifact = run_sweep(spec)
+    text = json.dumps(artifact, indent=2, sort_keys=True, allow_nan=False)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text + "\n")
+    if args.json:
+        print(text)
+    else:
+        s = artifact["summary"]
+        print(f"{artifact['scenario']}  mode={artifact['mode']}  "
+              f"engine={artifact['engine']}  n={artifact['n_samples']}")
+        for name in ("t_fleet_s", "throughput", "lead_max_s", "recovery"):
+            q = s[name]
+            print(f"  {name:<13s} mean={q['mean']:.5g}  p10={q['p10']:.5g}"
+                  f"  p50={q['p50']:.5g}  p90={q['p90']:.5g}")
+        if args.out:
+            print(f"artifact written to {args.out}")
+    return 0
+
+
 def cmd_replay(args) -> int:
     import numpy as np
 
     from repro.core.manager import FleetManagerConfig, ManagerConfig
-    from repro.telemetry import (detection_report, load_trace, replay_fleet,
-                                 replay_node)
+    from repro.telemetry import (detection_report, fleet_lead_report,
+                                 load_trace, replay_fleet, replay_node)
     trace = load_trace(args.trace)
     scope = args.scope
     if scope == "auto":
@@ -162,6 +219,13 @@ def cmd_replay(args) -> int:
                          "accuracy_imputed": rep.accuracy_imputed,
                          "lead_rel_error": rep.lead_rel_error,
                          "majority_correct": rep.majority_correct}
+    except ValueError:
+        pass
+    try:
+        frep = fleet_lead_report(trace)
+        out["fleet_lead"] = {"accuracy": frep.accuracy,
+                             "lead_rel_error": frep.lead_rel_error,
+                             "majority_correct": frep.majority_correct}
     except ValueError:
         pass
     if args.json:
@@ -198,12 +262,22 @@ def build_parser() -> argparse.ArgumentParser:
                    help="also write a Perfetto-loadable Chrome trace")
     p.set_defaults(fn=cmd_run)
 
-    p = sub.add_parser("sweep", help="grid sweep a scenario")
+    p = sub.add_parser("sweep",
+                       help="grid or Monte-Carlo sweep a scenario")
     _add_scenario_args(p)
     p.add_argument("--grid", action="append", metavar="KEY=V1,V2,...",
                    help="dotted-path grid axis (repeatable)")
+    p.add_argument("--samples", type=int, default=None, metavar="N",
+                   help="Monte-Carlo mode: N samples over the fleet "
+                        "distributions (emits a sweep artifact)")
+    p.add_argument("--dist", action="append", metavar="KEY=JSON",
+                   help="Monte-Carlo distribution for a dotted path, e.g. "
+                        "--dist fleet.straggler_boost="
+                        "'{\"kind\":\"uniform\",\"low\":1.1,\"high\":1.5}'")
+    p.add_argument("--sweep-spec", metavar="FILE",
+                   help="load a full SweepSpec JSON instead of --samples")
     p.add_argument("--json", action="store_true")
-    p.add_argument("--out", help="write all rows as JSON")
+    p.add_argument("--out", help="write rows / sweep artifact JSON to FILE")
     p.set_defaults(fn=cmd_sweep)
 
     p = sub.add_parser("replay",

@@ -51,6 +51,7 @@ def get_scenario(name: str) -> Scenario:
 
 
 def scenario_names() -> List[str]:
+    """Sorted registry names (the `python -m repro list` order)."""
     return sorted(SCENARIOS)
 
 

@@ -23,7 +23,7 @@ from repro.core.cluster import ClusterSim
 from repro.core.detect import lead_value_detect, straggler_index
 from repro.core.manager import run_closed_loop, run_fleet_closed_loop
 from repro.telemetry.collector import TelemetryCollector
-from repro.telemetry.replay import detection_report
+from repro.telemetry.replay import detection_report, fleet_lead_report
 from repro.telemetry.sensors import SensorModel
 from repro.telemetry.trace_io import (TelemetryTrace, export_chrome_trace,
                                       save_trace)
@@ -69,6 +69,10 @@ class BuiltScenario:
 
 @dataclass
 class ScenarioResult:
+    """What `run_scenario` hands back: summary metrics plus live handles
+    to the simulation objects for study-specific post-processing.  Only
+    the metric dict (via `to_json_dict`) is serializable."""
+
     scenario: Scenario
     iterations: int
     metrics: Dict[str, float] = field(default_factory=dict)
@@ -82,6 +86,8 @@ class ScenarioResult:
     trace_path: Optional[str] = None
 
     def to_json_dict(self) -> dict:
+        """JSON-safe summary (the `--json` CLI payload): name, seed,
+        iterations, metrics, and the trace path if one was recorded."""
         return {"scenario": self.scenario.name or None,
                 "iterations": self.iterations,
                 "seed": self.scenario.seed,
@@ -89,6 +95,8 @@ class ScenarioResult:
                 "trace_path": self.trace_path}
 
     def trace(self) -> TelemetryTrace:
+        """The recorded telemetry trace; raises if the scenario ran
+        without a `TelemetrySpec`."""
         if self.collector is None:
             raise ValueError("scenario ran without telemetry; set "
                              "Scenario.telemetry to record a trace")
@@ -262,18 +270,28 @@ def _metrics(sc: Scenario, iters: int, r: ScenarioResult) -> Dict[str, float]:
 
 def _detection_metrics(sc: Scenario, r: ScenarioResult) -> Dict[str, float]:
     """Straggler-detection quality of the recorded (possibly degraded)
-    stream, when the trace carries enough to judge it."""
+    stream, when the trace carries enough to judge it.  At cluster scope
+    the fleet-lead estimator is scored too (``fleet_lead_*`` keys): how far
+    the lead a manager reconstructs from sensed per-node iteration times
+    sits from the true topology lead the trace records losslessly."""
     col = r.collector
-    if not col.samples or not sc.telemetry.with_kernels:
-        return {}
     trace = TelemetryTrace.from_collector(col)
-    node = int(trace.meta.get("straggler_node", 0)) if r.cluster else 0
-    try:
-        rep = detection_report(trace, node=node)
-    except ValueError:
-        return {}
-    out = {"detect_accuracy": rep.accuracy,
-           "detect_lead_err": rep.lead_rel_error}
-    if rep.accuracy_imputed is not None:
-        out["detect_accuracy_imputed"] = rep.accuracy_imputed
+    out: Dict[str, float] = {}
+    if col.samples and sc.telemetry.with_kernels:
+        node = int(trace.meta.get("straggler_node", 0)) if r.cluster else 0
+        try:
+            rep = detection_report(trace, node=node)
+            out["detect_accuracy"] = rep.accuracy
+            out["detect_lead_err"] = rep.lead_rel_error
+            if rep.accuracy_imputed is not None:
+                out["detect_accuracy_imputed"] = rep.accuracy_imputed
+        except ValueError:
+            pass
+    if trace.fleet:
+        try:
+            frep = fleet_lead_report(trace)
+            out["fleet_lead_accuracy"] = frep.accuracy
+            out["fleet_lead_err"] = frep.lead_rel_error
+        except ValueError:
+            pass
     return out

@@ -62,6 +62,8 @@ class WorkloadSpec:
     n_shards: int = 8
 
     def build(self) -> Workload:
+        """Materialize the kernel-level `Workload` from the named model
+        config (n_layers override applied first)."""
         from repro.configs import get_config
         cfg = get_config(self.arch)
         if self.n_layers is not None:
@@ -82,6 +84,8 @@ class NodeSpec:
     caps_w: Optional[float] = None      # None: leave thermal-model default
 
     def build_preset(self) -> DevicePreset:
+        """Resolve the preset name against `PRESETS` (with a listing of
+        valid names on failure)."""
         if self.preset not in PRESETS:
             raise ValueError(f"unknown device preset {self.preset!r} "
                              f"(expected one of {sorted(PRESETS)})")
@@ -149,6 +153,8 @@ class Scenario:
 
     # -------------------------------------------------------------- helpers
     def validate(self) -> "Scenario":
+        """Cross-field checks (preset exists, manager scope matches fleet
+        presence); returns self so it chains."""
         self.node.build_preset()
         if self.manager is not None:
             self.manager.validate(self.fleet is not None)
@@ -157,23 +163,29 @@ class Scenario:
         return self
 
     def replace(self, **kw) -> "Scenario":
+        """`dataclasses.replace` shorthand — derive a variant scenario."""
         return dataclasses.replace(self, **kw)
 
     # -------------------------------------------------------- serialization
     def to_dict(self) -> dict:
+        """JSON-safe nested dict (NaN/Inf escaped as ``{"$float": ...}``)."""
         return _encode(self)
 
     def to_json(self, indent: Optional[int] = 2) -> str:
+        """Versioned spec document: ``{format, version, scenario}``."""
         return json.dumps({"format": SPEC_FORMAT, "version": SPEC_VERSION,
                            "scenario": self.to_dict()},
                           indent=indent, allow_nan=False)
 
     @classmethod
     def from_dict(cls, d: dict) -> "Scenario":
+        """Inverse of `to_dict`; unknown keys are rejected, the result is
+        validated."""
         return _decode_dataclass(cls, d, "scenario").validate()
 
     @classmethod
     def from_json(cls, text: str) -> "Scenario":
+        """Parse a spec document, checking the format/version envelope."""
         data = json.loads(text)
         if not isinstance(data, dict) or data.get("format") != SPEC_FORMAT:
             raise ValueError(f"not a {SPEC_FORMAT} document "
@@ -192,16 +204,19 @@ class Scenario:
         return cls.from_dict(data["scenario"])
 
     def save(self, path: str) -> None:
+        """Write the `to_json` document to ``path``."""
         with open(path, "w") as f:
             f.write(self.to_json() + "\n")
 
     @classmethod
     def load(cls, path: str) -> "Scenario":
+        """Read a spec document from ``path`` (see `from_json`)."""
         with open(path) as f:
             return cls.from_json(f.read())
 
 
 def scenario_from_dict(d: dict) -> Scenario:
+    """Module-level alias for `Scenario.from_dict`."""
     return Scenario.from_dict(d)
 
 

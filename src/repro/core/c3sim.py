@@ -31,6 +31,10 @@ from repro.core.workload import Workload
 
 @dataclass
 class SimConfig:
+    """Knobs of the C3 (concurrent-execution coupling) iteration model:
+    contention factors, link rates, stochastic jitter, and which engine
+    executes the window arithmetic (docs/engines.md)."""
+
     kappa_comp: float = 0.45        # compute slowdown factor while comm busy
     kappa_mem: float = 0.75         # memory-bound slowdown while comm busy
     gemm_eff: float = 0.45          # fraction of peak for GEMM kernels
@@ -41,6 +45,7 @@ class SimConfig:
     seed: int = 0
     engine: str = "event"           # "event" (heap reference) | "batched"
     #                                 | "vector" (numpy, batches node groups)
+    #                                 | "jax" (XLA, jitted; see jax_engine)
 
 
 def workload_arrays(wl: Workload) -> dict:
@@ -143,6 +148,16 @@ class C3Sim:
     # ------------------------------------------------------------------ run
     def run_iteration(self, freq: np.ndarray,
                       engine: Optional[str] = None) -> IterationTrace:
+        """Execute one iteration at per-device frequencies ``freq`` (G,)
+        and return its `IterationTrace`.
+
+        The engine entry point: ``engine`` (default ``cfg.engine``) picks
+        the execution strategy — ``"event"`` (heap reference),
+        ``"batched"`` (per-window numpy), ``"vector"`` / ``"jax"``
+        (all-lanes batched; this sim becomes a single-group call).  All
+        engines consume the same RNG draws (`_draw_noise` runs first), so
+        the choice never changes the physics — see docs/engines.md for the
+        per-pair equivalence guarantees."""
         engine = engine or self.cfg.engine
         noise_c, dur_comm = self._draw_noise()
         if engine == "batched":
@@ -152,6 +167,10 @@ class C3Sim:
         if engine == "vector":
             return vector_iteration([self], [np.asarray(freq, float)],
                                     [(noise_c, dur_comm)])[0]
+        if engine == "jax":
+            from repro.core.jax_engine import jax_iteration
+            return jax_iteration([self], [np.asarray(freq, float)],
+                                 [(noise_c, dur_comm)])[0]
         raise ValueError(f"unknown engine {engine!r}")
 
     # ----------------------------------------------------- event (reference)
@@ -662,6 +681,8 @@ class NodeSim:
         self.thermal.t_sim = 0.0
 
     def set_power_caps(self, caps: np.ndarray) -> None:
+        """Apply per-device power caps (W), as a fleet manager would; DVFS
+        converges toward them on subsequent `commit` calls."""
         self.state.cap = np.asarray(caps, float).copy()
 
     def run_only(self) -> IterationTrace:
@@ -704,6 +725,8 @@ class NodeSim:
         self.iteration += 1
 
     def step(self) -> IterationTrace:
+        """One standalone iteration: `run_only` then `commit` with the
+        node's own t_iter (no barrier stretching)."""
         trace = self.run_only()
         self.commit(trace)
         return trace

@@ -11,9 +11,10 @@ sensor fidelity drops.
 """
 from repro.telemetry.collector import (FleetSample, ManagerAction,
                                        NodeSample, TelemetryCollector)
-from repro.telemetry.replay import (DetectionReport, FleetReplay,
-                                    NodeReplay, ReplayCapBackend,
-                                    degrade, detection_report,
+from repro.telemetry.replay import (DetectionReport, FleetLeadReport,
+                                    FleetReplay, NodeReplay,
+                                    ReplayCapBackend, degrade,
+                                    detection_report, fleet_lead_report,
                                     fleet_replay_matches,
                                     replay_fleet, replay_node)
 from repro.telemetry.sensors import (LOSSLESS, ROCM_SMI_LIKE, SensorConfig,
@@ -30,4 +31,5 @@ __all__ = [
     "ReplayCapBackend", "NodeReplay", "FleetReplay",
     "replay_node", "replay_fleet", "fleet_replay_matches", "degrade",
     "DetectionReport", "detection_report",
+    "FleetLeadReport", "fleet_lead_report",
 ]

@@ -28,6 +28,12 @@ import numpy as np
 
 from repro.telemetry.sensors import LOSSLESS, SensorConfig, SensorModel
 
+# seed_offset of the fleet-scope sensor (the poller that observes per-node
+# iteration times for the lead estimate); far above any plausible node index
+# so per-node RNG streams stay bit-identical whether or not a fleet is
+# attached
+FLEET_SENSOR_OFFSET = 10_000
+
 
 @dataclass
 class NodeSample:
@@ -53,10 +59,15 @@ class FleetSample:
 
     iteration: int
     t_fleet: float
-    lead: np.ndarray                # (N,) topology lead signal
+    lead: np.ndarray                # (N,) topology lead signal (ground truth)
     t_local: np.ndarray             # (N,) per-node local iteration times
     node_power: np.ndarray          # (N,) summed node power (W)
     topology: str
+    lead_obs: Optional[np.ndarray] = None  # (N,) lead estimated from the
+    #                                 fleet sensor's observed t_local stream
+    #                                 (barrier-wait estimator) — what a real
+    #                                 fleet manager would see; None on traces
+    #                                 recorded before the fleet sensor existed
 
 
 @dataclass
@@ -89,6 +100,7 @@ class TelemetryCollector:
         self.fleet: Deque[FleetSample] = deque(maxlen=self.max_samples)
         self.actions: Deque[ManagerAction] = deque(maxlen=self.max_samples)
         self._sensors: Dict[int, SensorModel] = {}
+        self._fleet_sensor: Optional[SensorModel] = None
         self._last_iter: Optional[int] = None
         self._last_decision = False
 
@@ -98,6 +110,16 @@ class TelemetryCollector:
             self._sensors[node_index] = SensorModel(
                 self.sensor_cfg, seed_offset=node_index)
         return self._sensors[node_index]
+
+    def fleet_sensor(self) -> SensorModel:
+        """The cluster-scope observer: degrades the per-node ``t_local``
+        vector the lead estimate is computed from.  A separate stream
+        (``FLEET_SENSOR_OFFSET``) so the per-node kernel-start streams are
+        bit-identical with or without a fleet attached."""
+        if self._fleet_sensor is None:
+            self._fleet_sensor = SensorModel(
+                self.sensor_cfg, seed_offset=FLEET_SENSOR_OFFSET)
+        return self._fleet_sensor
 
     def attach_node(self, node, node_index: int = 0) -> "TelemetryCollector":
         """Hook a ``NodeSim``: every subsequent ``commit`` is offered to the
@@ -187,12 +209,21 @@ class TelemetryCollector:
         iteration = int(h["iter"]) - getattr(cluster, "_telemetry_iter0", 0)
         if not self._sampled(iteration):
             return
+        # what a real fleet manager sees: per-node iteration times through
+        # the (possibly lossy) fleet sensor, folded into a barrier-wait lead
+        # estimate max(t) - t.  Exact for DP; for PP/TP the gap to the true
+        # topology lead is the estimator's model bias, which
+        # fleet_lead_report quantifies alongside the sensor noise.  A
+        # lossless sensor draws nothing, so recording stays bit-for-bit.
+        t_obs = np.asarray(self.fleet_sensor().observe_times(
+            np.asarray(h["t_local"], float)), float)
         self.fleet.append(FleetSample(
             iteration=iteration, t_fleet=float(h["t_fleet"]),
             lead=np.asarray(h["lead"], float).copy(),
             t_local=np.asarray(h["t_local"], float).copy(),
             node_power=np.asarray(h["node_power"], float).copy(),
-            topology=str(h["topology"])))
+            topology=str(h["topology"]),
+            lead_obs=(t_obs.max() - t_obs)))
 
     def on_manager_action(self, kind: str, iteration: int,
                           values: np.ndarray, node: int = -1) -> None:
@@ -216,5 +247,6 @@ class TelemetryCollector:
         self.fleet.clear()
         self.actions.clear()
         self._sensors = {}
+        self._fleet_sensor = None
         self._last_iter = None
         self._last_decision = False

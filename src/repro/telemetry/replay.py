@@ -341,3 +341,55 @@ def detection_report(trace: TelemetryTrace, node: int = 0,
         true_straggler=true_straggler,
         accuracy_imputed=(hits_imp / len(samples) if dropped else None),
         dropped_samples=dropped)
+
+
+@dataclass
+class FleetLeadReport:
+    """How well the fleet-scope lead *estimate* tracks the true topology
+    lead signal.  The estimate (``FleetSample.lead_obs``) is what a real
+    fleet manager has: per-node iteration times read through a sensor,
+    folded into a barrier-wait lead ``max(t) - t``.  The error it carries
+    is sensor noise plus — under PP/TP, whose true lead is not a barrier
+    wait — the estimator's model bias; a lossless DP trace scores zero."""
+
+    n_samples: int
+    accuracy: float             # fraction naming the true per-sample straggler
+    majority_node: int          # argmin of the mean estimated lead
+    majority_correct: bool      # ...equals argmin of the mean true lead
+    lead_rel_error: float       # mean rms(est - true lead) / true span
+
+    def row(self) -> str:
+        """``derived``-column fragment, same shape as DetectionReport.row."""
+        return (f"fleet_samples={self.n_samples};"
+                f"fleet_acc={self.accuracy:.3f};"
+                f"fleet_majority_ok={int(self.majority_correct)};"
+                f"fleet_lead_err={self.lead_rel_error:.4f}")
+
+
+def fleet_lead_report(trace: TelemetryTrace) -> FleetLeadReport:
+    """Score the recorded fleet-lead estimate against the true topology
+    lead the same trace carries.  Ground truth is per-sample (``argmin``
+    of the lossless ``lead``), so node churn that moves the straggler is
+    scored correctly.  Raises ``ValueError`` on traces without fleet
+    samples or recorded before ``lead_obs`` existed."""
+    samples = [fs for fs in trace.fleet if fs.lead_obs is not None]
+    if not trace.fleet:
+        raise ValueError("trace holds no fleet samples (record through "
+                         "TelemetryCollector.attach_cluster)")
+    if not samples:
+        raise ValueError("trace fleet samples carry no lead_obs (recorded "
+                         "before the fleet lead sensor existed)")
+    hits, errs, est, true = 0, [], [], []
+    for fs in samples:
+        hits += int(np.argmin(fs.lead_obs) == np.argmin(fs.lead))
+        span = float(fs.lead.max() - fs.lead.min())
+        errs.append(float(np.sqrt(np.mean((fs.lead_obs - fs.lead) ** 2)))
+                    / max(span, 1e-12))
+        est.append(fs.lead_obs)
+        true.append(fs.lead)
+    maj = int(np.argmin(np.mean(est, axis=0)))
+    return FleetLeadReport(
+        n_samples=len(samples), accuracy=hits / len(samples),
+        majority_node=maj,
+        majority_correct=(maj == int(np.argmin(np.mean(true, axis=0)))),
+        lead_rel_error=float(np.mean(errs)))

@@ -112,7 +112,8 @@ def save_trace(src, path: str, extra_meta: Optional[Dict] = None) -> int:
                 "type": "fleet", "it": fs.iteration, "t_fleet": fs.t_fleet,
                 "lead": _enc(fs.lead), "t_local": _enc(fs.t_local),
                 "node_power": _enc(fs.node_power),
-                "topology": fs.topology}) + "\n")
+                "topology": fs.topology,
+                "lead_obs": _enc(fs.lead_obs)}) + "\n")
             lines += 1
         for a in trace.actions:
             f.write(json.dumps({
@@ -159,7 +160,10 @@ def load_trace(path: str) -> TelemetryTrace:
                     iteration=r["it"], t_fleet=r["t_fleet"],
                     lead=_dec(r["lead"]), t_local=_dec(r["t_local"]),
                     node_power=_dec(r["node_power"]),
-                    topology=r["topology"]))
+                    topology=r["topology"],
+                    # .get(): traces written before the fleet sensor existed
+                    # load with lead_obs=None rather than failing
+                    lead_obs=_dec(r.get("lead_obs"))))
             elif r["type"] == "action":
                 trace.actions.append(ManagerAction(
                     iteration=r["it"], kind=r["kind"], node=r["node"],

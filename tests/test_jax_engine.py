@@ -1,0 +1,186 @@
+"""engine="jax": the XLA port of the C3 window arithmetic, plus the
+whole-run fleet scan behind Monte-Carlo sweeps.
+
+Two equivalence tiers (docs/engines.md):
+
+  * ``jax_iteration`` consumes the *same numpy noise stream* as the vector
+    engine, so per-iteration traces line up float-for-float (tolerance for
+    accumulation order) — property-tested across topologies, heterogeneous
+    presets, and churn.
+  * ``run_fleet_scan`` keeps the whole warmup/churn/iteration loop inside
+    one jitted scan with jax-PRNG noise: identical thermal lotteries and
+    physics, a different noise stream — so the check is statistical
+    (tail-mean fleet metrics), driven through the sweep module against its
+    own per-sample ``ClusterSim`` fallback.
+"""
+import json
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from conftest import small_workload
+from repro.core.c3sim import SimConfig
+from repro.core.cluster import ClusterConfig, ClusterSim
+from repro.core.jax_engine import HAS_JAX, window_plan
+from repro.core.thermal import MI300X_PRESET, ChurnEvent, ChurnModel
+
+pytestmark = pytest.mark.skipif(not HAS_JAX, reason="jax not installed")
+
+HETERO = ["mi300x", "mi300x-air", "mi300x", "v5e"]
+
+
+def _cluster(engine, topo="dp", seed=5, hetero=False, churn=False,
+             noise=None):
+    kw = {}
+    if hetero:
+        kw["node_presets"] = HETERO
+    if churn:
+        # fresh ChurnModel per sim — the model is stateless but keep the
+        # two engines' configs independent anyway
+        kw["churn"] = {0: ChurnModel(events=[ChurnEvent(0.0, 3, 1.4)])}
+    sim_kw = dict(seed=1, comm_gbps=40.0)
+    if noise is not None:
+        sim_kw["noise"] = noise
+    return ClusterSim(small_workload(n_layers=8), MI300X_PRESET,
+                      SimConfig(**sim_kw),
+                      ClusterConfig(n_nodes=4, straggler_boost=1.28,
+                                    topology=topo, engine=engine, **kw),
+                      devices_per_node=8, seed=seed)
+
+
+def _assert_traces_close(ta, tb):
+    for field in ("comp_start", "comp_end", "comp_overlap",
+                  "comm_start", "comm_end", "util"):
+        a, b = getattr(ta, field), getattr(tb, field)
+        np.testing.assert_array_equal(np.isnan(a), np.isnan(b),
+                                      err_msg=f"{field}: NaN pattern")
+        np.testing.assert_allclose(a, b, rtol=1e-9, atol=1e-12,
+                                   equal_nan=True, err_msg=field)
+    assert ta.t_iter == pytest.approx(tb.t_iter, rel=1e-9)
+
+
+# --------------------------------------------------------------------------- #
+# per-iteration equivalence: jax vs vector
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("topo", ["dp", "pp", "tp"])
+def test_cluster_jax_engine_matches_vector(topo):
+    """engine='jax' steps all N*G lanes as one XLA program and must emit
+    the vector engine's traces (same RNG stream, float tolerance only for
+    accumulation order) — the cluster layer on top cannot tell them
+    apart."""
+    cv, cj = _cluster("vector", topo), _cluster("jax", topo)
+    for _ in range(3):
+        tv, tj = cv.step(), cj.step()
+        for a, b in zip(tv, tj):
+            _assert_traces_close(a, b)
+    assert cv.history[-1]["t_fleet"] == pytest.approx(
+        cj.history[-1]["t_fleet"], rel=1e-9)
+    np.testing.assert_allclose(cv.history[-1]["lead"],
+                               cj.history[-1]["lead"],
+                               rtol=1e-6, atol=1e-12)
+
+
+@settings(deadline=None, max_examples=12)
+@given(seed=st.integers(0, 2 ** 16),
+       topo=st.sampled_from(["dp", "pp", "tp"]),
+       hetero=st.booleans(), churn=st.booleans())
+def test_jax_engine_matches_vector_property(seed, topo, hetero, churn):
+    """Property: for any thermal-lottery seed, topology, fleet mix, and
+    churn setting, the jax engine's iteration is the vector engine's."""
+    cv = _cluster("vector", topo, seed=seed, hetero=hetero, churn=churn)
+    cj = _cluster("jax", topo, seed=seed, hetero=hetero, churn=churn)
+    for _ in range(2):
+        tv, tj = cv.step(), cj.step()
+    for a, b in zip(tv, tj):
+        np.testing.assert_array_equal(np.isnan(a.comp_end),
+                                      np.isnan(b.comp_end))
+        np.testing.assert_allclose(a.comp_end, b.comp_end,
+                                   rtol=1e-9, atol=1e-12, equal_nan=True)
+        np.testing.assert_allclose(a.comm_end, b.comm_end,
+                                   rtol=1e-9, atol=1e-12, equal_nan=True)
+    assert cv.history[-1]["t_fleet"] == pytest.approx(
+        cj.history[-1]["t_fleet"], rel=1e-9)
+
+
+def test_window_plan_caches_on_workload():
+    wl = small_workload(n_layers=8)
+    assert window_plan(wl) is window_plan(wl)
+
+
+# --------------------------------------------------------------------------- #
+# whole-run fleet scan: statistical equivalence via the sweep module
+# --------------------------------------------------------------------------- #
+@pytest.mark.slow
+def test_fleet_scan_sweep_matches_python_fallback(monkeypatch):
+    """The same SweepSpec through both execution paths — one vmapped
+    run_fleet_scan program vs per-sample ClusterSim stepping.  Thermal
+    lotteries are shared; only the iteration-noise stream differs, so
+    tail-mean fleet metrics must agree to well under a percent."""
+    from repro.api.sweep import SweepSpec, run_sweep
+
+    spec = SweepSpec(scenario="cluster/dp", samples=3, seed=0,
+                     iterations=40)
+    jax_art = run_sweep(spec)
+    assert jax_art["engine"] == "jax-scan"
+
+    import repro.core.jax_engine as je
+    monkeypatch.setattr(je, "HAS_JAX", False)
+    py_art = run_sweep(spec)
+    assert py_art["engine"] == "python"
+
+    for a, b in zip(jax_art["samples"], py_art["samples"]):
+        assert a["label"] == b["label"]
+        assert a["thermal_seed"] == b["thermal_seed"]
+        for key in ("t_fleet_s", "throughput", "fleet_power_w"):
+            assert a[key] == pytest.approx(b[key], rel=5e-3), key
+        assert a["recovery"] == pytest.approx(b["recovery"], rel=5e-3)
+
+
+@pytest.mark.slow
+def test_fleet_scan_handles_churn_and_hetero(monkeypatch):
+    """Churn event tables and per-node preset constants ride the scan as
+    data: the churn scenario's population matches the python fallback."""
+    from repro.api.sweep import SweepSpec, run_sweep
+
+    spec = SweepSpec(scenario="cluster/churn", samples=2, seed=1,
+                     iterations=40, node_preset_pool=["mi300x",
+                                                      "mi300x-air"])
+    jax_art = run_sweep(spec)
+    assert jax_art["engine"] == "jax-scan"
+
+    import repro.core.jax_engine as je
+    monkeypatch.setattr(je, "HAS_JAX", False)
+    py_art = run_sweep(spec)
+    for a, b in zip(jax_art["samples"], py_art["samples"]):
+        assert a["overrides"] == b["overrides"]
+        assert a["t_fleet_s"] == pytest.approx(b["t_fleet_s"], rel=1e-2)
+
+
+def test_sweep_artifact_schema(tmp_path):
+    """The artifact validates against the docs/sweeps.md schema and is
+    valid strict JSON (no NaN/Inf literals)."""
+    from repro.api.sweep import SWEEP_FORMAT, SweepSpec, run_sweep
+
+    art = run_sweep(SweepSpec(scenario="cluster/dp", samples=2,
+                              iterations=30))
+    assert art["format"] == SWEEP_FORMAT and art["version"] == 1
+    assert art["mode"] == "mc" and art["n_samples"] == 2
+    names = {"t_fleet_s", "throughput", "lead_max_s", "fleet_power_w"}
+    assert set(art["reference"]) == names
+    for s in art["samples"]:
+        assert names | {"sample", "label", "overrides", "thermal_seed",
+                        "recovery"} == set(s)
+        assert s["recovery"] > 0
+    assert set(art["summary"]) == names | {"recovery"}
+    for q in art["summary"].values():
+        assert set(q) == {"mean", "p10", "p50", "p90"}
+        assert q["p10"] <= q["p50"] <= q["p90"]
+    text = json.dumps(art, allow_nan=False)      # raises on NaN/Inf
+    assert json.loads(text) == art
+
+
+def test_sweep_rejects_node_scenarios():
+    from repro.api.sweep import SweepSpec, run_sweep
+    with pytest.raises(ValueError, match="fleet"):
+        run_sweep(SweepSpec(scenario="paper/node-cap", samples=2))

@@ -229,6 +229,80 @@ def test_cli_sweep(capsys):
     assert rows[0]["variant"] == "workload.n_layers=2"
 
 
+def test_sweep_spec_json_round_trip():
+    """SweepSpec survives JSON exactly — the `{"$float": ...}` discipline
+    the scenario codec uses covers the sweep document too."""
+    from repro.api.sweep import SWEEP_SPEC_FORMAT, Dist, SweepSpec
+    spec = SweepSpec(
+        scenario="cluster/dp", samples=7, seed=3, iterations=None,
+        dists={"fleet.straggler_boost": Dist(kind="uniform", low=0.1 + 0.2,
+                                             high=1e9 / 3.0),
+               "sim.noise": Dist(kind="choice",
+                                 choices=[0.002, float("inf"), None])},
+        node_preset_pool=["mi300x", "mi300x-air"],
+        grid=None)
+    text = spec.to_json()
+    json.loads(text)                          # strict JSON, no NaN/Inf tokens
+    assert "Infinity" not in text
+    back = SweepSpec.from_json(text)
+    assert back == spec
+    assert back.dists["fleet.straggler_boost"].low == 0.1 + 0.2
+    assert np.isinf(back.dists["sim.noise"].choices[1])
+    doc = json.loads(text)
+    assert doc["format"] == SWEEP_SPEC_FORMAT
+    # unknown keys are rejected loudly, at both levels
+    with pytest.raises(ValueError, match="bogus"):
+        SweepSpec.from_dict(dict(spec.to_dict(), bogus=1))
+    bad = json.loads(json.dumps(spec.to_dict()))
+    bad["dists"]["sim.noise"]["width"] = 2
+    with pytest.raises(ValueError, match="width"):
+        SweepSpec.from_dict(bad)
+
+
+def test_sweep_samples_are_prefix_stable():
+    """Sample k of an N-sample sweep equals sample k of an M-sample sweep
+    (per-sample child generators) — growing a population never reshuffles
+    the part already run."""
+    from repro.api.sweep import Dist, SweepSpec, _sample_overrides
+    base = get_scenario("cluster/dp")
+    kw = dict(scenario="cluster/dp", seed=9,
+              dists={"fleet.straggler_boost": Dist(low=1.1, high=1.5)},
+              node_preset_pool=["mi300x", "mi300x-air"])
+    big = _sample_overrides(SweepSpec(samples=8, **kw), base)
+    small = _sample_overrides(SweepSpec(samples=4, **kw), base)
+    assert big[:4] == small
+
+
+def test_cli_sweep_mc(capsys, tmp_path):
+    # the acceptance-criteria invocation (scaled down)
+    out_file = str(tmp_path / "sweep.json")
+    assert cli_main(["sweep", "cluster/dp", "--samples", "3",
+                     "--iterations", "30", "--json", "--out",
+                     out_file]) == 0
+    doc = json.loads(capsys.readouterr().out)
+    assert doc["format"] == "lit-silicon-sweep" and doc["n_samples"] == 3
+    assert doc["mode"] == "mc"
+    assert {"samples", "summary", "reference",
+            "sweep_spec"} <= set(doc)
+    with open(out_file) as f:
+        assert json.load(f) == doc
+    # a sweep spec file drives the same path; --samples still overrides
+    from repro.api.sweep import SweepSpec
+    spec_file = str(tmp_path / "spec.json")
+    SweepSpec.from_dict(doc["sweep_spec"]).save(spec_file)
+    assert cli_main(["sweep", "--sweep-spec", spec_file, "--samples", "2",
+                     "--json"]) == 0
+    doc2 = json.loads(capsys.readouterr().out)
+    assert doc2["n_samples"] == 2
+    # prefix stability end to end: shrinking the population keeps sample 0
+    assert doc2["samples"][0]["label"] == doc["samples"][0]["label"]
+    # node-scoped scenarios are a usage error, not a crash
+    assert cli_main(["sweep", "paper/node-cap", "--samples", "2"]) == 2
+    # naming a different scenario than the spec file is a usage error
+    assert cli_main(["sweep", "cluster/tp", "--sweep-spec",
+                     spec_file]) == 2
+
+
 def test_cli_replay(capsys, tmp_path):
     p = str(tmp_path / "trace.jsonl")
     sc = get_scenario("telemetry/rocm-smi-like")
@@ -247,7 +321,13 @@ def _wl8():
     return fsdp_llm_iteration(cfg, batch=2, seq=4096, n_shards=8)
 
 
-@pytest.mark.parametrize("engine", ["event", "batched", "vector"])
+@pytest.mark.parametrize("engine", [
+    "event", "batched", "vector",
+    pytest.param("jax", marks=pytest.mark.skipif(
+        not __import__("repro.core.jax_engine",
+                       fromlist=["HAS_JAX"]).HAS_JAX,
+        reason="jax not installed")),
+])
 def test_cluster_dp_scenario_matches_hand_wired_bit_for_bit(engine):
     """`run_scenario` on ``cluster/dp`` == the pre-API ClusterSim +
     FleetPowerManager composition, float for float, per engine."""

@@ -19,8 +19,8 @@ from repro.core.thermal import MI300X_PRESET
 from repro.telemetry import (LOSSLESS, SensorConfig, SensorModel,
                              TelemetryCollector, TelemetryTrace, degrade,
                              detection_report, export_chrome_trace,
-                             load_trace, replay_fleet, replay_node,
-                             save_trace)
+                             fleet_lead_report, load_trace, replay_fleet,
+                             replay_node, save_trace)
 
 
 def mgr_cfg(**kw):
@@ -517,3 +517,102 @@ def test_degrade_through_imputing_sensor_leaves_no_nan_rows(recorded_node):
         rows = np.isnan(s.comp_start).all(axis=1)
         assert not (rows & seen).any()     # once observed, never NaN again
         seen |= ~rows
+
+
+# --------------------------------------------------------------------------- #
+# fleet lead sensor (FleetSample.lead_obs + fleet_lead_report)
+# --------------------------------------------------------------------------- #
+def _recorded_cluster(topology="dp", noise_time_s=0.0, iters=12):
+    wl = small_workload(n_layers=8)
+    cl = ClusterSim(wl, MI300X_PRESET, SimConfig(seed=1, comm_gbps=40.0),
+                    ClusterConfig(n_nodes=4, straggler_boost=1.28,
+                                  topology=topology),
+                    devices_per_node=8, seed=5)
+    col = TelemetryCollector(
+        sensor_cfg=SensorConfig(noise_time_s=noise_time_s),
+        max_samples=64, with_kernels=False).attach_cluster(cl)
+    for _ in range(iters):
+        cl.step()
+    return TelemetryTrace.from_collector(col)
+
+
+def test_fleet_lead_estimate_exact_for_lossless_dp():
+    """DP lead *is* the barrier wait max(t) - t, so a lossless fleet
+    sensor's estimate matches the topology signal float for float."""
+    trace = _recorded_cluster("dp")
+    for fs in trace.fleet:
+        np.testing.assert_array_equal(fs.lead_obs, fs.lead)
+    rep = fleet_lead_report(trace)
+    assert rep.accuracy == 1.0 and rep.majority_correct
+    assert rep.lead_rel_error == 0.0
+    assert "fleet_lead_err=0.0000" in rep.row()
+
+
+def test_fleet_lead_estimator_bias_under_pp():
+    """PP's true lead is bubble time, not a barrier wait: even a lossless
+    sensor shows the estimator's model bias — but the *ranking* (who is
+    the straggler) survives, which is what a fleet manager acts on."""
+    rep = fleet_lead_report(_recorded_cluster("pp"))
+    assert rep.lead_rel_error > 0.0
+    assert rep.majority_correct
+
+
+def test_fleet_lead_error_grows_with_sensor_noise():
+    clean = fleet_lead_report(_recorded_cluster("dp", noise_time_s=0.0))
+    noisy = fleet_lead_report(_recorded_cluster("dp", noise_time_s=0.01))
+    assert noisy.lead_rel_error > clean.lead_rel_error
+    assert noisy.accuracy <= clean.accuracy
+
+
+def test_fleet_sensor_does_not_perturb_node_streams():
+    """The fleet sensor draws from its own stream (FLEET_SENSOR_OFFSET):
+    per-node observations are bit-identical to a node-only recording under
+    the same noisy config."""
+    cfg = SensorConfig(noise_time_s=1e-3, seed=7)
+    wl = small_workload(n_layers=8)
+
+    def run(attach_fleet):
+        cl = ClusterSim(wl, MI300X_PRESET, SimConfig(seed=1, comm_gbps=40.0),
+                        ClusterConfig(n_nodes=2, straggler_boost=1.28),
+                        devices_per_node=8, seed=5)
+        col = TelemetryCollector(sensor_cfg=cfg, max_samples=16)
+        if attach_fleet:
+            col.attach_cluster(cl)
+        else:
+            for n, node in enumerate(cl.nodes):
+                col.attach_node(node, n)
+            cl._telemetry_iter0 = cl.iteration
+        for _ in range(6):
+            cl.step()
+        return col
+    a, b = run(True), run(False)
+    for sa, sb in zip(a.samples, b.samples):
+        np.testing.assert_array_equal(sa.comp_start, sb.comp_start)
+        np.testing.assert_array_equal(sa.power, sb.power)
+
+
+def test_fleet_lead_obs_jsonl_roundtrip(tmp_path):
+    trace = _recorded_cluster("dp", noise_time_s=1e-3, iters=6)
+    p = str(tmp_path / "fleet.jsonl")
+    save_trace(trace, p)
+    back = load_trace(p)
+    for a, b in zip(trace.fleet, back.fleet):
+        np.testing.assert_array_equal(a.lead_obs, b.lead_obs)
+
+
+def test_fleet_lead_report_rejects_pre_sensor_traces(tmp_path):
+    """Traces written before lead_obs existed load fine (None) but the
+    report refuses to score them rather than guessing."""
+    trace = _recorded_cluster("dp", iters=4)
+    p = str(tmp_path / "old.jsonl")
+    save_trace(trace, p)
+    with open(p) as f:
+        lines = [json.loads(x) for x in f]
+    for r in lines:
+        r.pop("lead_obs", None)
+    with open(p, "w") as f:
+        f.writelines(json.dumps(r) + "\n" for r in lines)
+    back = load_trace(p)
+    assert all(fs.lead_obs is None for fs in back.fleet)
+    with pytest.raises(ValueError, match="lead_obs"):
+        fleet_lead_report(back)
