@@ -18,6 +18,10 @@ Rows:
   * cluster_churn            — straggler migration under cooling churn
   * cluster_fleet_manager    — FleetPowerManager recovery under a fixed
                                cluster power budget
+  * cluster_fault_recovery   — goodput of detect→drain→elastic restart vs
+                               ignoring the fault vs hair-trigger draining
+                               (the registered ``cluster/fault-heal`` /
+                               ``cluster/fault-ignored`` scenarios)
   * c3_engine_speedup        — batched fast path vs event-loop reference
   * cluster_vector_speedup   — vectorized all-lanes engine vs per-node
                                batched at sweep scale
@@ -113,6 +117,32 @@ def fleet_manager_recovery() -> List[Row]:
              f"healthy={tp_h:.4f};straggler={tp_s:.4f};managed={tp_m:.4f};"
              f"recovered={rec:.2f};"
              f"node0_budget={managed.manager.node_budgets[0]:.0f}W")]
+
+
+def fault_recovery() -> List[Row]:
+    """The escalation layer's acceptance ordering, as gated metrics:
+    healing (detect → drain → elastic restart) must out-goodput both
+    ignoring the fault and draining on the first blip.  The fault schedule
+    is pinned in simulated seconds, so the full horizon always runs (the
+    runs are cheap under the batched engine)."""
+    from repro.api import with_overrides
+    t0 = time.perf_counter()
+    heal = run_scenario(get_scenario("cluster/fault-heal"))
+    ignored = run_scenario(get_scenario("cluster/fault-ignored"))
+    immediate = run_scenario(with_overrides(
+        get_scenario("cluster/fault-heal"),
+        {"escalation.drain_mode": "immediate"}))
+    us = (time.perf_counter() - t0) * 1e6
+    g_heal = heal.metrics["goodput"]
+    g_ign = ignored.metrics["goodput"]
+    g_imm = immediate.metrics["goodput"]
+    return [("cluster_fault_recovery", us,
+             f"heal_goodput={g_heal:.4f};ignored_goodput={g_ign:.4f};"
+             f"immediate_goodput={g_imm:.4f};"
+             f"heal_over_ignored={g_heal / g_ign:.2f};"
+             f"detect_s={heal.metrics['time_to_detect_s']:.2f};"
+             f"false_drains={heal.metrics['false_drains']};"
+             f"immediate_false_drains={immediate.metrics['false_drains']}")]
 
 
 def engine_speedup() -> List[Row]:
@@ -260,6 +290,6 @@ def run() -> List[Row]:
     rows: List[Row] = []
     for fn in (engine_speedup, vector_speedup, jax_speedup, scale_sweep,
                straggler_placement, topology_coupling, hetero_fleet,
-               churn_migration, fleet_manager_recovery):
+               churn_migration, fleet_manager_recovery, fault_recovery):
         rows.extend(fn())
     return rows

@@ -6,7 +6,9 @@ Asserts, against the code (not a hand-maintained list):
   * every `python -m repro` subcommand (introspected from the argument
     parser) appears under docs/;
   * every `--flag` the sweep and run subcommands accept appears in
-    docs/cli.md, so the CLI reference cannot silently rot.
+    docs/cli.md, so the CLI reference cannot silently rot;
+  * every fault kind (`FAULT_KINDS`), escalation stage (`STAGES`) and
+    healing metric the runner reports appears in docs/faults.md.
 
 Exit 0 when covered, 1 with a per-item listing otherwise — same contract
 as the other scripts/ smokes.
@@ -77,6 +79,27 @@ def main() -> int:
                     missing.append(f"`{name}` flag {opt} is not documented "
                                    f"in docs/cli.md")
 
+    from repro.core.escalate import STAGES
+    from repro.core.faults import FAULT_KINDS
+    faults_text = docs.get("faults.md", "")
+    heal_metrics = ("goodput", "useful_units", "lost_units",
+                    "time_to_detect_s", "time_to_heal_s", "false_drains")
+    if not faults_text:
+        missing.append("docs/faults.md does not exist")
+    else:
+        for kind in FAULT_KINDS:
+            if f"`{kind}`" not in faults_text:
+                missing.append(f"fault kind `{kind}` is not documented in "
+                               f"docs/faults.md")
+        for stage in STAGES:
+            if stage not in faults_text:
+                missing.append(f"escalation stage {stage!r} is not "
+                               f"documented in docs/faults.md")
+        for metric in heal_metrics:
+            if f"`{metric}`" not in faults_text:
+                missing.append(f"healing metric `{metric}` is not "
+                               f"documented in docs/faults.md")
+
     if missing:
         print(f"check_docs: {len(missing)} item(s) missing from docs/ "
               f"({len(docs)} file(s) scanned):", file=sys.stderr)
@@ -86,8 +109,9 @@ def main() -> int:
     n_cmds = len(names)
     n_flags = sum(len(v) for v in flags.values())
     print(f"check_docs: ok — {len(list_scenarios())} scenarios, "
-          f"{n_cmds} subcommands, {n_flags} flags covered across "
-          f"{len(docs)} docs file(s)")
+          f"{n_cmds} subcommands, {n_flags} flags, "
+          f"{len(FAULT_KINDS)} fault kinds, {len(STAGES)} stages covered "
+          f"across {len(docs)} docs file(s)")
     return 0
 
 

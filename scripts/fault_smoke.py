@@ -1,0 +1,83 @@
+"""CI fault-healing smoke: run the registered ``cluster/fault-heal``
+scenario (transient hang + thermal runaway ending in device loss), record
+the healing trace (JSONL artifact), and fail unless
+
+  * healing strictly out-goodputs the ``cluster/fault-ignored`` ablation
+    (same faults, ``drain_mode="never"``) — draining + restarting must
+    actually pay for itself;
+  * no false drains — the transient hang is ridden out under patience;
+  * the drain decisions replay bit-for-bit from the recorded trace
+    (``replay_escalation`` / ``escalation_replay_matches``).
+
+The scenarios are the same registry entries the benchmark's
+``cluster_fault_recovery`` rows measure — CI validates one configuration,
+not two drifting copies.
+
+    PYTHONPATH=src python scripts/fault_smoke.py --out DIR
+
+Exit status 0 = ordering + replay hold; 1 = a gate failed.
+"""
+import argparse
+import os
+import sys
+
+_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+from repro.api import get_scenario, run_scenario              # noqa: E402
+from repro.telemetry import (escalation_replay_matches,       # noqa: E402
+                             load_trace, replay_escalation)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="fault_smoke",
+                    help="artifact directory (healing trace JSONL)")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    jsonl = os.path.join(args.out, "heal_trace.jsonl")
+
+    heal = run_scenario(get_scenario("cluster/fault-heal"),
+                        save_trace_path=jsonl)
+    ignored = run_scenario(get_scenario("cluster/fault-ignored"))
+    g_heal = heal.metrics["goodput"]
+    g_ign = ignored.metrics["goodput"]
+    print(f"goodput: fault-heal {g_heal:.4f} vs fault-ignored {g_ign:.4f} "
+          f"(x{g_heal / g_ign:.2f}); detect {heal.metrics['time_to_detect_s']:.1f}s, "
+          f"heal {heal.metrics['time_to_heal_s']:.1f}s, "
+          f"{heal.metrics['n_drains']} drain(s) -> {jsonl}")
+
+    failures = []
+    if not g_heal > g_ign:
+        failures.append(f"healing did not pay: goodput {g_heal:.4f} <= "
+                        f"ignored {g_ign:.4f}")
+    if heal.metrics["false_drains"] != 0:
+        failures.append(f"{heal.metrics['false_drains']} false drain(s): "
+                        "the transient hang was not ridden out")
+    if heal.metrics["n_drains"] < 1:
+        failures.append("the unrecoverable fault was never drained")
+
+    trace = load_trace(jsonl)
+    rp = replay_escalation(trace)
+    log = []
+    if not escalation_replay_matches(trace, rp, log=log.append):
+        failures.extend(["escalation replay diverged from the recording:",
+                         *log])
+    else:
+        print(f"replay matched recording bit-for-bit: "
+              f"{len(rp.events)} escalation events, "
+              f"drained nodes {rp.drained_nodes}")
+
+    if failures:
+        print("fault_smoke: FAILED", file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        return 1
+    print("fault_smoke: ok")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -196,7 +196,23 @@ def cmd_replay(args) -> int:
     if scope == "auto":
         scope = "fleet" if trace.fleet else "node"
     out = {"trace": args.trace, "scope": scope}
-    if scope == "fleet":
+    esc_trace = ("escalation" in (trace.meta or {})
+                 or any(e.source == "escalation" for e in trace.events))
+    if scope == "fleet" and esc_trace:
+        # healing traces change fleet width across drain epochs, so the
+        # budget replay does not apply; re-run the escalation decisions
+        # instead and check them bit-for-bit against the recording
+        from repro.telemetry import (escalation_replay_matches,
+                                     replay_escalation)
+        rp = replay_escalation(trace)
+        mismatches: List[str] = []
+        out["escalation_events"] = len(rp.events)
+        out["drained_nodes"] = rp.drained_nodes
+        out["replay_matches"] = bool(
+            escalation_replay_matches(trace, rp, log=mismatches))
+        if mismatches:
+            out["mismatches"] = mismatches
+    elif scope == "fleet":
         cfg = FleetManagerConfig(use_case=args.use_case, sampling_period=2,
                                  warmup=2, window_size=2, node_window_size=2,
                                  power_cap=700.0)

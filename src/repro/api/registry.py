@@ -18,6 +18,8 @@ from repro.api.spec import (ManagerSpec, NodeSpec, Scenario, TelemetrySpec,
                             WorkloadSpec, grid_variants)
 from repro.core.c3sim import SimConfig
 from repro.core.cluster import ClusterConfig
+from repro.core.escalate import EscalationConfig
+from repro.core.faults import FaultEvent, FaultModel
 from repro.core.manager import FleetManagerConfig, ManagerConfig
 from repro.core.thermal import ChurnEvent, ChurnModel
 from repro.telemetry.sensors import ROCM_SMI_LIKE
@@ -202,6 +204,50 @@ def cluster_churn() -> Scenario:
             churn={0: ChurnModel(events=[ChurnEvent(0.0, 3, 1.35)]),
                    2: ChurnModel(events=[ChurnEvent(12.6, 5, 1.8)])}),
         iterations=80, seed=5)
+
+
+def _heal_faults() -> FaultModel:
+    # the pinned fault schedule (seed 5, ~0.4 s healthy steps): a transient
+    # kernel hang on node 1 the patience window must ride out, then a
+    # thermal runaway on node 2 device 3 whose chip falls off the bus 10 s
+    # later — the unrecoverable straggler no cap schedule can fix
+    return FaultModel(events=[
+        FaultEvent(t=4.0, kind="kernel_hang", node=1, magnitude=2.2,
+                   duration=2.5),
+        FaultEvent(t=12.0, kind="thermal_runaway", node=2, device=3,
+                   magnitude=0.4),
+        FaultEvent(t=22.0, kind="device_loss", node=2, device=3),
+    ])
+
+
+def _fault_fleet(name: str, blurb: str, escalation) -> Scenario:
+    return Scenario(
+        name=name, description=blurb,
+        workload=_wl8(), sim=_sim(), node=NodeSpec(caps_w=CAP_W),
+        fleet=ClusterConfig(n_nodes=4, straggler_boost=1.28,
+                            inter_node_gbps=100.0),
+        manager=_fleet_mgr(4), telemetry=TelemetrySpec(),
+        faults=_heal_faults(), escalation=escalation,
+        iterations=160, seed=5)
+
+
+@register
+def cluster_fault_heal() -> Scenario:
+    return _fault_fleet(
+        "cluster/fault-heal",
+        "transient hang + thermal runaway ending in device loss; the "
+        "escalation policy detects, drains node 2 and elastically "
+        "restarts on 3 nodes (goodput-scored)",
+        EscalationConfig())
+
+
+@register
+def cluster_fault_ignored() -> Scenario:
+    return _fault_fleet(
+        "cluster/fault-ignored",
+        "the same fault schedule with drain_mode='never': the fleet "
+        "limps behind the dead chip — the ablation fault-heal must beat",
+        EscalationConfig(drain_mode="never"))
 
 
 # --------------------------------------------------------------------------- #

@@ -16,7 +16,9 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
-from repro.api.spec import Scenario
+from repro.api.spec import Scenario, TelemetrySpec
+from repro.core.escalate import (EscalationConfig, HealReport,
+                                 run_healing_fleet)
 from repro.core.backends import ClusterSimBackend, SimBackend
 from repro.core.c3sim import IterationTrace, NodeSim
 from repro.core.cluster import ClusterSim
@@ -84,6 +86,7 @@ class ScenarioResult:
     last_trace: Optional[IterationTrace] = None
     last_traces: Optional[List[IterationTrace]] = None
     trace_path: Optional[str] = None
+    heal: Optional[HealReport] = None       # fault/escalation runs only
 
     def to_json_dict(self) -> dict:
         """JSON-safe summary (the `--json` CLI payload): name, seed,
@@ -156,6 +159,11 @@ def run_scenario(sc: Scenario, *, iterations: Optional[int] = None,
     ``sc.telemetry``; the CLI enables a lossless default when asked to
     save without one).
     """
+    if sc.faults is not None and sc.telemetry is None:
+        # fault scenarios observe through telemetry: the escalation policy
+        # consumes the recorded (lossless by default) observed stream, so
+        # the same trace replays the drain decisions offline
+        sc = sc.replace(telemetry=TelemetrySpec())
     if (save_trace_path or chrome_trace_path) and sc.telemetry is None:
         raise ValueError("saving a trace requires Scenario.telemetry")
     iters = sc.iterations if iterations is None else int(iterations)
@@ -197,6 +205,9 @@ def _run_node(sc: Scenario, built: BuiltScenario, iters: int,
 
 def _run_fleet(sc: Scenario, built: BuiltScenario, iters: int,
                result: ScenarioResult) -> None:
+    if sc.faults is not None or sc.escalation is not None:
+        _run_healing(sc, built, iters, result)
+        return
     cluster = built.cluster
     if sc.manager is not None:
         backend = _CapturingClusterBackend(cluster)
@@ -207,6 +218,34 @@ def _run_fleet(sc: Scenario, built: BuiltScenario, iters: int,
     else:
         for _ in range(iters):
             result.last_traces = cluster.step()
+
+
+def _run_healing(sc: Scenario, built: BuiltScenario, iters: int,
+                 result: ScenarioResult) -> None:
+    """Fault/escalation scenarios run the elastic healing loop, which
+    (re)builds its own fleet per membership epoch — ``built.cluster`` is
+    discarded and the result handles point at the final epoch's objects.
+    Faults without an escalation spec run under ``drain_mode="never"``
+    (injected, observed, never drained — the ablation baseline)."""
+    esc = (sc.escalation if sc.escalation is not None
+           else EscalationConfig(drain_mode="never"))
+    rep = run_healing_fleet(
+        built.workload, sc.node.build_preset(), sc.sim, sc.fleet,
+        iterations=iters, faults=sc.faults, escalation=esc,
+        manager_cfg=(sc.manager.config if sc.manager is not None else None),
+        tune_after=(sc.manager.tune_after if sc.manager is not None
+                    else None),
+        devices_per_node=sc.node.devices, seed=sc.seed,
+        node_caps_w=sc.node.caps_w, collector=built.collector)
+    result.heal = rep
+    result.cluster = rep.cluster
+    result.manager = rep.manager
+
+
+def _num(x: float) -> float:
+    """NaN-free metric value (the JSON payload stays valid everywhere):
+    undefined durations report as -1.0."""
+    return -1.0 if (x is None or x != x) else float(x)
 
 
 # --------------------------------------------------------------------------- #
@@ -262,6 +301,20 @@ def _metrics(sc: Scenario, iters: int, r: ScenarioResult) -> Dict[str, float]:
             m["budget_spread_w"] = float(mgr.node_budgets.max()
                                          - mgr.node_budgets.min())
             m["n_budget_adjustments"] = len(mgr.budget_log)
+        if r.heal is not None:
+            hp = r.heal
+            m["goodput"] = _num(hp.goodput)
+            m["useful_units"] = hp.useful_units
+            m["lost_units"] = hp.lost_units
+            m["t_total_s"] = hp.t_total_s
+            m["energy_j"] = hp.energy_j
+            m["n_drains"] = len(hp.drains)
+            m["false_drains"] = hp.false_drains
+            m["time_to_detect_s"] = _num(hp.time_to_detect_s)
+            m["time_to_heal_s"] = _num(hp.time_to_heal_s)
+            m["surviving_nodes"] = hp.surviving_nodes
+            m["checkpoints"] = hp.checkpoints
+            m["checkpoint_restores"] = hp.restores
     if r.collector is not None:
         m["telemetry_samples"] = len(r.collector.samples)
         m.update(_detection_metrics(sc, r))

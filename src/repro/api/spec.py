@@ -34,17 +34,27 @@ from typing import Any, Dict, List, Optional, Tuple
 
 from repro.core.c3sim import SimConfig
 from repro.core.cluster import ClusterConfig
+from repro.core.escalate import EscalationConfig
+from repro.core.faults import FaultEvent, FaultModel
 from repro.core.manager import FleetManagerConfig, ManagerConfig
 from repro.core.thermal import PRESETS, ChurnEvent, ChurnModel, DevicePreset
 from repro.core.workload import Workload, fsdp_llm_iteration
 from repro.telemetry.sensors import SensorConfig
+from repro.train.fault import WatchdogConfig
 
 SPEC_FORMAT = "lit-silicon-scenario"
 SPEC_VERSION = 1
 
+# spec-layer names for the injected-fault schedule and the escalation
+# policy: both are plain dataclasses, so the scenario codec carries them
+# like every other config section
+FaultSpec = FaultModel
+EscalationSpec = EscalationConfig
+
 __all__ = [
     "SPEC_FORMAT", "SPEC_VERSION", "WorkloadSpec", "NodeSpec", "ManagerSpec",
-    "TelemetrySpec", "Scenario", "scenario_from_dict", "with_overrides",
+    "TelemetrySpec", "FaultSpec", "EscalationSpec", "Scenario",
+    "scenario_from_dict", "with_overrides",
 ]
 
 
@@ -148,6 +158,8 @@ class Scenario:
     fleet: Optional[ClusterConfig] = None     # None: single-node scenario
     manager: Optional[ManagerSpec] = None     # None: unmanaged run
     telemetry: Optional[TelemetrySpec] = None  # None: no recording
+    faults: Optional[FaultModel] = None        # None: no injected faults
+    escalation: Optional[EscalationConfig] = None  # None: no drain policy
     iterations: int = 60
     seed: int = 5                       # NodeSim / ClusterSim thermal seed
 
@@ -158,6 +170,15 @@ class Scenario:
         self.node.build_preset()
         if self.manager is not None:
             self.manager.validate(self.fleet is not None)
+        if self.faults is not None:
+            if self.fleet is None:
+                raise ValueError("faults require a fleet spec (injection "
+                                 "targets cluster nodes)")
+            self.faults.validate()
+        if self.escalation is not None:
+            if self.fleet is None:
+                raise ValueError("escalation requires a fleet spec")
+            self.escalation.validate()
         if self.iterations < 1:
             raise ValueError("iterations must be >= 1")
         return self
@@ -260,9 +281,11 @@ def _decode_value(v: Any, path: str) -> Any:
 _NESTED: Dict[type, Dict[str, type]] = {
     Scenario: {"workload": WorkloadSpec, "sim": SimConfig, "node": NodeSpec,
                "fleet": ClusterConfig, "manager": ManagerSpec,
-               "telemetry": TelemetrySpec},
+               "telemetry": TelemetrySpec, "faults": FaultModel,
+               "escalation": EscalationConfig},
     ManagerSpec: {"sensor": SensorConfig},
     TelemetrySpec: {"sensor": SensorConfig},
+    EscalationConfig: {"watchdog": WatchdogConfig},
 }
 
 
@@ -299,6 +322,9 @@ def _decode_dataclass(cls: type, data: Any, path: str) -> Any:
                           for i, e in enumerate(v)]
         elif cls is ChurnModel and f.name == "events":
             kw[f.name] = [_decode_dataclass(ChurnEvent, e, f"{p}[{i}]")
+                          for i, e in enumerate(v)]
+        elif cls is FaultModel and f.name == "events":
+            kw[f.name] = [_decode_dataclass(FaultEvent, e, f"{p}[{i}]")
                           for i, e in enumerate(v)]
         elif sub is not None:
             kw[f.name] = _decode_dataclass(sub, v, p)

@@ -7,6 +7,13 @@ from repro.core.backends import (ClusterSimBackend, NodeViewBackend,
 from repro.core.c3sim import (C3Sim, IterationTrace, NodeSim, SimConfig,
                               workload_arrays)
 from repro.core.cluster import ClusterConfig, ClusterSim, ring_allreduce_time
+from repro.core.escalate import (DRAIN_MODES, STAGES, DrainDecision,
+                                 EscalationConfig, EscalationEvent,
+                                 EscalationPolicy, HealReport,
+                                 run_healing_fleet)
+from repro.core.faults import (FAULT_KINDS, LOST_DEVICE_RATE,
+                               UNRECOVERABLE_KINDS, FaultEvent, FaultModel,
+                               random_faults)
 from repro.core.detect import (aggregate_lead, classify_overlap, cosine,
                                lead_value_detect, lead_values,
                                overlap_duration_correlation, pearson,
@@ -36,4 +43,8 @@ __all__ = [
     "PowerPrediction", "predict_power", "MI300X_PRESET", "PRESETS",
     "V5E_PRESET", "DevicePreset", "DeviceState", "ThermalModel", "CommKernel",
     "CompKernel", "Workload", "fsdp_llm_iteration",
+    "FAULT_KINDS", "UNRECOVERABLE_KINDS", "LOST_DEVICE_RATE", "FaultEvent",
+    "FaultModel", "random_faults", "DRAIN_MODES", "STAGES", "DrainDecision",
+    "EscalationConfig", "EscalationEvent", "EscalationPolicy", "HealReport",
+    "run_healing_fleet",
 ]

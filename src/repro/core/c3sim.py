@@ -673,6 +673,11 @@ class NodeSim:
         # telemetry hook (repro.telemetry.TelemetryCollector.attach_node):
         # None during warmup, so recordings start at operational time zero
         self.collector = None
+        # fault-injection hook (repro.core.faults via ClusterSim): per-device
+        # compute-rate multiplier (perf_degrade / device_loss); the device
+        # still draws power at its governed frequency — sick silicon burns
+        # watts without doing work.  None keeps execution bit-identical.
+        self.perf_scale: Optional[np.ndarray] = None
         # warm up thermals: a few iterations to reach operating temperature
         for _ in range(30):
             self.step()
@@ -690,6 +695,8 @@ class NodeSim:
         physics — a cluster layer runs all nodes first, then commits with
         the global (barrier-stretched) interval."""
         self._freq_used = self.state.freq.copy()
+        if self.perf_scale is not None:
+            self._freq_used = self._freq_used * self.perf_scale
         return self.sim.run_iteration(self._freq_used)
 
     def commit(self, trace: IterationTrace,

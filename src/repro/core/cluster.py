@@ -31,6 +31,7 @@ import numpy as np
 
 from repro.core.c3sim import (IterationTrace, NodeSim, SimConfig,
                               vector_iteration)
+from repro.core.faults import FaultModel
 from repro.core.thermal import PRESETS, ChurnModel, DevicePreset
 from repro.core.topology import Topology, make_topology, ring_allreduce_time
 from repro.core.workload import Workload
@@ -75,7 +76,10 @@ class ClusterSim:
 
     def __init__(self, workload: Workload, preset: DevicePreset,
                  sim_cfg: SimConfig, cluster_cfg: ClusterConfig,
-                 devices_per_node: int = 8, seed: int = 0):
+                 devices_per_node: int = 8, seed: int = 0,
+                 faults: Optional[FaultModel] = None,
+                 fault_nodes: Optional[Sequence[int]] = None,
+                 fault_t0: float = 0.0):
         cc = cluster_cfg
         self.cfg = cc
         self.N = cc.n_nodes
@@ -109,6 +113,27 @@ class ClusterSim:
         # telemetry hook (TelemetryCollector.attach_cluster) — fleet-scope
         # records; the per-node hooks live on each NodeSim
         self.collector = None
+        # ---------------------------------------------------- fault injection
+        # ``fault_nodes`` maps local node index -> global node id (an
+        # escalation runner rebuilds smaller fleets after drains but fault
+        # events keep naming the physical node they were scheduled on);
+        # ``fault_t0`` offsets this fleet's clock onto the global sim clock.
+        self.faults = faults
+        self.fault_nodes: List[int] = (list(fault_nodes)
+                                       if fault_nodes is not None
+                                       else list(range(self.N)))
+        if len(self.fault_nodes) != self.N:
+            raise ValueError(f"fault_nodes has {len(self.fault_nodes)} "
+                             f"entries for {self.N} nodes")
+        self.t_sim = float(fault_t0)
+        self._fault_seen: set = set()
+        if faults is not None:
+            faults.validate()
+            for n, node in enumerate(self.nodes):
+                gid = self.fault_nodes[n]
+                node.thermal.rth_fault = (
+                    lambda gid=gid: self.faults.rth_multipliers(
+                        self.t_sim, gid, self.G))
 
     def _resolve_presets(self, preset: DevicePreset) -> List[DevicePreset]:
         np_cfg = self.cfg.node_presets
@@ -137,7 +162,10 @@ class ClusterSim:
             # RNG streams are drawn exactly as a per-node run would
             freqs, noises = [], []
             for node in self.nodes:
-                node._freq_used = node.state.freq.copy()
+                f = node.state.freq.copy()
+                if node.perf_scale is not None:
+                    f = f * node.perf_scale
+                node._freq_used = f
                 freqs.append(node._freq_used)
                 noises.append(node.sim._draw_noise())
             if self.cfg.engine == "jax":
@@ -151,16 +179,33 @@ class ClusterSim:
     def step(self) -> List[IterationTrace]:
         """One coupled iteration: all nodes execute locally, then the
         topology resolves the fleet time and per-node lead signals, and
-        every node commits thermals over the stretched interval."""
+        every node commits thermals over the stretched interval.
+
+        With a ``FaultModel`` attached, active faults are applied first
+        (compute-rate scales, step-time hangs), newly-onset events are
+        reported to the collector, and the history row carries the
+        ``sensor_dead`` mask telemetry observers must respect."""
+        t_now = self.t_sim
+        sensor_dead = None
+        if self.faults is not None:
+            for n, node in enumerate(self.nodes):
+                node.perf_scale = self.faults.perf_scale(
+                    t_now, self.fault_nodes[n], self.G)
+            sensor_dead = np.array([self.faults.sensor_dead(t_now, g)
+                                    for g in self.fault_nodes])
         traces = self._run_nodes()
         t_local = np.array([tr.t_iter for tr in traces])
+        if self.faults is not None:
+            hang = np.array([self.faults.hang_multiplier(t_now, g)
+                             for g in self.fault_nodes])
+            t_local = t_local * hang
         fs = self.topology.step(t_local)
         t_fleet = fs.t_fleet
         for node, tr in zip(self.nodes, traces):
             node.commit(tr, t_interval=t_fleet,
                         active_wait=self.topology.wait_active)
         power = np.array([float(np.sum(n.state.power)) for n in self.nodes])
-        self.history.append({
+        row = {
             "iter": self.iteration,
             "t_local": t_local,
             "t_fleet": t_fleet,
@@ -171,7 +216,23 @@ class ClusterSim:
             "lead": fs.lead,
             "comm_time": fs.comm_time,
             "topology": self.topology.name,
-        })
+        }
+        if self.faults is not None:
+            row["t_sim"] = t_now
+            row["sensor_dead"] = sensor_dead
+        self.history.append(row)
+        self.t_sim += t_fleet
+        if self.faults is not None and self.collector is not None:
+            for ev in self.faults.activated_between(
+                    -np.inf, self.t_sim, nodes=self.fault_nodes):
+                key = id(ev)
+                if key in self._fault_seen:
+                    continue
+                self._fault_seen.add(key)
+                self.collector.on_fault_event(
+                    self.iteration - getattr(self, "_telemetry_iter0", 0),
+                    t_sim=ev.t, kind=ev.kind, node=ev.node,
+                    device=ev.device, value=ev.magnitude, source="fault")
         if self.collector is not None:
             self.collector.on_cluster_step(self, traces)
         self.iteration += 1

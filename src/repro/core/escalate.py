@@ -1,0 +1,559 @@
+"""Escalation above the power managers: detect → mitigate → drain →
+elastic restart.
+
+The paper's FleetPowerManager *tunes around* thermal stragglers by sloshing
+power budget toward them.  Some stragglers no cap schedule can fix — a
+device in thermal runaway, a dead sensor, a lost chip (faults.py).  This
+module adds the control layer a production fleet runs above the power
+managers:
+
+  * :class:`EscalationPolicy` — a deterministic state machine over the
+    *observed* per-node iteration-time stream (``FleetSample.t_obs``: the
+    fleet sensor's view, NaN where a node's sensor died).  A node whose
+    observed time exceeds ``straggle_threshold`` x the median of the other
+    nodes accrues a strike per observation (a finite healthy reading
+    resets the streak); a streak sustained for ``patience_s`` *simulated
+    seconds* escalates the node — patience is measured in time, not step
+    counts, because the fault itself inflates step time (a node limping at
+    10x would stretch a step-counted window tenfold) — and a
+    per-node :class:`~repro.train.fault.Watchdog` (fed the same observed
+    ratios as simulated step durations) must corroborate with a stall
+    before the policy orders a drain — so a power-manager-fixable lean
+    never drains a node, while a transient ``kernel_hang`` shorter than
+    the patience window is ridden out.  NaN observations retry
+    ``sensor_retries`` times before the sensor is declared dead
+    (escalation's own detection has to survive broken telemetry).
+  * :func:`run_healing_fleet` — the measurable scenario: run a faulted
+    fleet under the hierarchical power manager, and when the policy orders
+    a drain, charge ``drain_s``, recompute the mesh over the survivors
+    (:class:`~repro.train.fault.ElasticPlan`), restore progress from the
+    last :class:`~repro.train.checkpoint.CheckpointManager` checkpoint
+    (rolling back the iterations since it), charge ``restart_penalty_s``,
+    and resume on the smaller fleet.  The report scores the whole story as
+    **goodput**: useful node-iterations per simulated second, net of
+    rollbacks, drains and restarts.
+
+Every decision is a pure function of the observed stream and the config,
+so a lossless telemetry trace replays the drain decisions bit-for-bit
+offline (``repro.telemetry.replay.replay_escalation``).  Node ids in all
+events and decisions are **global** (position in the original fleet),
+stable across post-drain rebuilds.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import tempfile
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.backends import ClusterSimBackend
+from repro.core.cluster import ClusterConfig, ClusterSim
+from repro.core.faults import FaultModel
+from repro.core.manager import FleetManagerConfig, FleetPowerManager
+from repro.train.fault import ElasticPlan, Watchdog, WatchdogConfig
+
+__all__ = ["DRAIN_MODES", "STAGES", "EscalationConfig", "EscalationEvent",
+           "DrainDecision", "EscalationPolicy", "HealReport",
+           "run_healing_fleet"]
+
+DRAIN_MODES = ("escalate", "immediate", "never")
+
+# the escalation state machine's observable stages, in order of severity;
+# "restart" is emitted by the healing runner when the rebuilt fleet resumes
+STAGES = ("suspect", "escalate", "sensor-dead", "drain", "restart")
+
+
+def _default_watchdog() -> WatchdogConfig:
+    # fed cross-sectional ratios (node time / median of the others), not
+    # wall-clock durations: a healthy node sits at ~1.0, so a long window
+    # keeps the stall baseline anchored to healthy history and a slow
+    # drift (thermal runaway) still crosses stall_factor x median
+    return WatchdogConfig(stall_factor=1.35, window=64)
+
+
+@dataclass
+class EscalationConfig:
+    """Knobs of the detect→escalate→drain state machine and of the
+    restart cost model the healing runner charges."""
+
+    straggle_threshold: float = 1.25   # observed t / median(others) ratio
+    patience_s: float = 4.0            # seconds a straggle streak must be
+    #                                    sustained before escalation (time,
+    #                                    not steps: the fault inflates dt)
+    sensor_retries: int = 3            # NaN reads tolerated before declaring
+    #                                    the node's sensor dead
+    drain_mode: str = "escalate"       # escalate | immediate | never
+    drain_s: float = 6.0               # seconds to drain + deschedule a node
+    restart_penalty_s: float = 8.0     # checkpoint restore + re-setup time
+    checkpoint_period: int = 10        # steps between checkpoints
+    global_batch: int = 64             # kept across restarts (ElasticPlan)
+    min_nodes: int = 1                 # never drain below this fleet size
+    watchdog: WatchdogConfig = field(default_factory=_default_watchdog)
+
+    def validate(self) -> "EscalationConfig":
+        if self.drain_mode not in DRAIN_MODES:
+            raise ValueError(f"drain_mode must be one of {DRAIN_MODES}, "
+                             f"got {self.drain_mode!r}")
+        if self.straggle_threshold <= 1.0:
+            raise ValueError("straggle_threshold must be > 1")
+        if self.patience_s <= 0:
+            raise ValueError("patience_s must be > 0")
+        if self.sensor_retries < 0:
+            raise ValueError("sensor_retries must be >= 0")
+        if self.checkpoint_period < 1:
+            raise ValueError("checkpoint_period must be >= 1")
+        if self.min_nodes < 1:
+            raise ValueError("min_nodes must be >= 1")
+        return self
+
+    # manual dict codec (used for trace meta, where the spec-layer codec
+    # is unavailable without an api->telemetry import cycle)
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["watchdog"] = dataclasses.asdict(self.watchdog)
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "EscalationConfig":
+        d = dict(d)
+        wd = d.pop("watchdog", None)
+        names = {f.name for f in dataclasses.fields(cls)}
+        unknown = sorted(set(d) - names)
+        if unknown:
+            raise ValueError(f"unknown EscalationConfig key(s) {unknown}")
+        cfg = cls(**d)
+        if wd is not None:
+            cfg.watchdog = WatchdogConfig(**wd)
+        return cfg.validate()
+
+
+@dataclass
+class EscalationEvent:
+    """One stage transition: ``stage`` (a ``STAGES`` entry) on global node
+    ``node`` at observed step ``step`` / simulated second ``t_sim``."""
+
+    step: int
+    t_sim: float
+    stage: str
+    node: int
+    value: float = 0.0                 # stage-specific (ratio, fleet size..)
+
+
+@dataclass
+class DrainDecision:
+    """The policy's verdict that a node is beyond mitigation."""
+
+    node: int                          # local index in the observed vector
+    global_node: int
+    step: int
+    t_sim: float
+    reason: str                        # "straggle" | "sensor"
+    strikes: int
+    ratio: float                       # last observed straggle ratio
+
+
+class EscalationPolicy:
+    """Deterministic drain-decision state machine (see module docstring).
+
+    ``observe`` consumes one observed per-node iteration-time vector per
+    sampled step and returns a :class:`DrainDecision` when a node should
+    be drained (at most one per call).  All state is a pure function of
+    the observation sequence and the config — no clocks, no RNG — which
+    is what makes recorded decisions replayable offline.
+    """
+
+    def __init__(self, cfg: EscalationConfig,
+                 nodes: Optional[Sequence[int]] = None,
+                 on_event: Optional[Callable[[EscalationEvent], None]] = None):
+        self.cfg = cfg.validate()
+        self.events: List[EscalationEvent] = []
+        self.on_event = on_event
+        self.reset(nodes if nodes is not None else [])
+
+    def reset(self, nodes: Sequence[int]) -> None:
+        """Start a fresh observation epoch over ``nodes`` (global ids,
+        index-aligned with subsequent ``observe`` vectors).  Called at
+        every fleet (re)build — streaks never span an elastic restart."""
+        self.nodes = list(nodes)
+        n = len(self.nodes)
+        self.strikes = [0] * n
+        self.stale = [0] * n
+        self.sensor_failed = [False] * n
+        self.suspected = [False] * n
+        self.escalated = [False] * n
+        self.watchdogs = [Watchdog(dataclasses.replace(self.cfg.watchdog))
+                          for _ in range(n)]
+        self._stalls0 = [0] * n        # stall count at current streak start
+        self.streak_t0 = [math.nan] * n   # t_sim of the streak's first strike
+
+    # ------------------------------------------------------------------ events
+    def emit(self, step: int, t_sim: float, stage: str, node: int,
+             value: float = 0.0) -> EscalationEvent:
+        ev = EscalationEvent(step=int(step), t_sim=float(t_sim),
+                             stage=stage, node=int(node), value=float(value))
+        self.events.append(ev)
+        if self.on_event is not None:
+            self.on_event(ev)
+        return ev
+
+    # ----------------------------------------------------------------- observe
+    def observe(self, step: int, t_obs: np.ndarray,
+                t_sim: float = 0.0) -> Optional[DrainDecision]:
+        cfg = self.cfg
+        t = np.asarray(t_obs, float)
+        if len(t) != len(self.nodes):
+            raise ValueError(f"observed {len(t)} nodes, policy tracks "
+                             f"{len(self.nodes)} (call reset after a "
+                             "membership change)")
+        n = len(t)
+        if n < 2:
+            return None                # nothing to compare against
+        decision: Optional[DrainDecision] = None
+        for i in range(n):
+            gid = self.nodes[i]
+            if not np.isfinite(t[i]):
+                # retry/backoff before declaring the sensor dead; a dead
+                # sensor is itself an unrecoverable fault, so blind reads
+                # beyond the retry budget accrue strikes
+                self.stale[i] += 1
+                if (self.stale[i] > cfg.sensor_retries
+                        and not self.sensor_failed[i]):
+                    self.sensor_failed[i] = True
+                    self.emit(step, t_sim, "sensor-dead", gid,
+                              float(self.stale[i]))
+                if self.sensor_failed[i]:
+                    if self.strikes[i] == 0:
+                        self.streak_t0[i] = float(t_sim)
+                    self.strikes[i] += 1
+                ratio = math.nan
+            else:
+                self.stale[i] = 0      # a read came back: retry succeeded
+                others = np.delete(t, i)
+                others = others[np.isfinite(others)]
+                med = float(np.median(others)) if others.size else math.nan
+                ratio = (float(t[i]) / med
+                         if (np.isfinite(med) and med > 0) else math.nan)
+                if np.isfinite(ratio):
+                    # the watchdog sees the ratio stream as step durations:
+                    # a stall verdict is the corroborating authority
+                    self.watchdogs[i].end_step(0.0, 0.0, dt=ratio)
+                if np.isfinite(ratio) and ratio > cfg.straggle_threshold:
+                    if self.strikes[i] == 0:
+                        self.streak_t0[i] = float(t_sim)
+                    self.strikes[i] += 1
+                    if not self.suspected[i]:
+                        self.suspected[i] = True
+                        self.emit(step, t_sim, "suspect", gid, ratio)
+                else:
+                    self.strikes[i] = 0
+                    self.suspected[i] = False
+                    self.escalated[i] = False
+                    self._stalls0[i] = self.watchdogs[i].stalls
+                    self.streak_t0[i] = math.nan
+            if self.strikes[i] == 0:
+                continue
+            # patience is a *time* window: at least two consecutive strikes
+            # sustained for patience_s simulated seconds (immediate mode
+            # escalates on the first strike)
+            straggle_for = float(t_sim) - self.streak_t0[i]
+            due = (self.strikes[i] >= 1 if cfg.drain_mode == "immediate"
+                   else (self.strikes[i] >= 2
+                         and straggle_for >= cfg.patience_s))
+            if not due:
+                continue
+            if not self.escalated[i]:
+                self.escalated[i] = True
+                self.emit(step, t_sim, "escalate", gid, ratio)
+            corroborated = (self.sensor_failed[i]
+                            or self.watchdogs[i].stalls > self._stalls0[i]
+                            or cfg.drain_mode == "immediate")
+            if (cfg.drain_mode != "never" and corroborated
+                    and decision is None):
+                decision = DrainDecision(
+                    node=i, global_node=gid, step=int(step),
+                    t_sim=float(t_sim),
+                    reason=("sensor" if self.sensor_failed[i]
+                            else "straggle"),
+                    strikes=self.strikes[i], ratio=ratio)
+                self.emit(step, t_sim, "drain", gid, ratio)
+        return decision
+
+
+# --------------------------------------------------------------------------- #
+# the healing runner: fault → detect → drain → elastic restart, measured
+# --------------------------------------------------------------------------- #
+@dataclass
+class HealReport:
+    """What one healing run is worth, in goodput terms."""
+
+    goodput: float                  # useful node-iterations / simulated s
+    useful_units: float             # committed node-iterations
+    lost_units: float               # rolled-back node-iterations
+    t_total_s: float                # simulated seconds incl. drains/restarts
+    energy_j: float
+    progress: int                   # committed fleet iterations
+    surviving_nodes: int
+    false_drains: int               # drains of nodes with no unrecoverable
+    #                                 fault active at decision time
+    drains: List[dict]
+    events: List[EscalationEvent]
+    time_to_detect_s: float = math.nan   # first true drain: onset → decision
+    time_to_heal_s: float = math.nan     # first true drain: decision → resume
+    checkpoints: int = 0
+    restores: int = 0
+    cluster: object = None          # final-epoch ClusterSim (live handle)
+    manager: object = None          # final-epoch FleetPowerManager (or None)
+
+
+def _subfleet_config(cfg: ClusterConfig, alive: List[int]) -> ClusterConfig:
+    """The ClusterConfig of the surviving fleet: per-node knobs reindexed
+    from global node ids onto the new (smaller) local index space."""
+    kw: dict = {"n_nodes": len(alive)}
+    if cfg.node_presets is not None:
+        kw["node_presets"] = [cfg.node_presets[g] for g in alive]
+    if cfg.churn:
+        kw["churn"] = {alive.index(g): cm for g, cm in cfg.churn.items()
+                       if g in alive}
+    if cfg.straggler_node in alive:
+        kw["straggler_node"] = alive.index(cfg.straggler_node)
+    else:                              # the boosted node was drained
+        kw["straggler_node"] = 0
+        kw["straggler_boost"] = cfg.healthy_boost
+    return dataclasses.replace(cfg, **kw)
+
+
+def _tree(progress: float, units: float, caps: np.ndarray,
+          budgets: np.ndarray) -> dict:
+    """The global-shaped (original fleet size) training-state tree the
+    CheckpointManager persists; surviving rows are selected on restore."""
+    return {"progress": np.asarray(float(progress)),
+            "units": np.asarray(float(units)),
+            "caps": np.asarray(caps, float),
+            "budgets": np.asarray(budgets, float)}
+
+
+def _observed(cluster: ClusterSim, collector, it: int):
+    """The policy's input for iteration ``it``: the recorded fleet
+    sample's observed t_local vector when telemetry is attached (None when
+    the sensor skipped the iteration — the policy is then blind), else the
+    simulator's own t_local with dead sensors masked to NaN."""
+    if collector is not None:
+        if collector.fleet and collector.fleet[-1].iteration == it:
+            return collector.fleet[-1].t_obs
+        return None
+    h = cluster.history[-1]
+    t = np.asarray(h["t_local"], float).copy()
+    dead = h.get("sensor_dead")
+    if dead is not None:
+        t[np.asarray(dead, bool)] = np.nan
+    return t
+
+
+def run_healing_fleet(workload, preset, sim_cfg, cluster_cfg: ClusterConfig,
+                      *, iterations: int,
+                      faults: Optional[FaultModel] = None,
+                      escalation: Optional[EscalationConfig] = None,
+                      manager_cfg: Optional[FleetManagerConfig] = None,
+                      tune_after: Optional[int] = None,
+                      devices_per_node: int = 8, seed: int = 0,
+                      node_caps_w: Optional[float] = None,
+                      collector=None,
+                      checkpoint_dir: Optional[str] = None) -> HealReport:
+    """Run ``iterations`` committed fleet steps under fault injection and
+    the escalation policy, healing through drains by elastic restart.
+
+    Two clocks: ``step`` counts *executed* fleet steps monotonically (it
+    drives telemetry iteration numbering, the manager's sampling cadence
+    and checkpoint ids), while ``progress`` counts *committed* steps and
+    rolls back to the restored checkpoint on every drain — the loop runs
+    until ``progress`` reaches ``iterations``, so every run finishes the
+    same amount of useful work and goodput is directly comparable across
+    drain modes.
+    """
+    from repro.train.checkpoint import CheckpointManager   # pulls in jax
+
+    esc = (escalation if escalation is not None
+           else EscalationConfig(drain_mode="never"))
+    esc.validate()
+    if faults is not None:
+        faults.validate()
+    N0 = int(cluster_cfg.n_nodes)
+    G = int(devices_per_node)
+    tune_after = iterations // 2 if tune_after is None else int(tune_after)
+
+    tmp = None
+    if checkpoint_dir is None:
+        tmp = tempfile.TemporaryDirectory(prefix="heal-ckpt-")
+        checkpoint_dir = tmp.name
+    ckpt = CheckpointManager(checkpoint_dir, keep=3, async_write=False)
+
+    if collector is not None:
+        collector.meta["escalation"] = esc.to_dict()
+
+    def forward(ev: EscalationEvent) -> None:
+        if collector is not None:
+            collector.on_fault_event(ev.step, ev.t_sim, ev.stage, ev.node,
+                                     value=ev.value, source="escalation")
+
+    policy = EscalationPolicy(esc, on_event=forward)
+
+    alive: List[int] = list(range(N0))
+    step = 0                        # monotonic executed-step counter
+    progress = 0                    # committed steps (rolls back on drain)
+    units = 0.0                     # committed node-iterations
+    lost_units = 0.0
+    t_total = 0.0                   # global simulated clock
+    energy_j = 0.0
+    drains: List[dict] = []
+    n_saves = n_restores = 0
+    # global-shaped warm-start state (per original node)
+    init_cap = (float(node_caps_w) if node_caps_w is not None
+                else float(preset.tdp))
+    caps_global = np.full((N0, G), init_cap)
+    budgets_global = np.full(N0, G * init_cap)
+
+    epoch = 0
+    cluster = None
+    mgr = None
+    fault_seen: set = set()         # shared across epochs: a rebuilt fleet
+    #                                 must not re-report old fault onsets
+    while progress < iterations and len(alive) >= esc.min_nodes:
+        cfg_e = _subfleet_config(cluster_cfg, alive)
+        cluster = ClusterSim(workload, preset, sim_cfg, cfg_e,
+                             devices_per_node=G,
+                             seed=seed + 100003 * epoch,
+                             faults=faults, fault_nodes=list(alive),
+                             fault_t0=t_total)
+        cluster._fault_seen = fault_seen
+        if node_caps_w is not None:
+            for n in range(cluster.N):
+                cluster.set_node_caps(n, np.full(G, float(node_caps_w)))
+        if collector is not None:
+            collector.attach_cluster(cluster)
+            # the trace describes the *original* fleet: post-drain epochs
+            # shrink the live width but not the global node space
+            collector.meta["n_nodes"] = N0
+            # rebase the recording clock so iteration numbers continue
+            # monotonically from the executed-step counter across epochs
+            cluster._telemetry_iter0 = cluster.iteration - step
+            for node in cluster.nodes:
+                node._telemetry_iter0 = node.iteration - step
+        backend = ClusterSimBackend(cluster)
+        mgr = None
+        if manager_cfg is not None:
+            mcfg = manager_cfg
+            if (mcfg.cluster_power_budget is not None and len(alive) < N0):
+                mcfg = dataclasses.replace(
+                    mcfg, cluster_power_budget=(
+                        mcfg.cluster_power_budget * len(alive) / N0))
+            mgr = FleetPowerManager(backend, mcfg, collector=collector)
+        if epoch > 0:
+            # warm start from the checkpointed cap/budget state — the
+            # survivors keep their converged mitigation (paper Fig 12)
+            backend.set_power_caps(caps_global[alive])
+            if mgr is not None:
+                mgr.import_budgets(budgets_global[alive])
+
+        def save_ckpt() -> None:
+            nonlocal n_saves, caps_global, budgets_global
+            caps_global = caps_global.copy()
+            caps_global[alive] = backend.get_power_caps()
+            if mgr is not None:
+                budgets_global = budgets_global.copy()
+                budgets_global[alive] = mgr.node_budgets
+            ckpt.save(step, _tree(progress, units, caps_global,
+                                  budgets_global))
+            n_saves += 1
+
+        policy.reset(alive)
+        save_ckpt()                 # epoch-start checkpoint: a restore
+        #                             never rolls back across a rebuild
+        if epoch > 0:
+            policy.emit(step, t_total, "restart", -1, value=len(alive))
+
+        drained = False
+        while progress < iterations:
+            it = step
+            traces = backend.run_iteration()
+            if mgr is not None and it >= tune_after:
+                mgr.on_iteration(it, traces)
+            h = cluster.history[-1]
+            dt = float(h["t_fleet"])
+            t_total += dt
+            energy_j += float(h["power"]) * dt
+            units += float(len(alive))
+            progress += 1
+            step = it + 1
+            t_obs = _observed(cluster, collector, it)
+            decision = None
+            if t_obs is not None:
+                decision = policy.observe(it, t_obs, t_sim=t_total)
+            if decision is not None and len(alive) - 1 < esc.min_nodes:
+                decision = None     # floor reached: ride it out
+            if decision is not None:
+                g = decision.global_node
+                onset = (faults.onset_of_unrecoverable(g, before=t_total)
+                         if faults is not None else None)
+                false_drain = onset is None
+                ttd = (t_total - onset) if onset is not None else math.nan
+                plan = ElasticPlan.after_failure(
+                    len(alive) * G, G, model_parallel=G,
+                    global_batch=esc.global_batch)
+                tree, _ = ckpt.restore(_tree(0, 0, caps_global,
+                                             budgets_global))
+                n_restores += 1
+                new_progress = int(round(float(np.asarray(tree["progress"]))))
+                new_units = float(np.asarray(tree["units"]))
+                lost_units += units - new_units
+                rolled_back = progress - new_progress
+                progress, units = new_progress, new_units
+                caps_global = np.asarray(tree["caps"], float).copy()
+                budgets_global = np.asarray(tree["budgets"], float).copy()
+                heal_s = esc.drain_s + esc.restart_penalty_s
+                # survivors idle at floor power while the node drains and
+                # the job restores + re-setups
+                idle_w = sum(cluster.presets[n].p_idle * G
+                             for n in range(cluster.N)
+                             if alive[n] != g)
+                t_total += heal_s
+                energy_j += idle_w * heal_s
+                alive = [a for a in alive if a != g]
+                drains.append({
+                    "node": g, "step": decision.step,
+                    "t_sim": decision.t_sim, "reason": decision.reason,
+                    "ratio": decision.ratio, "strikes": decision.strikes,
+                    "false": false_drain, "time_to_detect_s": ttd,
+                    "time_to_heal_s": heal_s,
+                    "rolled_back_iters": rolled_back,
+                    "surviving_devices": plan.n_devices,
+                    "mesh": list(plan.mesh_shape()),
+                    "batch_per_replica": plan.batch_per_replica(),
+                    "batch_padding": plan.batch_padding()})
+                drained = True
+                break
+            if step % esc.checkpoint_period == 0:
+                save_ckpt()
+        if not drained:
+            break
+        epoch += 1
+
+    if tmp is not None:
+        tmp.cleanup()
+    true_drains = [d for d in drains if not d["false"]]
+    report = HealReport(
+        goodput=(units / t_total if t_total > 0 else math.nan),
+        useful_units=units, lost_units=lost_units,
+        t_total_s=t_total, energy_j=energy_j,
+        progress=progress, surviving_nodes=len(alive),
+        false_drains=sum(1 for d in drains if d["false"]),
+        drains=drains, events=list(policy.events),
+        time_to_detect_s=(true_drains[0]["time_to_detect_s"]
+                          if true_drains else math.nan),
+        time_to_heal_s=(true_drains[0]["time_to_heal_s"]
+                        if true_drains else math.nan),
+        checkpoints=n_saves, restores=n_restores,
+        cluster=cluster, manager=mgr)
+    return report

@@ -262,6 +262,23 @@ class FleetPowerManager:
         self.lead_window.clear()
         self._adjust_from_lead(lead_avg)
 
+    def import_budgets(self, budgets) -> np.ndarray:
+        """Warm-start the node-budget split from external state (e.g. a
+        checkpoint restored after an elastic restart): the given per-node
+        budgets are projected onto this fleet's cluster budget and pushed
+        into the nested per-node managers, so the survivors resume with
+        their converged mitigation instead of re-learning it."""
+        b = np.asarray(budgets, float).copy()
+        if b.shape != (self.N,):
+            raise ValueError(f"expected {self.N} node budgets, "
+                             f"got shape {b.shape}")
+        if b.sum() > 0:
+            b *= self.cluster_budget / b.sum()
+        self.node_budgets = b
+        for n, mgr in enumerate(self.managers):
+            mgr.cfg.node_cap_override = float(b[n])
+        return b
+
     def adjust_node_budgets(self, t_local: np.ndarray) -> np.ndarray:
         """Direct-drive entry point from per-node iteration times: the
         barrier-wait lead (data-parallel semantics).  The closed loop goes

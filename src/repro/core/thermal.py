@@ -124,6 +124,11 @@ class ThermalModel:
         self.G = n_devices
         self.churn = churn
         self.t_sim = 0.0                 # simulated operating time (churn)
+        # fault-injection hook (repro.core.faults via ClusterSim): a
+        # callable (G,)-multiplier source composed on top of churn — e.g.
+        # thermal_runaway grows a device's r_th without bound.  None keeps
+        # the physics bit-identical to a fault-free run.
+        self.rth_fault = None
         rng = np.random.default_rng(seed)
         # cooling heterogeneity: smooth spread + one notably worse slot
         # (paper Fig 7 top node: a single persistent straggler; §VIII-C:
@@ -180,10 +185,14 @@ class ThermalModel:
 
     def effective_r_th(self) -> np.ndarray:
         """Per-device thermal resistance at the current simulated time —
-        the static spread plus any churn degradation accrued so far."""
-        if self.churn is None:
-            return self.r_th
-        return self.r_th * self.churn.multipliers(self.t_sim, self.G)
+        the static spread, any churn degradation accrued so far, and any
+        injected fault (thermal runaway) multipliers."""
+        r = self.r_th
+        if self.churn is not None:
+            r = r * self.churn.multipliers(self.t_sim, self.G)
+        if self.rth_fault is not None:
+            r = r * self.rth_fault()
+        return r
 
     def step_thermal(self, state: DeviceState, power: np.ndarray,
                      dt: float) -> None:

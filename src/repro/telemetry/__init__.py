@@ -9,13 +9,18 @@ closes that gap: record any sim (node / cluster, every engine) through a
 (bit-for-bit from a lossless trace), and measure how detection degrades as
 sensor fidelity drops.
 """
-from repro.telemetry.collector import (FleetSample, ManagerAction,
-                                       NodeSample, TelemetryCollector)
-from repro.telemetry.replay import (DetectionReport, FleetLeadReport,
+from repro.telemetry.collector import (FaultRecord, FleetSample,
+                                       ManagerAction, NodeSample,
+                                       TelemetryCollector)
+from repro.telemetry.replay import (DetectionReport, EscalationReplay,
+                                    FleetLeadReport,
                                     FleetReplay, NodeReplay,
                                     ReplayCapBackend, degrade,
-                                    detection_report, fleet_lead_report,
+                                    detection_report,
+                                    escalation_replay_matches,
+                                    fleet_lead_report,
                                     fleet_replay_matches,
+                                    replay_escalation,
                                     replay_fleet, replay_node)
 from repro.telemetry.sensors import (LOSSLESS, ROCM_SMI_LIKE, SensorConfig,
                                      SensorModel)
@@ -26,6 +31,8 @@ from repro.telemetry.trace_io import (TRACE_FORMAT, TRACE_VERSION,
 __all__ = [
     "SensorConfig", "SensorModel", "LOSSLESS", "ROCM_SMI_LIKE",
     "TelemetryCollector", "NodeSample", "FleetSample", "ManagerAction",
+    "FaultRecord", "EscalationReplay", "replay_escalation",
+    "escalation_replay_matches",
     "TelemetryTrace", "TRACE_FORMAT", "TRACE_VERSION",
     "save_trace", "load_trace", "export_chrome_trace",
     "ReplayCapBackend", "NodeReplay", "FleetReplay",

@@ -68,6 +68,10 @@ class FleetSample:
     #                                 (barrier-wait estimator) — what a real
     #                                 fleet manager would see; None on traces
     #                                 recorded before the fleet sensor existed
+    t_obs: Optional[np.ndarray] = None     # (N,) the observed t_local vector
+    #                                 itself (NaN where the node's sensor is
+    #                                 dead) — the EscalationPolicy input, so
+    #                                 drain decisions replay bit-for-bit
 
 
 @dataclass
@@ -85,6 +89,24 @@ class ManagerAction:
 
 
 @dataclass
+class FaultRecord:
+    """A discrete fault/escalation event, on the recording-relative
+    iteration clock.  ``source="fault"`` rows are injected-fault onsets
+    (``kind`` is a ``repro.core.faults.FAULT_KINDS`` entry); ``source=
+    "escalation"`` rows are EscalationPolicy stage transitions (``kind``
+    is a ``repro.core.escalate.STAGES`` entry).  ``node`` is the *global*
+    node id — stable across post-drain fleet rebuilds."""
+
+    iteration: int
+    t_sim: float                    # simulated-seconds clock of the event
+    kind: str
+    node: int
+    device: int = -1                # -1: node-scoped
+    value: float = 0.0              # kind-specific (magnitude, ratio, ...)
+    source: str = "fault"           # "fault" | "escalation"
+
+
+@dataclass
 class TelemetryCollector:
     sensor_cfg: SensorConfig = LOSSLESS
     max_samples: int = 2048         # sampled iterations retained; a cluster
@@ -99,6 +121,7 @@ class TelemetryCollector:
         self.samples: Deque[NodeSample] = deque(maxlen=self.max_samples)
         self.fleet: Deque[FleetSample] = deque(maxlen=self.max_samples)
         self.actions: Deque[ManagerAction] = deque(maxlen=self.max_samples)
+        self.events: Deque[FaultRecord] = deque(maxlen=self.max_samples)
         self._sensors: Dict[int, SensorModel] = {}
         self._fleet_sensor: Optional[SensorModel] = None
         self._last_iter: Optional[int] = None
@@ -154,9 +177,11 @@ class TelemetryCollector:
         cluster._telemetry_iter0 = cluster.iteration
         target_samples = self.max_samples * cluster.N
         target_actions = self.max_samples * (cluster.N + 1)
-        if self.samples.maxlen != target_samples:
+        # grow-only: re-attaching a *smaller* fleet (elastic restart after
+        # a drain) must not shrink the ring and drop recorded history
+        if (self.samples.maxlen or 0) < target_samples:
             self.samples = deque(self.samples, maxlen=target_samples)
-        if self.actions.maxlen != target_actions:
+        if (self.actions.maxlen or 0) < target_actions:
             self.actions = deque(self.actions, maxlen=target_actions)
         for n, node in enumerate(cluster.nodes):
             self.attach_node(node, n)
@@ -216,20 +241,41 @@ class TelemetryCollector:
         # fleet_lead_report quantifies alongside the sensor noise.  A
         # lossless sensor draws nothing, so recording stays bit-for-bit.
         t_obs = np.asarray(self.fleet_sensor().observe_times(
-            np.asarray(h["t_local"], float)), float)
+            np.asarray(h["t_local"], float)), float).copy()
+        dead = h.get("sensor_dead")
+        if dead is not None and np.any(dead):
+            # a dead sensor reads as NaN; the lead estimate degrades to the
+            # max over the nodes still reporting (NaN where blind).  The
+            # fault-free path is untouched (same floats as before).
+            t_obs[np.asarray(dead, bool)] = np.nan
+            finite = np.isfinite(t_obs)
+            lead_obs = (np.max(t_obs[finite]) - t_obs if finite.any()
+                        else np.full_like(t_obs, np.nan))
+        else:
+            lead_obs = t_obs.max() - t_obs
         self.fleet.append(FleetSample(
             iteration=iteration, t_fleet=float(h["t_fleet"]),
             lead=np.asarray(h["lead"], float).copy(),
             t_local=np.asarray(h["t_local"], float).copy(),
             node_power=np.asarray(h["node_power"], float).copy(),
             topology=str(h["topology"]),
-            lead_obs=(t_obs.max() - t_obs)))
+            lead_obs=lead_obs, t_obs=t_obs))
 
     def on_manager_action(self, kind: str, iteration: int,
                           values: np.ndarray, node: int = -1) -> None:
         self.actions.append(ManagerAction(
             iteration=int(iteration), kind=kind, node=node,
             values=np.asarray(values, float).copy()))
+
+    def on_fault_event(self, iteration: int, t_sim: float, kind: str,
+                       node: int, device: int = -1, value: float = 0.0,
+                       source: str = "fault") -> None:
+        """Record a fault onset (``ClusterSim.step``) or an escalation
+        stage transition (``EscalationPolicy`` via the healing runner)."""
+        self.events.append(FaultRecord(
+            iteration=int(iteration), t_sim=float(t_sim), kind=str(kind),
+            node=int(node), device=int(device), value=float(value),
+            source=str(source)))
 
     # ------------------------------------------------------------ accessors
     def node_samples(self, node: int = 0) -> List[NodeSample]:
@@ -246,6 +292,7 @@ class TelemetryCollector:
         self.samples.clear()
         self.fleet.clear()
         self.actions.clear()
+        self.events.clear()
         self._sensors = {}
         self._fleet_sensor = None
         self._last_iter = None

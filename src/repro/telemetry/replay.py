@@ -234,6 +234,112 @@ def fleet_replay_matches(live: FleetPowerManager, rp: FleetReplay,
 
 
 # --------------------------------------------------------------------------- #
+# escalation replay: re-derive drain decisions from the observed stream
+# --------------------------------------------------------------------------- #
+@dataclass
+class EscalationReplay:
+    """What the offline escalation policy decided over a recorded trace."""
+
+    decisions: List                 # DrainDecision, in order
+    events: List                    # EscalationEvent: every stage transition
+    drained_nodes: List[int]        # global node ids, in drain order
+
+
+def replay_escalation(trace: TelemetryTrace, cfg=None) -> EscalationReplay:
+    """Re-run the :class:`~repro.core.escalate.EscalationPolicy` over the
+    recorded observed per-node times (``FleetSample.t_obs``) and return
+    the decisions it makes offline.
+
+    The policy is a pure function of the observed stream and the config,
+    so with the config the live run used (taken from
+    ``trace.meta["escalation"]`` when ``cfg`` is None) the replay emits
+    the *same* stage transitions — suspect, escalate, sensor-death, drain
+    — at the same steps with the same values, bit-for-bit
+    (``escalation_replay_matches``).  Membership is replayed too: each
+    drain removes the node and resets the policy, mirroring the live
+    elastic restart, and the simulated clock advances by the recorded
+    ``t_fleet`` per sample plus ``drain_s + restart_penalty_s`` per drain.
+    """
+    from repro.core.escalate import EscalationConfig, EscalationPolicy
+    if cfg is None:
+        d = trace.meta.get("escalation")
+        if d is None:
+            raise ValueError("trace meta carries no escalation config; "
+                             "pass cfg explicitly")
+        cfg = EscalationConfig.from_dict(d)
+    samples = [fs for fs in trace.fleet if fs.t_obs is not None]
+    if not samples:
+        raise ValueError("trace fleet samples carry no t_obs (recorded "
+                         "before fault telemetry existed)")
+    alive = list(range(trace.n_nodes))
+    policy = EscalationPolicy(cfg, nodes=alive)
+    decisions: List = []
+    t_sim = 0.0
+    heal_s = cfg.drain_s + cfg.restart_penalty_s
+    for fs in samples:
+        if len(fs.t_obs) != len(alive):
+            raise ValueError(
+                f"fleet sample at iteration {fs.iteration} is "
+                f"{len(fs.t_obs)} nodes wide but the replayed membership "
+                f"is {len(alive)} — the trace's drains diverge from this "
+                "config's decisions")
+        t_sim += float(fs.t_fleet)
+        decision = policy.observe(fs.iteration, fs.t_obs, t_sim=t_sim)
+        if decision is not None and len(alive) - 1 < cfg.min_nodes:
+            decision = None         # mirror the live runner's fleet floor
+        if decision is not None:
+            decisions.append(decision)
+            t_sim += heal_s
+            alive = [a for a in alive if a != decision.global_node]
+            policy.reset(alive)
+            policy.emit(fs.iteration + 1, t_sim, "restart", -1,
+                        value=len(alive))
+    return EscalationReplay(decisions=decisions,
+                            events=list(policy.events),
+                            drained_nodes=[d.global_node
+                                           for d in decisions])
+
+
+def _feq(a: float, b: float) -> bool:
+    return (a != a and b != b) or a == b       # NaN-tolerant exact equality
+
+
+def escalation_replay_matches(trace: TelemetryTrace, rp: EscalationReplay,
+                              log=None) -> bool:
+    """Bit-for-bit comparison of the live run's recorded escalation events
+    (``source == "escalation"`` in the trace) against an offline replay:
+    same stages, on the same global nodes, at the same steps, with the
+    same simulated timestamps and values.  ``log`` (e.g. ``print``)
+    receives one line per divergence — shared by the CI smoke and the
+    tests, so the two cannot drift apart."""
+    log = log or (lambda *_: None)
+    rec = [e for e in trace.events if e.source == "escalation"]
+    ok = True
+    if len(rec) != len(rp.events):
+        log(f"MISMATCH: {len(rp.events)} replayed escalation events vs "
+            f"{len(rec)} recorded")
+        ok = False
+    for i, (a, b) in enumerate(zip(rec, rp.events)):
+        if not (a.iteration == b.step and a.kind == b.stage
+                and a.node == b.node and _feq(a.t_sim, b.t_sim)
+                and _feq(a.value, b.value)):
+            log(f"MISMATCH: escalation event {i}: recorded "
+                f"(it={a.iteration}, {a.kind}, node={a.node}, "
+                f"t={a.t_sim}, v={a.value}) vs replayed "
+                f"(it={b.step}, {b.stage}, node={b.node}, "
+                f"t={b.t_sim}, v={b.value})")
+            ok = False
+            break
+    rec_drained = [e.node for e in rec if e.kind == "drain"]
+    if ok and rec_drained[:len(rp.drained_nodes)] != rp.drained_nodes[
+            :len(rec_drained)]:
+        log(f"MISMATCH: drain order: recorded {rec_drained} vs replayed "
+            f"{rp.drained_nodes}")
+        ok = False
+    return ok
+
+
+# --------------------------------------------------------------------------- #
 # sensor-fidelity studies
 # --------------------------------------------------------------------------- #
 def degrade(trace: TelemetryTrace, sensor: SensorModel) -> TelemetryTrace:

@@ -6,6 +6,10 @@ Format (one JSON object per line):
   then     {"type": "node",  "it": ..., "node": ..., "start": [[...]], ...}
            {"type": "fleet", "it": ..., "lead": [...], ...}
            {"type": "action", "it": ..., "kind": ..., "values": [...]}
+           {"type": "event", "it": ..., "kind": ..., "node": ..., ...}
+
+``event`` lines carry fault onsets and escalation decisions (FaultRecord);
+readers predating them skip unknown record types, so the version stays 1.
 
 Floats round-trip exactly (json emits the shortest repr that parses back to
 the same IEEE-754 double), and NaN — not valid JSON — is encoded as null,
@@ -26,8 +30,9 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
-from repro.telemetry.collector import (FleetSample, ManagerAction,
-                                       NodeSample, TelemetryCollector)
+from repro.telemetry.collector import (FaultRecord, FleetSample,
+                                       ManagerAction, NodeSample,
+                                       TelemetryCollector)
 
 TRACE_FORMAT = "lit-silicon-telemetry"
 TRACE_VERSION = 1
@@ -60,11 +65,13 @@ class TelemetryTrace:
     samples: List[NodeSample] = field(default_factory=list)
     fleet: List[FleetSample] = field(default_factory=list)
     actions: List[ManagerAction] = field(default_factory=list)
+    events: List[FaultRecord] = field(default_factory=list)
 
     @classmethod
     def from_collector(cls, col: TelemetryCollector) -> "TelemetryTrace":
         return cls(meta=dict(col.meta), samples=list(col.samples),
-                   fleet=list(col.fleet), actions=list(col.actions))
+                   fleet=list(col.fleet), actions=list(col.actions),
+                   events=list(getattr(col, "events", [])))
 
     def node_samples(self, node: int = 0) -> List[NodeSample]:
         return [s for s in self.samples if s.node == node]
@@ -113,12 +120,21 @@ def save_trace(src, path: str, extra_meta: Optional[Dict] = None) -> int:
                 "lead": _enc(fs.lead), "t_local": _enc(fs.t_local),
                 "node_power": _enc(fs.node_power),
                 "topology": fs.topology,
-                "lead_obs": _enc(fs.lead_obs)}) + "\n")
+                "lead_obs": _enc(fs.lead_obs),
+                "t_obs": _enc(fs.t_obs)}) + "\n")
             lines += 1
         for a in trace.actions:
             f.write(json.dumps({
                 "type": "action", "it": a.iteration, "kind": a.kind,
                 "node": a.node, "values": _enc(a.values)}) + "\n")
+            lines += 1
+        for ev in trace.events:
+            val = ev.value
+            f.write(json.dumps({
+                "type": "event", "it": ev.iteration, "t_sim": ev.t_sim,
+                "kind": ev.kind, "node": ev.node, "device": ev.device,
+                "value": (None if val != val else val),
+                "source": ev.source}) + "\n")
             lines += 1
     return lines
 
@@ -163,11 +179,19 @@ def load_trace(path: str) -> TelemetryTrace:
                     topology=r["topology"],
                     # .get(): traces written before the fleet sensor existed
                     # load with lead_obs=None rather than failing
-                    lead_obs=_dec(r.get("lead_obs"))))
+                    lead_obs=_dec(r.get("lead_obs")),
+                    t_obs=_dec(r.get("t_obs"))))
             elif r["type"] == "action":
                 trace.actions.append(ManagerAction(
                     iteration=r["it"], kind=r["kind"], node=r["node"],
                     values=_dec(r["values"])))
+            elif r["type"] == "event":
+                v = r.get("value")
+                trace.events.append(FaultRecord(
+                    iteration=r["it"], t_sim=r["t_sim"], kind=r["kind"],
+                    node=r["node"], device=r.get("device", -1),
+                    value=(float("nan") if v is None else float(v)),
+                    source=r.get("source", "fault")))
     return trace
 
 

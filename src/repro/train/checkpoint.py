@@ -93,6 +93,7 @@ class CheckpointManager:
                 f.write(os.path.basename(final))
             os.replace(lat_tmp, os.path.join(self.dir, "LATEST"))
             self._gc()
+            self._clean_stale_tmp()
 
         if self.async_write:
             self._thread = threading.Thread(target=write, daemon=True)
@@ -111,6 +112,13 @@ class CheckpointManager:
                        if d.startswith("step_"))
         for d in steps[: max(0, len(steps) - self.keep)]:
             shutil.rmtree(os.path.join(self.dir, d), ignore_errors=True)
+
+    def _clean_stale_tmp(self) -> None:
+        """Remove ``.tmp-step_*`` leftovers from writers that crashed
+        mid-save (the completed ``os.replace`` means none belong to us)."""
+        for d in os.listdir(self.dir):
+            if d.startswith(".tmp-step_"):
+                shutil.rmtree(os.path.join(self.dir, d), ignore_errors=True)
 
     # --------------------------------------------------------------- restore
     def latest_step(self) -> Optional[int]:

@@ -32,19 +32,29 @@ class WatchdogConfig:
 
 
 class Watchdog:
-    def __init__(self, cfg: WatchdogConfig = WatchdogConfig()):
+    """Step-health monitor.  Timing is injectable two ways so a simulator
+    (or a test) can drive it deterministically: pass ``clock`` (a
+    ``time.monotonic``-shaped callable) at construction, or hand
+    ``end_step`` an explicit ``dt`` in simulated seconds.  The default is
+    the wall clock, unchanged."""
+
+    def __init__(self, cfg: WatchdogConfig = WatchdogConfig(), clock=None):
         self.cfg = cfg
+        self.clock = time.monotonic if clock is None else clock
         self.step_times: List[float] = []
         self.rollbacks = 0
         self.stalls = 0
         self._t0: Optional[float] = None
 
     def start_step(self) -> None:
-        self._t0 = time.monotonic()
+        self._t0 = self.clock()
 
-    def end_step(self, loss: float, grad_norm: float) -> str:
-        """Returns 'ok' | 'stall' | 'rollback'."""
-        dt = time.monotonic() - (self._t0 or time.monotonic())
+    def end_step(self, loss: float, grad_norm: float,
+                 dt: Optional[float] = None) -> str:
+        """Returns 'ok' | 'stall' | 'rollback'.  ``dt`` overrides the
+        measured step duration (simulated time drives the stall check)."""
+        if dt is None:
+            dt = self.clock() - (self._t0 or self.clock())
         verdict = "ok"
         if self.step_times:
             med = float(np.median(self.step_times[-self.cfg.window:]))
@@ -70,18 +80,27 @@ class ElasticPlan:
     global_batch: int
 
     def mesh_shape(self) -> tuple:
-        assert self.n_devices % self.model_parallel == 0, \
-            "surviving devices must still divide by the TP extent"
+        if self.n_devices % self.model_parallel:
+            raise ValueError(
+                f"{self.n_devices} surviving devices do not divide by the "
+                f"TP extent {self.model_parallel}")
         data = self.n_devices // self.model_parallel
         return (data, self.model_parallel)
 
     def batch_per_replica(self) -> int:
-        data = self.n_devices // self.model_parallel
-        if self.global_batch % data:
-            # keep the global batch: pad replicas (standard practice is to
-            # round the batch; we keep semantics and report the remainder)
-            return -(-self.global_batch // data)
-        return self.global_batch // data
+        """Per-replica batch, rounded *up* when the global batch does not
+        divide the data extent (the global batch is kept; replicas pad).
+        ``batch_padding`` reports the padded remainder."""
+        data = self.mesh_shape()[0]
+        return -(-self.global_batch // data)
+
+    def batch_padding(self) -> int:
+        """Padded samples per iteration: how many of the
+        ``batch_per_replica * data`` slots carry no real sample (0 when the
+        global batch divides evenly) — wasted compute the goodput metric
+        should not credit."""
+        data = self.mesh_shape()[0]
+        return self.batch_per_replica() * data - self.global_batch
 
     @staticmethod
     def after_failure(n_devices: int, failed: int, model_parallel: int,

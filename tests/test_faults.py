@@ -1,0 +1,447 @@
+"""Fault injection + escalation: detect → mitigate → drain → restart.
+
+Three layers under test: the `FaultModel` schedule queries, the physics of
+each fault kind inside `ClusterSim`, and the `EscalationPolicy` /
+`run_healing_fleet` control loop (with its acceptance ordering: healing
+must out-goodput both ignoring the fault and hair-trigger draining).
+"""
+import json
+import math
+
+import numpy as np
+import pytest
+
+from conftest import small_workload
+from repro.core.c3sim import SimConfig
+from repro.core.cluster import ClusterConfig, ClusterSim
+from repro.core.escalate import (DRAIN_MODES, STAGES, EscalationConfig,
+                                 EscalationPolicy)
+from repro.core.faults import (FAULT_KINDS, LOST_DEVICE_RATE,
+                               UNRECOVERABLE_KINDS, FaultEvent, FaultModel,
+                               random_faults)
+from repro.core.thermal import MI300X_PRESET
+
+
+# --------------------------------------------------------------- FaultModel
+def test_fault_event_validation():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultEvent(0.0, "meltdown").validate()
+    with pytest.raises(ValueError, match="duration"):
+        FaultEvent(0.0, "kernel_hang", duration=0.0).validate()
+    for kind in FAULT_KINDS:
+        FaultEvent(1.0, kind).validate()
+
+
+def test_fault_active_window_and_unrecoverable():
+    ev = FaultEvent(5.0, "kernel_hang", magnitude=2.0, duration=3.0)
+    assert not ev.active(4.9) and ev.active(5.0) and ev.active(7.9)
+    assert not ev.active(8.0)
+    assert not ev.unrecoverable                    # transient hang heals
+    assert FaultEvent(5.0, "kernel_hang").unrecoverable   # forever: doesn't
+    for kind in UNRECOVERABLE_KINDS:
+        assert FaultEvent(0.0, kind, duration=1.0).unrecoverable
+
+
+def test_rth_multiplier_grows_from_onset():
+    fm = FaultModel([FaultEvent(10.0, "thermal_runaway", node=1, device=3,
+                                magnitude=0.1)])
+    np.testing.assert_array_equal(fm.rth_multipliers(5.0, 1, 8), np.ones(8))
+    np.testing.assert_array_equal(fm.rth_multipliers(10.0, 0, 8), np.ones(8))
+    m = fm.rth_multipliers(20.0, 1, 8)
+    assert m[3] == pytest.approx(1.0 + 0.1 * 10.0)
+    assert (np.delete(m, 3) == 1.0).all()
+
+
+def test_perf_scale_none_when_idle_and_loss_pins_rate():
+    fm = FaultModel([
+        FaultEvent(0.0, "perf_degrade", node=0, device=1, magnitude=0.5,
+                   duration=10.0),
+        FaultEvent(5.0, "device_loss", node=0, device=1),
+    ])
+    assert fm.perf_scale(20.0, 1, 8) is None       # wrong node: no alloc
+    m = fm.perf_scale(1.0, 0, 8)
+    assert m[1] == pytest.approx(0.5)
+    # loss takes the min — degradation can't make a dead chip faster
+    assert fm.perf_scale(6.0, 0, 8)[1] == pytest.approx(LOST_DEVICE_RATE)
+    assert fm.perf_scale(15.0, 0, 8)[1] == pytest.approx(LOST_DEVICE_RATE)
+
+
+def test_hang_and_sensor_queries():
+    fm = FaultModel([
+        FaultEvent(2.0, "kernel_hang", node=1, magnitude=3.0, duration=4.0),
+        FaultEvent(2.0, "kernel_hang", node=1, magnitude=0.5, duration=4.0),
+        FaultEvent(1.0, "sensor_death", node=2, duration=5.0),
+    ])
+    assert fm.hang_multiplier(1.0, 1) == 1.0
+    assert fm.hang_multiplier(3.0, 1) == pytest.approx(3.0)  # 0.5 clamps to 1
+    assert fm.sensor_dead(3.0, 2) and not fm.sensor_dead(7.0, 2)
+    assert not fm.sensor_dead(3.0, 1)
+
+
+def test_onset_and_activation_queries():
+    fm = FaultModel([
+        FaultEvent(4.0, "kernel_hang", node=1, magnitude=2.0, duration=2.0),
+        FaultEvent(12.0, "thermal_runaway", node=2, device=3, magnitude=0.4),
+        FaultEvent(22.0, "device_loss", node=2, device=3),
+    ])
+    # a transient hang is not a drain justification
+    assert fm.onset_of_unrecoverable(1) is None
+    assert fm.onset_of_unrecoverable(2) == 12.0
+    assert fm.onset_of_unrecoverable(2, before=10.0) is None
+    assert [e.kind for e in fm.activated_between(4.0, 22.0)] == \
+        ["thermal_runaway", "device_loss"]
+    assert fm.activated_between(4.0, 22.0, nodes=[0, 1]) == []
+    assert len(fm.events_for(2)) == 2
+
+
+def test_random_faults_seeded_and_sorted():
+    a = random_faults(7, n_nodes=3, horizon_s=500.0, rate_per_node_hour=60.0)
+    b = random_faults(7, n_nodes=3, horizon_s=500.0, rate_per_node_hour=60.0)
+    assert a == b
+    assert a != random_faults(8, 3, 500.0, 60.0)
+    assert all(0 <= e.t < 500.0 for e in a)
+    assert [e.t for e in a] == sorted(e.t for e in a)
+    assert all(e.kind in FAULT_KINDS for e in a)
+    assert random_faults(7, 3, 500.0, 0.0) == []
+
+
+# ------------------------------------------------------- injection physics
+def _fleet(faults, n_nodes=2, **cc_kw):
+    wl = small_workload(n_layers=8)
+    return ClusterSim(wl, MI300X_PRESET,
+                      SimConfig(seed=1, comm_gbps=40.0, engine="batched"),
+                      ClusterConfig(n_nodes=n_nodes, straggler_boost=1.0,
+                                    **cc_kw),
+                      devices_per_node=8, seed=5, faults=faults)
+
+
+def test_runaway_slows_its_node():
+    faulted = _fleet(FaultModel([FaultEvent(2.0, "thermal_runaway", node=1,
+                                            device=3, magnitude=0.4)]))
+    healthy = _fleet(None)
+    for _ in range(40):
+        faulted.step()
+        healthy.step()
+    tf = np.asarray(faulted.history[-1]["t_local"], float)
+    th = np.asarray(healthy.history[-1]["t_local"], float)
+    assert tf[1] > 1.1 * th[1]          # runaway node visibly behind
+    assert tf[0] == pytest.approx(th[0], rel=0.05)
+
+
+def test_kernel_hang_multiplies_step_time_then_heals():
+    fm = FaultModel([FaultEvent(2.0, "kernel_hang", node=0, magnitude=3.0,
+                                duration=2.0)])
+    cl = _fleet(fm)
+    base = hung = healed = None
+    for _ in range(30):
+        cl.step()
+        h = cl.history[-1]
+        t0, ts = float(h["t_local"][0]), float(h["t_sim"])
+        if ts < 2.0:
+            base = t0
+        elif fm.hang_multiplier(ts, 0) > 1.0 and hung is None:
+            hung = t0
+        elif ts > 5.0 and healed is None:
+            healed = t0
+    assert base and hung and healed
+    assert hung == pytest.approx(3.0 * base, rel=0.1)
+    assert healed == pytest.approx(base, rel=0.1)
+
+
+def test_sensor_death_masks_only_observation():
+    cl = _fleet(FaultModel([FaultEvent(0.0, "sensor_death", node=1)]))
+    cl.step()
+    h = cl.history[-1]
+    dead = np.asarray(h["sensor_dead"], bool)
+    assert dead[1] and not dead[0]
+    # the simulator itself still runs the node (observers are blind, the
+    # physics is not)
+    assert np.isfinite(h["t_local"]).all()
+
+
+def test_device_loss_reported_once_across_rebuilds():
+    from repro.telemetry import TelemetryCollector
+    fm = FaultModel([FaultEvent(0.1, "device_loss", node=0, device=0)])
+    col = TelemetryCollector(max_samples=50)
+    cl = _fleet(fm)
+    col.attach_cluster(cl)
+    cl.step()
+    assert [e.kind for e in col.events] == ["device_loss"]
+    # a rebuilt fleet sharing the dedup set must not re-report the onset
+    cl2 = _fleet(fm)
+    col.attach_cluster(cl2)
+    cl2._fault_seen = cl._fault_seen
+    cl2.step()
+    assert [e.kind for e in col.events] == ["device_loss"]
+
+
+# --------------------------------------------------------- EscalationPolicy
+def _policy(mode="escalate", **kw):
+    kw.setdefault("patience_s", 4.0)
+    kw.setdefault("sensor_retries", 2)
+    cfg = EscalationConfig(drain_mode=mode, **kw)
+    return EscalationPolicy(cfg, nodes=[0, 1, 2, 3])
+
+
+def _warm(pol, steps=20, dt=0.4):
+    """Feed healthy uniform observations so the watchdogs learn a baseline;
+    returns the advanced simulated clock."""
+    t = 0.0
+    for s in range(steps):
+        t += dt
+        assert pol.observe(s, np.full(4, 0.4), t_sim=t) is None
+    return t
+
+
+def test_policy_config_validation():
+    assert DRAIN_MODES == ("escalate", "immediate", "never")
+    with pytest.raises(ValueError, match="drain_mode"):
+        EscalationConfig(drain_mode="panic").validate()
+    with pytest.raises(ValueError, match="straggle_threshold"):
+        EscalationConfig(straggle_threshold=1.0).validate()
+    with pytest.raises(ValueError, match="patience_s"):
+        EscalationConfig(patience_s=0.0).validate()
+    rt = EscalationConfig.from_dict(EscalationConfig().to_dict())
+    assert rt == EscalationConfig()
+    with pytest.raises(ValueError, match="unknown"):
+        EscalationConfig.from_dict({"straggle_thresold": 2.0})
+
+
+def test_policy_width_and_singleton_guards():
+    pol = _policy()
+    with pytest.raises(ValueError, match="membership"):
+        pol.observe(0, np.ones(3), t_sim=0.4)
+    pol.reset([7])
+    assert pol.observe(0, np.ones(1), t_sim=0.4) is None
+
+
+def test_transient_straggle_rides_out_under_patience():
+    pol = _policy()
+    t = _warm(pol)
+    # 2.4 s of straggling < patience_s=4: suspect fires, no drain
+    for s in range(3):
+        t += 0.8
+        assert pol.observe(20 + s, np.array([0.4, 0.8, 0.4, 0.4]),
+                           t_sim=t) is None
+    assert [e.stage for e in pol.events] == ["suspect"]
+    t += 0.4
+    assert pol.observe(23, np.full(4, 0.4), t_sim=t) is None  # healed
+    assert pol.strikes[1] == 0 and not pol.suspected[1]
+    # a fresh streak later must re-run the whole patience window
+    for s in range(3):
+        t += 0.8
+        assert pol.observe(24 + s, np.array([0.4, 0.8, 0.4, 0.4]),
+                           t_sim=t) is None
+
+
+def test_sustained_straggle_escalates_to_drain():
+    pol = _policy()
+    t = _warm(pol)
+    decision = None
+    for s in range(12):
+        t += 0.8
+        decision = pol.observe(20 + s, np.array([0.4, 0.4, 0.9, 0.4]),
+                               t_sim=t)
+        if decision is not None:
+            break
+    assert decision is not None
+    assert decision.global_node == 2 and decision.reason == "straggle"
+    assert decision.ratio == pytest.approx(0.9 / 0.4)
+    stages = [e.stage for e in pol.events]
+    assert stages == ["suspect", "escalate", "drain"]
+    assert all(s in STAGES for s in stages)
+    # patience honored: the drain came no earlier than patience_s after
+    # the first strike
+    first = next(e for e in pol.events if e.stage == "suspect")
+    drain = next(e for e in pol.events if e.stage == "drain")
+    assert drain.t_sim - first.t_sim >= pol.cfg.patience_s - 0.8 - 1e-9
+
+
+def test_policy_reports_global_node_ids():
+    pol = _policy()
+    pol.reset([0, 2, 3])                 # node 1 already drained
+    t = 0.0
+    for s in range(20):
+        t += 0.4
+        pol.observe(s, np.full(3, 0.4), t_sim=t)
+    for s in range(12):
+        t += 0.8
+        d = pol.observe(20 + s, np.array([0.4, 0.4, 0.9]), t_sim=t)
+        if d is not None:
+            break
+    assert d.node == 2 and d.global_node == 3
+    assert {e.node for e in pol.events} == {3}
+
+
+def test_sensor_retry_then_death_then_drain():
+    pol = _policy()                      # sensor_retries=2
+    t = _warm(pol)
+    # two NaN reads recover: retries absorb them, no event
+    for s in range(2):
+        t += 0.4
+        assert pol.observe(20 + s, np.array([0.4, np.nan, 0.4, 0.4]),
+                           t_sim=t) is None
+    t += 0.4
+    assert pol.observe(22, np.full(4, 0.4), t_sim=t) is None
+    assert pol.events == [] and pol.stale[1] == 0
+    # sustained NaNs: sensor-dead after the retry budget, then a drain
+    # once the streak outlives patience (corroborated by the dead sensor)
+    d = None
+    for s in range(16):
+        t += 0.4
+        d = pol.observe(23 + s, np.array([0.4, np.nan, 0.4, 0.4]), t_sim=t)
+        if d is not None:
+            break
+    assert d is not None and d.reason == "sensor" and d.global_node == 1
+    assert [e.stage for e in pol.events] == ["sensor-dead", "escalate",
+                                             "drain"]
+
+
+def test_immediate_mode_drains_on_first_strike():
+    pol = _policy("immediate")
+    t = _warm(pol)
+    d = pol.observe(20, np.array([0.4, 0.9, 0.4, 0.4]), t_sim=t + 0.9)
+    assert d is not None and d.global_node == 1 and d.strikes == 1
+
+
+def test_never_mode_observes_but_never_drains():
+    pol = _policy("never")
+    t = _warm(pol)
+    for s in range(30):
+        t += 0.9
+        assert pol.observe(20 + s, np.array([0.4, 0.4, 0.9, 0.4]),
+                           t_sim=t) is None
+    assert {e.stage for e in pol.events} == {"suspect", "escalate"}
+
+
+def test_min_nodes_floor_blocks_drain_in_runner():
+    # exercised through run_healing_fleet: a 2-node fleet with min_nodes=2
+    # must ride out an unrecoverable fault
+    from repro.core.escalate import run_healing_fleet
+    wl = small_workload(n_layers=8)
+    rep = run_healing_fleet(
+        wl, MI300X_PRESET,
+        SimConfig(seed=1, comm_gbps=40.0, engine="batched"),
+        ClusterConfig(n_nodes=2, straggler_boost=1.0),
+        iterations=30, seed=5, node_caps_w=700.0,
+        faults=FaultModel([FaultEvent(2.0, "device_loss", node=1,
+                                      device=0)]),
+        escalation=EscalationConfig(min_nodes=2))
+    assert rep.drains == [] and rep.surviving_nodes == 2
+    assert rep.progress == 30
+
+
+# ------------------------------------------- healing run + acceptance order
+@pytest.fixture(scope="module")
+def heal_runs(tmp_path_factory):
+    """The pinned fault-heal scenario in all three drain modes, plus the
+    healing trace recorded to disk."""
+    from repro.api import get_scenario, run_scenario, with_overrides
+    trace_path = str(tmp_path_factory.mktemp("heal") / "trace.jsonl")
+    heal = run_scenario(get_scenario("cluster/fault-heal"),
+                        save_trace_path=trace_path)
+    ignored = run_scenario(get_scenario("cluster/fault-ignored"))
+    immediate = run_scenario(with_overrides(
+        get_scenario("cluster/fault-heal"),
+        {"escalation.drain_mode": "immediate"}))
+    return heal, ignored, immediate, trace_path
+
+
+def test_heal_report_shape(heal_runs):
+    heal, _, _, _ = heal_runs
+    rep = heal.heal
+    assert rep is not None
+    assert rep.progress == 160
+    assert rep.false_drains == 0
+    assert [d["node"] for d in rep.drains] == [2]
+    assert rep.drains[0]["reason"] == "straggle"
+    assert rep.surviving_nodes == 3
+    assert math.isfinite(rep.time_to_detect_s)
+    assert rep.time_to_heal_s == pytest.approx(6.0 + 8.0)
+    assert rep.checkpoints >= 1 and rep.restores == 1
+    assert rep.lost_units > 0                      # the rollback is charged
+    assert rep.goodput == pytest.approx(rep.useful_units / rep.t_total_s)
+    # elastic replan recorded: 3 nodes x 8 devices, TP kept at 8
+    assert rep.drains[0]["mesh"] == [3, 8]
+    assert rep.drains[0]["batch_per_replica"] * 3 >= 64
+    assert rep.drains[0]["batch_padding"] == \
+        rep.drains[0]["batch_per_replica"] * 3 - 64
+
+
+def test_healing_beats_ignoring_and_hair_trigger(heal_runs):
+    """The acceptance ordering: detect+drain+restart must out-goodput both
+    limping behind the dead chip and draining on the first blip."""
+    heal, ignored, immediate, _ = heal_runs
+    g_heal = heal.metrics["goodput"]
+    g_ign = ignored.metrics["goodput"]
+    g_imm = immediate.metrics["goodput"]
+    assert g_heal > g_ign
+    assert g_heal > g_imm
+    # the hang on node 1 must not cost a drain under patience — but the
+    # hair-trigger mode pays for exactly that false drain
+    assert heal.metrics["false_drains"] == 0
+    assert ignored.metrics["n_drains"] == 0
+    assert immediate.metrics["false_drains"] >= 1
+    # every mode committed the same useful work; only time differs
+    assert heal.heal.progress == ignored.heal.progress == 160
+
+
+def test_heal_metrics_surface_in_result(heal_runs):
+    heal, ignored, _, _ = heal_runs
+    for key in ("goodput", "useful_units", "lost_units", "t_total_s",
+                "n_drains", "false_drains", "time_to_detect_s",
+                "time_to_heal_s", "surviving_nodes", "checkpoints",
+                "checkpoint_restores"):
+        assert key in heal.metrics
+    # no-drain run reports the NaN sentinels as -1 (strict-JSON metrics)
+    assert ignored.metrics["time_to_detect_s"] == -1.0
+    payload = json.dumps(heal.to_json_dict(), allow_nan=False)
+    assert json.loads(payload)["metrics"]["goodput"] > 0
+
+
+def test_escalation_trace_replays_bit_for_bit(heal_runs):
+    heal, _, _, trace_path = heal_runs
+    from repro.telemetry import (escalation_replay_matches, load_trace,
+                                 replay_escalation)
+    trace = load_trace(trace_path)
+    assert trace.meta["escalation"]["drain_mode"] == "escalate"
+    rec = [e for e in trace.events if e.source == "escalation"]
+    assert [e.kind for e in rec] == [e.stage for e in heal.heal.events]
+    rp = replay_escalation(trace)
+    assert rp.drained_nodes == [2]
+    log = []
+    assert escalation_replay_matches(trace, rp, log=log), log
+    # a tampered trace must NOT match (the checker has teeth)
+    rec[0].node = 3
+    assert not escalation_replay_matches(trace, rp, log=[])
+
+
+def test_fault_onsets_recorded_in_trace(heal_runs):
+    *_, trace_path = heal_runs
+    from repro.telemetry import load_trace
+    trace = load_trace(trace_path)
+    inj = [e for e in trace.events if e.source == "fault"]
+    assert [e.kind for e in inj] == ["kernel_hang", "thermal_runaway",
+                                    "device_loss"]
+    assert [e.node for e in inj] == [1, 2, 2]
+
+
+# ------------------------------------------------------------ spec round-trip
+def test_fault_scenario_spec_round_trip():
+    from repro.api import EscalationSpec, FaultSpec, get_scenario
+    from repro.api.spec import Scenario
+    sc = get_scenario("cluster/fault-heal")
+    assert isinstance(sc.faults, FaultSpec)
+    assert isinstance(sc.escalation, EscalationSpec)
+    rt = Scenario.from_json(sc.to_json())
+    assert rt.to_dict() == sc.to_dict()
+    # inf duration survives the strict-JSON encoding
+    assert math.isinf(rt.faults.events[1].duration)
+    assert rt.escalation.watchdog.stall_factor == pytest.approx(1.35)
+
+
+def test_fault_spec_validation_requires_fleet():
+    from repro.api import get_scenario
+    sc = get_scenario("cluster/fault-heal").replace(fleet=None, manager=None)
+    with pytest.raises(ValueError):
+        sc.validate()

@@ -106,6 +106,40 @@ def test_checkpoint_async_waits():
         assert cm.latest_step() == 1
 
 
+def test_checkpoint_crash_mid_write_preserves_previous():
+    """A partial ``.tmp-step_*`` from a crashed writer must neither shadow
+    the good checkpoint nor survive the next save."""
+    tree = {"x": jnp.arange(4, dtype=jnp.float32)}
+    with tempfile.TemporaryDirectory() as d:
+        cm = CheckpointManager(d, keep=2, async_write=False)
+        cm.save(10, tree)
+        # simulate a crash mid-save of step 20: tmp dir with partial files
+        stale = os.path.join(d, ".tmp-step_00000020")
+        os.makedirs(stale)
+        with open(os.path.join(stale, "manifest.json"), "w") as f:
+            f.write("{ truncated")
+        assert cm.latest_step() == 10           # LATEST untouched
+        out, man = cm.restore(jax.tree_util.tree_map(jnp.zeros_like, tree))
+        assert man["step"] == 10
+        np.testing.assert_array_equal(np.asarray(out["x"]),
+                                      np.asarray(tree["x"]))
+        cm.save(30, tree)                       # next save sweeps the wreck
+        leftovers = [x for x in os.listdir(d) if x.startswith(".tmp-step_")]
+        assert leftovers == []
+        assert cm.latest_step() == 30
+
+
+def test_checkpoint_latest_pointer_ignores_missing_dir():
+    with tempfile.TemporaryDirectory() as d:
+        cm = CheckpointManager(d, keep=1, async_write=False)
+        assert cm.latest_step() is None
+        with open(os.path.join(d, "LATEST"), "w") as f:
+            f.write("step_00000099")            # dangling pointer
+        assert cm.latest_step() is None
+        with pytest.raises(FileNotFoundError):
+            cm.restore({"x": jnp.zeros(1)})
+
+
 # --------------------------------------------------------------- compression
 @pytest.mark.slow
 @settings(deadline=None, max_examples=40)
@@ -157,3 +191,43 @@ def test_elastic_plan():
     assert p.batch_per_replica() * 15 >= 256
     with pytest.raises(RuntimeError):
         ElasticPlan.after_failure(16, 16, 16, 64)
+
+
+def test_elastic_plan_batch_padding():
+    # 256 does not divide by 15 replicas: round up, report the pad
+    p = ElasticPlan(n_devices=240, model_parallel=16, global_batch=256)
+    assert p.batch_per_replica() == 18             # ceil(256 / 15)
+    assert p.batch_padding() == 18 * 15 - 256
+    # even split: no padding
+    q = ElasticPlan(n_devices=256, model_parallel=16, global_batch=256)
+    assert q.batch_per_replica() == 16 and q.batch_padding() == 0
+
+
+def test_elastic_plan_rejects_non_divisible_tp():
+    with pytest.raises(ValueError, match="TP extent"):
+        ElasticPlan(n_devices=10, model_parallel=4,
+                    global_batch=64).mesh_shape()
+
+
+def test_watchdog_explicit_dt_and_injectable_clock():
+    from repro.train.fault import WatchdogConfig
+    # explicit dt: no wall clock involved, stall at stall_factor x median
+    w = Watchdog(WatchdogConfig(stall_factor=2.0, window=10))
+    for _ in range(5):
+        assert w.end_step(1.0, 1.0, dt=1.0) == "ok"
+    assert w.end_step(1.0, 1.0, dt=2.5) == "stall"
+    assert w.stalls == 1
+    assert w.end_step(1.0, 1.0, dt=1.0) == "ok"
+    # injectable clock: a simulated timeline drives start/end measurement
+    t = {"now": 0.0}
+    w2 = Watchdog(WatchdogConfig(stall_factor=2.0, window=10),
+                  clock=lambda: t["now"])
+    for _ in range(5):
+        w2.start_step()
+        t["now"] += 1.0
+        assert w2.end_step(1.0, 1.0) == "ok"
+    w2.start_step()
+    t["now"] += 10.0
+    assert w2.end_step(1.0, 1.0) == "stall"
+    # a NaN loss on a stalled step still reports the rollback (severity)
+    assert w2.end_step(float("nan"), 1.0, dt=1.0) == "rollback"
