@@ -7,6 +7,8 @@ Prints ``name,us_per_call,derived`` CSV.  Sections:
   * cluster_sweep  — N-node fleet scaling / straggler placement / recovery
   * telemetry      — recording overhead, replay fidelity, detection
                      robustness vs sensor noise
+  * serve          — serving SLO surface under a thermal straggler:
+                     unmanaged vs throughput vs tail-latency objective
 
 Usage:
   python benchmarks/run.py [--smoke] [--only PREFIX]
@@ -36,16 +38,18 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (cluster_sweep, dryrun_summary, kernels_bench,
-                            paper_figs, telemetry_bench)
+                            paper_figs, serve_bench, telemetry_bench)
     sections = [("kernels", kernels_bench.run),
                 ("dryrun", dryrun_summary.run),
                 ("cluster", cluster_sweep.run),
-                ("telemetry", telemetry_bench.run)]
+                ("telemetry", telemetry_bench.run),
+                ("serve", serve_bench.run)]
     sections += [(fn.__name__, fn) for fn in paper_figs.ALL]
     if args.smoke:
         cluster_sweep.SMOKE = True
         telemetry_bench.SMOKE = True
-        fast = {"dryrun", "cluster", "telemetry",
+        serve_bench.SMOKE = True
+        fast = {"dryrun", "cluster", "telemetry", "serve",
                 "fig3_overlap_and_duration",
                 "fig5_thermal_profile", "fig7_lead_waves"}
         sections = [(n, fn) for n, fn in sections if n in fast]

@@ -1,0 +1,84 @@
+"""Serving SLO rows: the ``serve_slo`` family BENCH_serve.json pins.
+
+Runs the registered ``serve/straggler-slo`` scenario (pinned hot-node
+preset) three ways on the same trace and seed — unmanaged, throughput
+objective, tail-latency objective — and reports the SLO surface of each
+plus the gated comparison row:
+
+  * ``serve_slo:p99_gain_vs_throughput`` — fractional p99-TTFT reduction
+    the tail objective buys over the throughput objective (the headline
+    the CI smoke also asserts as a strict ordering);
+  * ``serve_slo:p99_gain_vs_unmanaged`` — same vs no manager at all;
+  * ``serve_slo:ttft_p99_inv`` / ``goodput_rps`` / ``slo_attainment`` /
+    ``tokens_per_s`` — the tail-objective run's own SLO surface, in
+    higher-is-better form (compare.py's gate is one-sided).
+
+Everything is deterministic (seeded trace, seeded sim), so the pinned
+baselines are exact reproductions, with tolerance only as insulation
+against numeric-stack drift.  SMOKE mode runs the identical
+configuration — three 450-round serve runs take ~8 s, well inside the
+CI budget, and trimming rounds would change the pinned values.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+from benchmarks.common import Row
+
+SMOKE = False   # same config either way; the flag exists for symmetry
+
+_SLO_KEYS = ("ttft_p50", "ttft_p99", "tpot_p99", "queue_wait_p99",
+             "goodput_rps", "slo_attainment", "tokens_per_s")
+
+
+def _fmt(metrics, keys=_SLO_KEYS) -> str:
+    return ";".join(f"{k}={metrics[k]:.6g}" for k in keys)
+
+
+def serve_slo_rows() -> List[Row]:
+    from repro.api import get_scenario, run_scenario, with_overrides
+
+    base = get_scenario("serve/straggler-slo")
+    rows: List[Row] = []
+    results = {}
+    for name, sc in (
+            ("serve_slo_unmanaged", with_overrides(base, {"manager": None})),
+            ("serve_slo_throughput", with_overrides(
+                base, {"manager.config.objective": "throughput"})),
+            ("serve_slo_tail", base)):
+        t0 = time.perf_counter()
+        res = run_scenario(sc)
+        dt_us = (time.perf_counter() - t0) * 1e6
+        results[name] = res.metrics
+        rows.append((name, dt_us / base.iterations, _fmt(res.metrics)))
+
+    tail = results["serve_slo_tail"]
+    p_tail = tail["ttft_p99"]
+    p_tput = results["serve_slo_throughput"]["ttft_p99"]
+    p_none = results["serve_slo_unmanaged"]["ttft_p99"]
+    derived = ";".join(
+        f"{k}={v:.6g}" for k, v in (
+            ("p99_gain_vs_throughput", (p_tput - p_tail) / p_tput),
+            ("p99_gain_vs_unmanaged", (p_none - p_tail) / p_none),
+            ("ttft_p99_inv", 1.0 / p_tail),
+            ("goodput_rps", tail["goodput_rps"]),
+            ("slo_attainment", tail["slo_attainment"]),
+            ("tokens_per_s", tail["tokens_per_s"]),
+        ))
+    rows.append(("serve_slo", 0.0, derived))
+
+    # the steady-traffic scenario the CI scenario-smoke step also runs via
+    # `python -m repro run serve/poisson --json` — same registry entry,
+    # same seed, so both gates pin the same deterministic value
+    pois = get_scenario("serve/poisson")
+    t0 = time.perf_counter()
+    res = run_scenario(pois)
+    dt_us = (time.perf_counter() - t0) * 1e6
+    rows.append(("serve_poisson", dt_us / pois.iterations,
+                 _fmt(res.metrics)))
+    return rows
+
+
+def run() -> List[Row]:
+    return serve_slo_rows()

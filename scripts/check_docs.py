@@ -8,7 +8,10 @@ Asserts, against the code (not a hand-maintained list):
   * every `--flag` the sweep and run subcommands accept appears in
     docs/cli.md, so the CLI reference cannot silently rot;
   * every fault kind (`FAULT_KINDS`), escalation stage (`STAGES`) and
-    healing metric the runner reports appears in docs/faults.md.
+    healing metric the runner reports appears in docs/faults.md;
+  * every `serve/*` scenario, every SLO metric name (`SLO_METRICS`),
+    every arrival process and every manager objective appears in
+    docs/serving.md.
 
 Exit 0 when covered, 1 with a per-item listing otherwise — same contract
 as the other scripts/ smokes.
@@ -100,6 +103,30 @@ def main() -> int:
                 missing.append(f"healing metric `{metric}` is not "
                                f"documented in docs/faults.md")
 
+    from repro.core.manager import OBJECTIVES
+    from repro.serve.metrics import SLO_METRICS
+    from repro.serve.traffic import ARRIVAL_PROCESSES
+    serving_text = docs.get("serving.md", "")
+    if not serving_text:
+        missing.append("docs/serving.md does not exist")
+    else:
+        for name, _scope, _desc in list_scenarios():
+            if name.startswith("serve/") and name not in serving_text:
+                missing.append(f"serve scenario {name!r} is not documented "
+                               f"in docs/serving.md")
+        for metric in SLO_METRICS:
+            if f"`{metric}`" not in serving_text:
+                missing.append(f"SLO metric `{metric}` is not documented "
+                               f"in docs/serving.md")
+        for proc in ARRIVAL_PROCESSES:
+            if f"`{proc}`" not in serving_text:
+                missing.append(f"arrival process `{proc}` is not "
+                               f"documented in docs/serving.md")
+        for obj in OBJECTIVES:
+            if f"`{obj}`" not in serving_text:
+                missing.append(f"manager objective `{obj}` is not "
+                               f"documented in docs/serving.md")
+
     if missing:
         print(f"check_docs: {len(missing)} item(s) missing from docs/ "
               f"({len(docs)} file(s) scanned):", file=sys.stderr)
@@ -110,7 +137,8 @@ def main() -> int:
     n_flags = sum(len(v) for v in flags.values())
     print(f"check_docs: ok — {len(list_scenarios())} scenarios, "
           f"{n_cmds} subcommands, {n_flags} flags, "
-          f"{len(FAULT_KINDS)} fault kinds, {len(STAGES)} stages covered "
+          f"{len(FAULT_KINDS)} fault kinds, {len(STAGES)} stages, "
+          f"{len(SLO_METRICS)} SLO metrics covered "
           f"across {len(docs)} docs file(s)")
     return 0
 

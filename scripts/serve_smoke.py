@@ -1,0 +1,100 @@
+"""CI serving-SLO smoke: run the registered ``serve/straggler-slo``
+scenario (pinned hot-node preset, tail-latency power objective), record
+the request-level trace (JSONL artifact), and fail unless
+
+  * the tail-latency objective strictly beats the ``throughput``
+    objective on p99 TTFT — same trace, same seed, same budget: the
+    SLO-aware manager must actually buy tail latency;
+  * both runs also beat the unmanaged fleet (the budget shift pays at
+    all);
+  * every SLO metric in both summaries is finite — the ``-1.0``
+    empty-population sentinel is allowed, NaN never is;
+  * the SLO summary replays bit-for-bit from the recorded trace
+    (``replay_slo`` / ``slo_replay_matches``).
+
+The scenarios are the same registry entries ``benchmarks/serve_bench.py``
+pins in BENCH_serve.json — CI validates one configuration, not two
+drifting copies.
+
+    PYTHONPATH=src python scripts/serve_smoke.py --out DIR
+
+Exit status 0 = ordering + finiteness + replay hold; 1 = a gate failed.
+"""
+import argparse
+import math
+import os
+import sys
+
+_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+from repro.api import get_scenario, run_scenario, with_overrides  # noqa: E402
+from repro.serve.metrics import (replay_slo, slo_replay_matches)  # noqa: E402
+from repro.telemetry import load_trace                            # noqa: E402
+
+
+def _nan_keys(metrics) -> list:
+    return [k for k, v in metrics.items()
+            if isinstance(v, float) and math.isnan(v)]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="serve_smoke",
+                    help="artifact directory (request trace JSONL)")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    jsonl = os.path.join(args.out, "serve_trace.jsonl")
+
+    base = get_scenario("serve/straggler-slo")        # tail-latency objective
+    tail = run_scenario(base, save_trace_path=jsonl)
+    tput = run_scenario(with_overrides(
+        base, {"manager.config.objective": "throughput"}))
+    none = run_scenario(with_overrides(base, {"manager": None}))
+
+    p_tail = tail.metrics["ttft_p99"]
+    p_tput = tput.metrics["ttft_p99"]
+    p_none = none.metrics["ttft_p99"]
+    print(f"p99 TTFT: unmanaged {p_none:.3f}s, throughput-objective "
+          f"{p_tput:.3f}s, tail-latency-objective {p_tail:.3f}s "
+          f"({100 * (p_tput - p_tail) / p_tput:.1f}% gain vs throughput) "
+          f"-> {jsonl}")
+
+    failures = []
+    if not p_tail < p_tput:
+        failures.append(f"SLO-aware management did not pay: tail-objective "
+                        f"p99 TTFT {p_tail:.4f}s >= throughput-objective "
+                        f"{p_tput:.4f}s")
+    if not p_tput < p_none:
+        failures.append(f"power management did not pay at all: managed p99 "
+                        f"TTFT {p_tput:.4f}s >= unmanaged {p_none:.4f}s")
+    for name, res in (("tail", tail), ("throughput", tput),
+                      ("unmanaged", none)):
+        bad = _nan_keys(res.metrics)
+        if bad:
+            failures.append(f"NaN SLO metrics in {name} run: {bad}")
+
+    trace = load_trace(jsonl)
+    rp = replay_slo(trace)
+    live = {k: tail.metrics.get(k) for k in rp}
+    log = []
+    if not slo_replay_matches(live, rp, log=log.append):
+        failures.extend(["SLO replay diverged from the recording:", *log])
+    else:
+        print(f"replay matched recording bit-for-bit: "
+              f"{int(rp['offered'])} requests, "
+              f"{int(rp['completed'])} completed")
+
+    if failures:
+        print("serve_smoke: FAILED", file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        return 1
+    print("serve_smoke: ok")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -14,8 +14,8 @@ from __future__ import annotations
 
 from typing import Callable, Dict, List, Tuple
 
-from repro.api.spec import (ManagerSpec, NodeSpec, Scenario, TelemetrySpec,
-                            WorkloadSpec, grid_variants)
+from repro.api.spec import (ManagerSpec, NodeSpec, Scenario, ServeSpec,
+                            TelemetrySpec, WorkloadSpec, grid_variants)
 from repro.core.c3sim import SimConfig
 from repro.core.cluster import ClusterConfig
 from repro.core.escalate import EscalationConfig
@@ -248,6 +248,88 @@ def cluster_fault_ignored() -> Scenario:
         "the same fault schedule with drain_mode='never': the fleet "
         "limps behind the dead chip — the ablation fault-heal must beat",
         EscalationConfig(drain_mode="never"))
+
+
+# --------------------------------------------------------------------------- #
+# serve/* — inference serving under production traffic
+# --------------------------------------------------------------------------- #
+SERVE_CAP_W = 600.0        # initial per-GPU cap: every node cap-bound, so
+#                            budget reallocation has real frequency authority
+SERVE_BUDGET_W = 20000.0   # cluster budget (625 W/GPU avg): slack above the
+#                            uniform split, below the 4*8*750 TDP sum
+
+
+def _serve_wl() -> WorkloadSpec:
+    # decode-shaped iteration: few layers, modest batch, long context —
+    # one engine step ~0.19 s on a healthy node (probed at seed 5)
+    return WorkloadSpec(arch="llama3.1-8b", n_layers=4, batch=2, seq=4096)
+
+
+def _serve_fleet() -> ClusterConfig:
+    # the pinned hot-node preset: node 0 sits in the air-cooled chassis
+    # (same silicon, worse heat path) with the paper-default per-node
+    # straggler device — at 600 W caps it serves ~6% slower than its
+    # liquid-cooled peers, and stays *cap-bound* (no hard-throttle
+    # spiral), so the fleet manager can actually buy the speed back
+    return ClusterConfig(n_nodes=4, straggler_boost=1.28,
+                         inter_node_gbps=100.0,
+                         node_presets=["mi300x-air", "mi300x",
+                                       "mi300x", "mi300x"])
+
+
+def _serve_mgr(objective: str) -> ManagerSpec:
+    return ManagerSpec(scope="fleet", tune_after=60,
+                       config=FleetManagerConfig(
+                           use_case="gpu-realloc", sampling_period=2,
+                           warmup=2, window_size=2, node_window_size=2,
+                           power_cap=SERVE_CAP_W,
+                           cluster_power_budget=SERVE_BUDGET_W,
+                           objective=objective, tail_quantile=0.95,
+                           tail_window_s=10.0, tail_target_s=2.0))
+
+
+@register
+def serve_poisson() -> Scenario:
+    return Scenario(
+        name="serve/poisson",
+        description="steady Poisson traffic on a 4-node fleet with one "
+                    "air-cooled node: unmanaged baseline showing the "
+                    "per-node TTFT-tail spread a thermal straggler causes",
+        workload=_serve_wl(), sim=_sim(), node=NodeSpec(caps_w=SERVE_CAP_W),
+        fleet=_serve_fleet(),
+        serve=ServeSpec(process="poisson", rate_rps=4.0, horizon_s=45.0),
+        telemetry=TelemetrySpec(), iterations=300, seed=5)
+
+
+@register
+def serve_diurnal() -> Scenario:
+    return Scenario(
+        name="serve/diurnal",
+        description="diurnal traffic (sinusoid-modulated Poisson) sized "
+                    "from the users_m knob: peaks overload the hot node, "
+                    "troughs let it drain — tail inflation concentrates "
+                    "at peak hours",
+        workload=_serve_wl(), sim=_sim(), node=NodeSpec(caps_w=SERVE_CAP_W),
+        fleet=_serve_fleet(),
+        serve=ServeSpec(process="diurnal", users_m=0.045,
+                        user_req_per_day=8.0, diurnal_amp=0.6,
+                        diurnal_period_s=30.0, horizon_s=60.0),
+        telemetry=TelemetrySpec(), iterations=450, seed=5)
+
+
+@register
+def serve_straggler_slo() -> Scenario:
+    return Scenario(
+        name="serve/straggler-slo",
+        description="the SLO benchmark: overloaded hot node inflates p99 "
+                    "TTFT; the fleet manager's tail-latency objective "
+                    "overdrives it past speed parity until the backlog "
+                    "drains (compare objective=throughput on the same "
+                    "seed: it stops at parity and the backlog persists)",
+        workload=_serve_wl(), sim=_sim(), node=NodeSpec(caps_w=SERVE_CAP_W),
+        fleet=_serve_fleet(), manager=_serve_mgr("tail-latency"),
+        serve=ServeSpec(process="poisson", rate_rps=4.8, horizon_s=60.0),
+        telemetry=TelemetrySpec(), iterations=450, seed=5)
 
 
 # --------------------------------------------------------------------------- #

@@ -23,7 +23,9 @@ from repro.core.backends import ClusterSimBackend, SimBackend
 from repro.core.c3sim import IterationTrace, NodeSim
 from repro.core.cluster import ClusterSim
 from repro.core.detect import lead_value_detect, straggler_index
-from repro.core.manager import run_closed_loop, run_fleet_closed_loop
+from repro.core.manager import (FleetPowerManager, run_closed_loop,
+                                run_fleet_closed_loop)
+from repro.serve.engine import ServeReport, ServingFleet
 from repro.telemetry.collector import TelemetryCollector
 from repro.telemetry.replay import detection_report, fleet_lead_report
 from repro.telemetry.sensors import SensorModel
@@ -62,6 +64,9 @@ class BuiltScenario:
     workload: object
     node: Optional[NodeSim] = None          # single-node scenarios
     cluster: Optional[ClusterSim] = None    # fleet scenarios
+    serving: Optional[ServingFleet] = None  # serve scenarios (cluster is
+    #                                         the ServingFleet's embedded
+    #                                         ClusterSim)
     collector: Optional[TelemetryCollector] = None
 
     @property
@@ -87,6 +92,7 @@ class ScenarioResult:
     last_traces: Optional[List[IterationTrace]] = None
     trace_path: Optional[str] = None
     heal: Optional[HealReport] = None       # fault/escalation runs only
+    serve: Optional[ServeReport] = None     # serve/* runs only
 
     def to_json_dict(self) -> dict:
         """JSON-safe summary (the `--json` CLI payload): name, seed,
@@ -134,15 +140,26 @@ def build_scenario(sc: Scenario,
         if collector is not None:
             collector.attach_node(node)
         return BuiltScenario(sc, wl, node=node, collector=collector)
-    cluster = ClusterSim(wl, preset, sc.sim, sc.fleet,
-                         devices_per_node=sc.node.devices, seed=sc.seed)
+    if sc.serve is not None:
+        serving = ServingFleet(wl, preset, sc.sim, sc.fleet, sc.serve,
+                               devices_per_node=sc.node.devices,
+                               seed=sc.seed)
+        cluster = serving.cluster
+    else:
+        serving = None
+        cluster = ClusterSim(wl, preset, sc.sim, sc.fleet,
+                             devices_per_node=sc.node.devices, seed=sc.seed)
     if sc.node.caps_w is not None:
         for n in range(cluster.N):
             cluster.set_node_caps(n, np.full(cluster.G,
                                              float(sc.node.caps_w)))
     if collector is not None:
-        collector.attach_cluster(cluster)
-    return BuiltScenario(sc, wl, cluster=cluster, collector=collector)
+        if serving is not None:
+            serving.attach_collector(collector)
+        else:
+            collector.attach_cluster(cluster)
+    return BuiltScenario(sc, wl, cluster=cluster, serving=serving,
+                         collector=collector)
 
 
 # --------------------------------------------------------------------------- #
@@ -205,6 +222,9 @@ def _run_node(sc: Scenario, built: BuiltScenario, iters: int,
 
 def _run_fleet(sc: Scenario, built: BuiltScenario, iters: int,
                result: ScenarioResult) -> None:
+    if sc.serve is not None:
+        _run_serve(sc, built, iters, result)
+        return
     if sc.faults is not None or sc.escalation is not None:
         _run_healing(sc, built, iters, result)
         return
@@ -218,6 +238,24 @@ def _run_fleet(sc: Scenario, built: BuiltScenario, iters: int,
     else:
         for _ in range(iters):
             result.last_traces = cluster.step()
+
+
+def _run_serve(sc: Scenario, built: BuiltScenario, iters: int,
+               result: ScenarioResult) -> None:
+    """Serve scenarios drive the `ServingFleet` loop: ``iterations`` are
+    engine rounds, the manager (if any) is the hierarchical fleet
+    controller fed through its serving hook from ``tune_after`` on."""
+    fleet = built.serving
+    mgr = None
+    tune_after = None
+    if sc.manager is not None:
+        mgr = FleetPowerManager(ClusterSimBackend(fleet.cluster),
+                                sc.manager.config,
+                                collector=built.collector)
+        tune_after = sc.manager.tune_after
+    rep = fleet.run(iters, manager=mgr, tune_after=tune_after)
+    result.serve = rep
+    result.manager = mgr
 
 
 def _run_healing(sc: Scenario, built: BuiltScenario, iters: int,
@@ -285,6 +323,18 @@ def _metrics(sc: Scenario, iters: int, r: ScenarioResult) -> Dict[str, float]:
             caps = mgr.backend.get_power_caps()
             m["cap_spread_w"] = float(caps.max() - caps.min())
             m["n_cap_adjustments"] = len(mgr.adjust_log)
+    elif r.serve is not None:
+        # the SLO summary is already flat, JSON-safe and NaN-free (the
+        # -1.0 sentinel stands in for undefined quantiles)
+        m.update({k: _num(v) for k, v in r.serve.summary.items()})
+        m["t_fleet_s"] = _num(r.serve.t_fleet_s)
+        m["n_generated"] = float(r.serve.n_generated)
+        mgr = r.manager
+        if mgr is not None:
+            m["node0_budget_w"] = float(mgr.node_budgets[0])
+            m["budget_spread_w"] = float(mgr.node_budgets.max()
+                                         - mgr.node_budgets.min())
+            m["n_budget_adjustments"] = len(mgr.budget_log)
     else:
         cl = r.cluster
         m["fleet_tput"] = cl.fleet_throughput(last=last)

@@ -39,6 +39,7 @@ from repro.core.faults import FaultEvent, FaultModel
 from repro.core.manager import FleetManagerConfig, ManagerConfig
 from repro.core.thermal import PRESETS, ChurnEvent, ChurnModel, DevicePreset
 from repro.core.workload import Workload, fsdp_llm_iteration
+from repro.serve.traffic import ARRIVAL_PROCESSES
 from repro.telemetry.sensors import SensorConfig
 from repro.train.fault import WatchdogConfig
 
@@ -53,7 +54,7 @@ EscalationSpec = EscalationConfig
 
 __all__ = [
     "SPEC_FORMAT", "SPEC_VERSION", "WorkloadSpec", "NodeSpec", "ManagerSpec",
-    "TelemetrySpec", "FaultSpec", "EscalationSpec", "Scenario",
+    "TelemetrySpec", "FaultSpec", "EscalationSpec", "ServeSpec", "Scenario",
     "scenario_from_dict", "with_overrides",
 ]
 
@@ -147,6 +148,70 @@ class TelemetrySpec:
 
 
 @dataclass
+class ServeSpec:
+    """Production-traffic serving on top of a fleet (serve/* scenarios).
+
+    Arrival process + scale, request shape distributions, continuous-
+    batching geometry, and the SLO deadlines the goodput metrics are
+    scored against — the `ServingFleet` / `generate_requests` inputs
+    (docs/serving.md)."""
+
+    # ------------------------------------------------------ arrival process
+    process: str = "poisson"            # poisson | diurnal
+    rate_rps: float = 8.0               # mean arrival rate (fleet-wide)
+    users_m: float = 0.0                # millions of users; > 0 overrides
+    #                                     rate_rps via user_req_per_day
+    user_req_per_day: float = 8.0       # requests per user per day
+    horizon_s: float = 20.0             # arrivals stop here (sim s)
+    max_requests: int = 4096            # hard cap on generated requests
+    diurnal_amp: float = 0.6            # peak/trough swing (0 <= amp < 1)
+    diurnal_period_s: float = 30.0      # "a day", compressed
+    # ------------------------------------------------------- request shapes
+    prompt_mean: float = 512.0          # lognormal mean prompt tokens
+    prompt_sigma: float = 0.8
+    prompt_max: int = 4096
+    output_mean: float = 64.0           # lognormal mean output tokens
+    output_sigma: float = 0.6
+    output_max: int = 512
+    # ------------------------------------------------- continuous batching
+    batch_slots: int = 16               # static batch slots per node
+    prefill_chunk: int = 512            # prompt tokens prefilled per step
+    # ------------------------------------------------------- SLO deadlines
+    ttft_deadline_s: float = 2.0        # goodput: first token within this
+    tpot_deadline_s: float = 0.25       # and per-token latency within this
+
+    def arrival_rate(self) -> float:
+        """Effective mean rate (req/s): the millions-of-users knob wins
+        when set, spread uniformly over a day."""
+        if self.users_m > 0:
+            return self.users_m * 1e6 * self.user_req_per_day / 86400.0
+        return self.rate_rps
+
+    def validate(self) -> None:
+        if self.process not in ARRIVAL_PROCESSES:
+            raise ValueError(f"serve.process must be one of "
+                             f"{ARRIVAL_PROCESSES}, got {self.process!r}")
+        if self.arrival_rate() <= 0:
+            raise ValueError("serve arrival rate must be > 0 (set rate_rps "
+                             "or users_m)")
+        if not 0 <= self.diurnal_amp < 1:
+            raise ValueError(f"serve.diurnal_amp must be in [0, 1), got "
+                             f"{self.diurnal_amp}")
+        if self.horizon_s <= 0 or self.max_requests < 1:
+            raise ValueError("serve.horizon_s must be > 0 and "
+                             "serve.max_requests >= 1")
+        if self.batch_slots < 1 or self.prefill_chunk < 1:
+            raise ValueError("serve.batch_slots and serve.prefill_chunk "
+                             "must be >= 1")
+        if self.ttft_deadline_s <= 0 or self.tpot_deadline_s <= 0:
+            raise ValueError("serve SLO deadlines must be > 0")
+        for nm in ("prompt_mean", "prompt_sigma", "prompt_max",
+                   "output_mean", "output_sigma", "output_max"):
+            if getattr(self, nm) <= 0:
+                raise ValueError(f"serve.{nm} must be > 0")
+
+
+@dataclass
 class Scenario:
     """One reproducible experiment, end to end."""
 
@@ -160,6 +225,7 @@ class Scenario:
     telemetry: Optional[TelemetrySpec] = None  # None: no recording
     faults: Optional[FaultModel] = None        # None: no injected faults
     escalation: Optional[EscalationConfig] = None  # None: no drain policy
+    serve: Optional[ServeSpec] = None          # None: training-shaped run
     iterations: int = 60
     seed: int = 5                       # NodeSim / ClusterSim thermal seed
 
@@ -179,6 +245,21 @@ class Scenario:
             if self.fleet is None:
                 raise ValueError("escalation requires a fleet spec")
             self.escalation.validate()
+        if self.serve is not None:
+            if self.fleet is None:
+                raise ValueError("serve requires a fleet spec (requests "
+                                 "are routed across cluster replicas)")
+            if self.faults is not None or self.escalation is not None:
+                raise ValueError("serve scenarios do not support "
+                                 "faults/escalation (the healing loop is "
+                                 "training-shaped)")
+            self.serve.validate()
+        if (self.manager is not None
+                and getattr(self.manager.config, "objective", "throughput")
+                == "tail-latency" and self.serve is None):
+            raise ValueError("manager objective 'tail-latency' needs a "
+                             "serve spec (the tail signal comes from the "
+                             "serving engine)")
         if self.iterations < 1:
             raise ValueError("iterations must be >= 1")
         return self
@@ -282,7 +363,7 @@ _NESTED: Dict[type, Dict[str, type]] = {
     Scenario: {"workload": WorkloadSpec, "sim": SimConfig, "node": NodeSpec,
                "fleet": ClusterConfig, "manager": ManagerSpec,
                "telemetry": TelemetrySpec, "faults": FaultModel,
-               "escalation": EscalationConfig},
+               "escalation": EscalationConfig, "serve": ServeSpec},
     ManagerSpec: {"sensor": SensorConfig},
     TelemetrySpec: {"sensor": SensorConfig},
     EscalationConfig: {"watchdog": WatchdogConfig},

@@ -169,6 +169,9 @@ class PowerManager:
         self.enabled = False               # one-time profiling cost amortized
 
 
+OBJECTIVES = ("throughput", "tail-latency")
+
+
 @dataclass
 class FleetManagerConfig(ManagerConfig):
     """Cluster-level knobs on top of the Table II node knobs."""
@@ -178,6 +181,25 @@ class FleetManagerConfig(ManagerConfig):
     node_window_size: int = 3          # fleet samples per node adjustment
     max_node_adjustment: float = 60.0  # W of node-budget shift per step
     node_scale: str = "global"         # damping for the node-level Alg. 2
+    # ------------------------------------------------- serving objective
+    objective: str = "throughput"      # "throughput": lead = barrier wait /
+    #                                    topology signal (the paper's
+    #                                    objective — equalize node speed);
+    #                                    "tail-latency": lead from the
+    #                                    serving tail signal, so budget
+    #                                    chases the node dominating p99
+    #                                    TTFT (serve/* scenarios only)
+    tail_quantile: float = 0.95        # quantile of the recent-TTFT window
+    tail_window_s: float = 10.0        # s of completed TTFTs per node in the
+    #                                    window (time-based: count-based
+    #                                    windows go stale at low per-node
+    #                                    completion rates and chase ghosts)
+    tail_target_s: float = 0.0         # act only while the worst node's
+    #                                    tail signal exceeds this (0: always
+    #                                    act); scenarios set it to the TTFT
+    #                                    deadline so a healthy fleet keeps
+    #                                    its allocation instead of chasing
+    #                                    sub-deadline quantile noise
 
 
 class FleetPowerManager:
@@ -207,6 +229,9 @@ class FleetPowerManager:
         if not hasattr(backend, "node_views"):
             raise TypeError("FleetPowerManager needs a cluster backend "
                             "exposing per-node views (ClusterSimBackend)")
+        if cfg.objective not in OBJECTIVES:
+            raise ValueError(f"unknown objective {cfg.objective!r} "
+                             f"(expected one of {OBJECTIVES})")
         self.backend = backend
         self.cfg = cfg
         self.collector = collector
@@ -252,6 +277,48 @@ class FleetPowerManager:
         if lead is None:       # non-topology backend: barrier-wait fallback
             t_local = np.array([tr.t_iter for tr in traces])
             lead = t_local.max() - t_local
+        self.samples_seen += 1
+        if self.samples_seen <= self.cfg.warmup:
+            return
+        self.lead_window.append(np.asarray(lead, float))
+        if len(self.lead_window) < self.cfg.node_window_size:
+            return
+        lead_avg = np.mean(self.lead_window, axis=0)
+        self.lead_window.clear()
+        self._adjust_from_lead(lead_avg)
+
+    def on_serve_iteration(self, iteration: int,
+                           traces: Optional[List[IterationTrace]],
+                           tail_signal=None) -> None:
+        """Serving-loop hook (`ServingFleet.run`): same cadence and nested
+        per-node Algorithm-1 loops as `on_iteration`, but the node-level
+        lead comes from the configured *objective*:
+
+          * ``"throughput"`` — barrier-wait over local iteration times
+            (max(t) - t), the paper's equalize-node-speed signal;
+          * ``"tail-latency"`` — the serving tail signal (per-node recent
+            p99 TTFT / head-of-line age, computed by the serving engine):
+            the node *dominating the latency tail* leads by ~0 and
+            receives the budget, even past the point of speed equality —
+            a backlogged node must run faster than its peers to drain.
+        """
+        if traces is None:
+            return
+        self._last_iteration = iteration
+        for mgr, tr in zip(self.managers, traces):
+            mgr.on_iteration(iteration, tr)
+        if iteration % self.cfg.sampling_period:
+            return
+        if self.cfg.objective == "tail-latency" and tail_signal is not None:
+            sig = np.asarray(tail_signal, float)
+            if sig.max() < self.cfg.tail_target_s:
+                # tails within target fleet-wide: hold the allocation
+                # rather than chase quantile noise between healthy nodes
+                self.lead_window.clear()
+                return
+        else:
+            sig = np.array([tr.t_iter for tr in traces])
+        lead = sig.max() - sig
         self.samples_seen += 1
         if self.samples_seen <= self.cfg.warmup:
             return
@@ -308,6 +375,18 @@ class FleetPowerManager:
             total = headroom.sum()
             if total > 0:
                 budgets -= headroom * min(1.0, excess / total)
+        # ... and the TDP clip can strand watts *below* it: a straggler
+        # pinned at its silicon bound keeps requesting budget the clip
+        # discards while the uniform shift already took it from the other
+        # nodes, bleeding total budget every cycle.  Hand the shortfall
+        # back to nodes with headroom so the projection lands on the
+        # budget simplex, not under it.
+        deficit = self.cluster_budget - budgets.sum()
+        if deficit > 0:
+            headroom = self.G * self.node_tdps - budgets
+            total = headroom.sum()
+            if total > 0:
+                budgets += headroom * min(1.0, deficit / total)
         self.node_budgets = budgets
         self.budget_log.append(budgets.copy())
         if self.collector is not None:

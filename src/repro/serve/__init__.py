@@ -1,3 +1,30 @@
-from repro.serve.decode import ServeConfig, ServingLoop, generate
+"""Serving on C3Sim: request traces, continuous batching, SLO metrics.
 
-__all__ = ["ServeConfig", "ServingLoop", "generate"]
+The jax-backed decode loop (`ServeConfig`, `ServingLoop`, `generate`) is
+imported lazily so the pure-numpy serving scenario stack (traffic /
+batcher / metrics / engine — everything `python -m repro run serve/...`
+touches) never pays the jax import.
+"""
+from repro.serve.batcher import BatchSlot, ContinuousBatcher
+from repro.serve.engine import ServeReport, ServingFleet
+from repro.serve.metrics import (SLO_METRICS, replay_slo, slo_replay_matches,
+                                 slo_summary)
+from repro.serve.traffic import (ARRIVAL_PROCESSES, Request, RequestTrace,
+                                 generate_requests)
+
+__all__ = [
+    "ARRIVAL_PROCESSES", "Request", "RequestTrace", "generate_requests",
+    "BatchSlot", "ContinuousBatcher",
+    "SLO_METRICS", "slo_summary", "replay_slo", "slo_replay_matches",
+    "ServingFleet", "ServeReport",
+    "ServeConfig", "ServingLoop", "generate",
+]
+
+_DECODE_EXPORTS = {"ServeConfig", "ServingLoop", "generate", "sample_token"}
+
+
+def __getattr__(name):
+    if name in _DECODE_EXPORTS:
+        from repro.serve import decode
+        return getattr(decode, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,159 @@
+"""Continuous batching over C3Sim kernel windows.
+
+The mapping onto the simulator (docs/serving.md): one engine step of a
+node is one full C3 iteration — a static-shape fused serving iteration,
+exactly the shape discipline the seed ``ServingLoop`` enforces (fixed
+batch, padded slots).  What the batcher decides is *which requests ride
+each iteration*:
+
+  * **prefill** — an admitted request's prompt is chewed through in
+    ``prefill_chunk``-token chunks, one chunk per engine step (the
+    compute-heavy window); the step that consumes the final chunk also
+    produces the first output token (TTFT stops here);
+  * **decode** — every slot past prefill emits exactly one token per
+    engine step (the short latency-bound iteration);
+  * **slot recycling** — a request completing its ``output_len`` frees
+    its slot at the end of the step; free slots refill FIFO from the
+    node's queue at the *start* of the next step.
+
+So a thermally throttled node doesn't drop work — its engine steps
+simply take longer, every slot's tokens arrive later, the queue backs up,
+and the backlog compounds into TTFT tail inflation.  That is the Lit
+Silicon serving effect the SLO metrics measure.
+"""
+from __future__ import annotations
+
+import math
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, List, Optional
+
+from repro.serve.traffic import Request
+from repro.telemetry.collector import RequestRecord
+
+__all__ = ["BatchSlot", "ContinuousBatcher"]
+
+NAN = float("nan")
+
+
+@dataclass
+class BatchSlot:
+    """One occupied batch slot: a request plus its serving progress."""
+
+    req: Request
+    t_admit: float
+    prefill_done: int = 0           # prompt tokens already prefetched
+    tokens_out: int = 0             # output tokens produced
+    t_first: float = NAN            # set when prefill completes
+
+    @property
+    def in_prefill(self) -> bool:
+        return self.prefill_done < self.req.prompt_len
+
+
+@dataclass
+class ContinuousBatcher:
+    """Fixed-capacity slot pool + FIFO queue for one serving node."""
+
+    slots: int
+    prefill_chunk: int
+    node: int = 0
+    queue: Deque[Request] = field(default_factory=deque)
+    active: List[Optional[BatchSlot]] = field(init=False)
+
+    def __post_init__(self):
+        if self.slots < 1:
+            raise ValueError(f"batch_slots must be >= 1, got {self.slots}")
+        if self.prefill_chunk < 1:
+            raise ValueError(f"prefill_chunk must be >= 1, "
+                             f"got {self.prefill_chunk}")
+        self.active = [None] * self.slots
+        self.first_token_events = []
+
+    # ------------------------------------------------------------- accessors
+    @property
+    def n_active(self) -> int:
+        return sum(s is not None for s in self.active)
+
+    @property
+    def n_queued(self) -> int:
+        return len(self.queue)
+
+    def oldest_unserved_age(self, now: float) -> float:
+        """Age of the oldest request still waiting for its first token
+        (queued, or admitted but mid-prefill) — the head-of-line half of
+        the tail-latency manager signal: it grows even while nothing
+        completes, so a backlogged node is visible immediately."""
+        oldest = math.inf
+        for r in self.queue:
+            oldest = min(oldest, r.t_arrival)
+        for s in self.active:
+            if s is not None and s.t_first != s.t_first:
+                oldest = min(oldest, s.req.t_arrival)
+        return 0.0 if oldest is math.inf else max(0.0, now - oldest)
+
+    # ------------------------------------------------------------- lifecycle
+    def enqueue(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def admit(self, now: float) -> int:
+        """Refill free slots FIFO from the queue; returns admissions."""
+        n = 0
+        for i, s in enumerate(self.active):
+            if s is None and self.queue:
+                self.active[i] = BatchSlot(self.queue.popleft(), t_admit=now)
+                n += 1
+        return n
+
+    def step(self, t_end: float) -> List[RequestRecord]:
+        """Advance every occupied slot through one engine step ending at
+        ``t_end`` (the node's clock after this C3 iteration); returns the
+        records of requests that completed during the step.  First-token
+        events land in ``first_token_events`` as ``(t_first, ttft)`` pairs
+        the serving engine drains into its tail-signal window (TTFT is
+        observable at first-token time, well before completion)."""
+        done: List[RequestRecord] = []
+        for i, s in enumerate(self.active):
+            if s is None:
+                continue
+            if s.in_prefill:
+                s.prefill_done += self.prefill_chunk
+                if not s.in_prefill:            # final chunk → first token
+                    s.t_first = t_end
+                    s.tokens_out = 1
+                    self.first_token_events.append(
+                        (t_end, t_end - s.req.t_arrival))
+            else:
+                s.tokens_out += 1
+            if s.tokens_out >= s.req.output_len:
+                done.append(RequestRecord(
+                    rid=s.req.rid, node=self.node,
+                    t_arrival=s.req.t_arrival, t_admit=s.t_admit,
+                    t_first=s.t_first, t_done=t_end,
+                    prompt_len=s.req.prompt_len,
+                    output_len=s.req.output_len, tokens_out=s.tokens_out))
+                self.active[i] = None
+        return done
+
+    def flush(self) -> List[RequestRecord]:
+        """Drain every unfinished request (occupied slots, then the queue)
+        as incomplete records — NaN where the milestone never happened —
+        so a trace carries the full offered population."""
+        out: List[RequestRecord] = []
+        for i, s in enumerate(self.active):
+            if s is None:
+                continue
+            out.append(RequestRecord(
+                rid=s.req.rid, node=self.node, t_arrival=s.req.t_arrival,
+                t_admit=s.t_admit, t_first=s.t_first, t_done=NAN,
+                prompt_len=s.req.prompt_len, output_len=s.req.output_len,
+                tokens_out=s.tokens_out))
+            self.active[i] = None
+        while self.queue:
+            r = self.queue.popleft()
+            out.append(RequestRecord(
+                rid=r.rid, node=self.node, t_arrival=r.t_arrival,
+                t_admit=NAN, t_first=NAN, t_done=NAN,
+                prompt_len=r.prompt_len, output_len=r.output_len,
+                tokens_out=0))
+        return out

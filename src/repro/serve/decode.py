@@ -61,13 +61,28 @@ class ServingLoop:
         self.cfg = cfg or ServeConfig()
         self._prefill = jax.jit(model.prefill)
         self._decode = jax.jit(model.decode_step)
+        # reusable padded input: serve() writes each request batch into
+        # this preallocated (B, S) buffer instead of allocating a fresh
+        # pad block + concatenation per call
+        self._pad_buf = np.zeros((self.B, self.S), np.int32)
 
     def serve(self, prompts: np.ndarray) -> np.ndarray:
         """prompts: (n, S) int32, n <= batch_size.  Pads to B, returns (n, T)."""
+        prompts = np.asarray(prompts)
+        if prompts.ndim != 2 or prompts.shape[1] != self.S:
+            raise ValueError(
+                f"prompts must have shape (n, {self.S}) — static shapes: "
+                f"pad/truncate ragged prompts before serving; got "
+                f"{prompts.shape}")
         n = prompts.shape[0]
-        assert prompts.shape[1] == self.S and n <= self.B
-        pad = np.zeros((self.B - n, self.S), np.int32)
-        batch = {"tokens": jnp.asarray(np.concatenate([prompts, pad], 0))}
+        if n > self.B:
+            raise ValueError(
+                f"batch of {n} prompts exceeds batch_size={self.B}; split "
+                f"the batch or raise batch_size (got {prompts.shape})")
+        buf = self._pad_buf
+        buf[:n] = prompts
+        buf[n:] = 0
+        batch = {"tokens": jnp.asarray(buf)}
         toks = generate(self.model, self.params, batch, self.cfg,
                         self._prefill, self._decode)
         return toks[:n]

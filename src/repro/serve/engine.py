@@ -1,0 +1,191 @@
+"""ServingFleet: continuous batching on top of the cluster simulator.
+
+Composition (docs/serving.md): an embedded :class:`ClusterSim` provides N
+thermally-independent `NodeSim`s (presets, hot devices, churn — the same
+construction every training scenario uses), but the serving loop replaces
+the training step's *global barrier* with **asynchronous per-node clocks**:
+inference replicas don't all-reduce, so each node advances by its own
+``t_iter`` and commits thermals over exactly that interval.  A thermal
+straggler therefore doesn't stretch its peers — it falls behind its own
+queue, which is the serving-shaped Lit Silicon coupling: heat → DVFS
+throttle → longer engine steps → backlog → TTFT tail inflation.
+
+Per engine round, per node:
+
+  1. arrivals with ``t_arrival <= clock`` are routed (static round-robin
+     by request id) into the node's `ContinuousBatcher` queue, and free
+     slots are refilled FIFO;
+  2. the node runs one C3 iteration (vector/jax engines batch all nodes
+     into one pass, exactly as `ClusterSim` does);
+  3. the batcher advances every slot one step (prefill chunk or one
+     decode token), completions are recorded, and the node commits
+     thermals over its own ``t_iter``;
+  4. the per-node *tail signal* is refreshed: max(recent-TTFT quantile,
+     head-of-line first-token age) — what the ``tail-latency`` manager
+     objective consumes via ``FleetPowerManager.on_serve_iteration``.
+
+Determinism: the request trace is generated up front from ``[seed, k]``
+child seeds (traffic.py) and never touches the simulator RNG streams, so
+a serve run is reproducible per engine exactly like a training run.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.cluster import ClusterConfig, ClusterSim
+from repro.core.c3sim import SimConfig
+from repro.core.thermal import DevicePreset
+from repro.core.workload import Workload
+from repro.serve.batcher import ContinuousBatcher
+from repro.serve.metrics import slo_summary
+from repro.serve.traffic import RequestTrace, generate_requests
+from repro.telemetry.collector import RequestRecord
+
+__all__ = ["ServingFleet", "ServeReport"]
+
+
+@dataclass
+class ServeReport:
+    """What a serving run hands back: the full request population (the
+    offered set, completed + flushed-incomplete), the SLO summary, and
+    the per-node clocks the rates were normalized by."""
+
+    records: List[RequestRecord] = field(default_factory=list)
+    summary: Dict[str, float] = field(default_factory=dict)
+    clocks: Optional[np.ndarray] = None     # (N,) final node clocks (s)
+    t_fleet_s: float = 0.0                  # mean final clock
+    rounds: int = 0
+    n_generated: int = 0                    # trace length (incl. unarrived)
+    round_history: List[dict] = field(default_factory=list)
+
+
+class ServingFleet:
+    """N serving replicas with continuous batching over C3Sim nodes."""
+
+    def __init__(self, workload: Workload, preset: DevicePreset,
+                 sim_cfg: SimConfig, cluster_cfg: ClusterConfig,
+                 serve_spec, devices_per_node: int = 8, seed: int = 0):
+        self.cluster = ClusterSim(workload, preset, sim_cfg, cluster_cfg,
+                                  devices_per_node=devices_per_node,
+                                  seed=seed)
+        self.spec = serve_spec
+        self.N = self.cluster.N
+        self.trace: RequestTrace = generate_requests(serve_spec, seed)
+        self.batchers = [ContinuousBatcher(slots=serve_spec.batch_slots,
+                                           prefill_chunk=serve_spec.prefill_chunk,
+                                           node=n) for n in range(self.N)]
+        # static round-robin router: request k serves on node k mod N —
+        # deterministic and fleet-size-independent per request id
+        self._pending: List[deque] = [deque() for _ in range(self.N)]
+        for r in self.trace.requests:
+            self._pending[r.rid % self.N].append(r)
+        self.clock = np.zeros(self.N)
+        self.records: List[RequestRecord] = []
+        self.collector = None
+
+    # ------------------------------------------------------------- plumbing
+    def attach_collector(self, collector) -> None:
+        """Attach telemetry: per-node commit hooks + fleet meta (the
+        cluster's ``step`` is never called, so no fleet rows appear —
+        serve traces carry node + request records)."""
+        collector.attach_cluster(self.cluster)
+        self.collector = collector
+
+    def _tail_signal(self, ttft_windows: List[deque], quantile: float,
+                     window_s: float) -> np.ndarray:
+        """Per-node tail signal: the larger of the recent completed-TTFT
+        quantile and the head-of-line first-token age.  The quantile sees
+        inflation that already happened; the head age sees a backlog that
+        hasn't produced (slow) completions *yet* — together the signal
+        rises as soon as a node falls behind and stays up until its queue
+        actually drains.  The window is *time*-based (first tokens within
+        the node's last ``window_s`` seconds): a count-based window goes
+        stale at low per-node completion rates and makes the controller
+        chase tails that drained long ago."""
+        sig = np.zeros(self.N)
+        for n in range(self.N):
+            w = ttft_windows[n]
+            cutoff = self.clock[n] - window_s
+            while w and w[0][0] < cutoff:
+                w.popleft()
+            q = (float(np.quantile([t for _, t in w], quantile))
+                 if w else 0.0)
+            sig[n] = max(q, self.batchers[n].oldest_unserved_age(
+                self.clock[n]))
+        return sig
+
+    # ------------------------------------------------------------------ run
+    def run(self, rounds: int, manager=None,
+            tune_after: Optional[int] = None) -> ServeReport:
+        """Drive ``rounds`` engine rounds; with a `FleetPowerManager`,
+        enable it from ``tune_after`` (default: halfway, the same
+        convention as the training closed loop)."""
+        tune_after = rounds // 2 if tune_after is None else tune_after
+        tq, tw_s = 0.95, 10.0
+        if manager is not None:
+            tq = getattr(manager.cfg, "tail_quantile", tq)
+            tw_s = getattr(manager.cfg, "tail_window_s", tw_s)
+        ttft_windows = [deque() for _ in range(self.N)]
+        rep = ServeReport(rounds=rounds, n_generated=len(self.trace))
+        for r in range(rounds):
+            for n in range(self.N):
+                pend, b = self._pending[n], self.batchers[n]
+                while pend and pend[0].t_arrival <= self.clock[n]:
+                    b.enqueue(pend.popleft())
+                b.admit(self.clock[n])
+            traces = self.cluster._run_nodes()
+            for n, (node, tr) in enumerate(zip(self.cluster.nodes, traces)):
+                t_end = float(self.clock[n] + tr.t_iter)
+                b = self.batchers[n]
+                for rec in b.step(t_end):
+                    self.records.append(rec)
+                    if self.collector is not None:
+                        self.collector.on_request(rec)
+                ttft_windows[n].extend(b.first_token_events)
+                b.first_token_events.clear()
+                # async replicas: commit over the node's own interval —
+                # no barrier stretching, no active wait
+                node.commit(tr, t_interval=tr.t_iter)
+                self.clock[n] = t_end
+            sig = self._tail_signal(ttft_windows, tq, tw_s)
+            if manager is not None and r >= tune_after:
+                manager.on_serve_iteration(r, traces, tail_signal=sig)
+            rep.round_history.append({
+                "round": r,
+                "t_local": [float(tr.t_iter) for tr in traces],
+                "clock": self.clock.copy(),
+                "active": [b.n_active for b in self.batchers],
+                "queued": [b.n_queued for b in self.batchers],
+                "tail_signal": sig,
+            })
+        # flush unfinished work so the records are the full offered set
+        for b in self.batchers:
+            for rec in b.flush():
+                self.records.append(rec)
+                if self.collector is not None:
+                    self.collector.on_request(rec)
+        rep.records = list(self.records)
+        rep.clocks = self.clock.copy()
+        rep.t_fleet_s = float(self.clock.mean())
+        rep.summary = slo_summary(
+            rep.records, ttft_deadline_s=self.spec.ttft_deadline_s,
+            tpot_deadline_s=self.spec.tpot_deadline_s,
+            t_elapsed_s=rep.t_fleet_s, n_nodes=self.N)
+        if self.collector is not None:
+            # everything replay_slo needs to recompute the summary offline
+            self.collector.meta["serve"] = {
+                "process": self.spec.process,
+                "rate_rps": self.trace.rate_rps,
+                "horizon_s": self.spec.horizon_s,
+                "ttft_deadline_s": self.spec.ttft_deadline_s,
+                "tpot_deadline_s": self.spec.tpot_deadline_s,
+                "t_fleet_s": rep.t_fleet_s,
+                "n_nodes": self.N,
+                "batch_slots": self.spec.batch_slots,
+                "prefill_chunk": self.spec.prefill_chunk,
+            }
+        return rep

@@ -1,0 +1,127 @@
+"""SLO metrics over request records: tails, goodput, offline replay.
+
+``slo_summary`` condenses a population of :class:`RequestRecord` rows into
+the serving SLO surface (definitions in docs/serving.md):
+
+  * ``ttft_p50`` / ``ttft_p99``        — time-to-first-token quantiles (s)
+  * ``tpot_p50`` / ``tpot_p99``        — per-output-token latency quantiles
+  * ``queue_wait_p99``                 — admission-wait tail (s)
+  * ``goodput_rps``                    — requests completed *within both
+    deadlines* per simulated second (goodput-under-deadline)
+  * ``slo_attainment``                 — fraction of the offered population
+    meeting both deadlines
+  * ``tokens_per_s``                   — decoded tokens per simulated second
+
+plus per-node ``ttft_p99_node{n}`` columns and their max/spread, so a
+thermal straggler shows up as *which node's* tail inflated.
+
+Every value is NaN-free by construction: quantiles over an empty
+population report the ``-1.0`` sentinel (the runner's ``_num``
+convention), never NaN — the CI smoke asserts this.
+
+``replay_slo`` recomputes the same summary offline from a saved JSONL
+trace (``request`` lines + the ``meta["serve"]`` block).  Floats survive
+the JSONL round trip exactly (shortest-repr doubles, NaN as null), and the
+replay runs the identical arithmetic on the identical population, so live
+and replayed summaries match bit-for-bit — tested, and checked by
+scripts/serve_smoke.py in CI.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, List, Optional
+
+import numpy as np
+
+from repro.telemetry.collector import RequestRecord
+
+__all__ = ["SLO_METRICS", "slo_summary", "replay_slo", "slo_replay_matches"]
+
+# the fleet-wide SLO metric names every summary carries (docs/serving.md
+# must mention each; scripts/check_docs.py enforces it)
+SLO_METRICS = ("ttft_p50", "ttft_p99", "tpot_p50", "tpot_p99",
+               "queue_wait_p99", "goodput_rps", "slo_attainment",
+               "tokens_per_s")
+
+
+def _q(values: List[float], q: float) -> float:
+    """Quantile with the empty-population sentinel (-1.0, never NaN)."""
+    return float(np.quantile(values, q)) if values else -1.0
+
+
+def slo_summary(records: Iterable[RequestRecord], ttft_deadline_s: float,
+                tpot_deadline_s: float, t_elapsed_s: float,
+                n_nodes: Optional[int] = None) -> Dict[str, float]:
+    """The flat, JSON-safe SLO metric dict for one request population.
+
+    ``records`` must be the *full offered population* (completed and
+    flushed-incomplete rows); ``t_elapsed_s`` is the fleet-mean simulated
+    serving time the rate metrics are normalized by.
+    """
+    recs = list(records)
+    ttfts = [r.ttft for r in recs if r.t_first == r.t_first]
+    tpots = [r.tpot for r in recs if r.complete]
+    waits = [r.queue_wait for r in recs if r.t_admit == r.t_admit]
+    n_ok = sum(1 for r in recs
+               if r.complete and r.ttft <= ttft_deadline_s
+               and r.tpot <= tpot_deadline_s)
+    tokens = sum(r.tokens_out for r in recs)
+    t = max(float(t_elapsed_s), 1e-12)
+    out: Dict[str, float] = {
+        "offered": float(len(recs)),
+        "completed": float(sum(1 for r in recs if r.complete)),
+        "first_tokens": float(len(ttfts)),
+        "ttft_p50": _q(ttfts, 0.50),
+        "ttft_p99": _q(ttfts, 0.99),
+        "tpot_p50": _q(tpots, 0.50),
+        "tpot_p99": _q(tpots, 0.99),
+        "queue_wait_p99": _q(waits, 0.99),
+        "goodput_rps": n_ok / t,
+        "slo_attainment": (n_ok / len(recs)) if recs else -1.0,
+        "tokens_per_s": tokens / t,
+    }
+    if n_nodes is not None:
+        per_node = []
+        for n in range(int(n_nodes)):
+            node_ttfts = [r.ttft for r in recs
+                          if r.node == n and r.t_first == r.t_first]
+            p99 = _q(node_ttfts, 0.99)
+            out[f"ttft_p99_node{n}"] = p99
+            per_node.append(p99)
+        finite = [p for p in per_node if p >= 0]
+        out["ttft_p99_node_max"] = max(finite) if finite else -1.0
+        out["ttft_p99_node_spread"] = (max(finite) - min(finite)
+                                       if finite else -1.0)
+    return out
+
+
+def replay_slo(trace) -> Dict[str, float]:
+    """Recompute the SLO summary offline from a loaded ``TelemetryTrace``.
+
+    Uses only what the JSONL carries — the ``request`` rows and the
+    ``meta["serve"]`` block (deadlines, elapsed fleet time, node count) —
+    and must reproduce the live run's summary bit-for-bit.
+    """
+    ms = trace.meta.get("serve")
+    if not ms:
+        raise ValueError("trace carries no serve metadata "
+                         "(meta['serve']); was it recorded by a serve/* "
+                         "scenario?")
+    return slo_summary(trace.requests,
+                       ttft_deadline_s=float(ms["ttft_deadline_s"]),
+                       tpot_deadline_s=float(ms["tpot_deadline_s"]),
+                       t_elapsed_s=float(ms["t_fleet_s"]),
+                       n_nodes=int(ms["n_nodes"]))
+
+
+def slo_replay_matches(live: Dict[str, float], replayed: Dict[str, float],
+                       log=None) -> bool:
+    """Exact (bit-for-bit) comparison of two SLO summaries; differences
+    are reported through ``log`` (a callable taking one string)."""
+    ok = True
+    for key in sorted(set(live) | set(replayed)):
+        a, b = live.get(key), replayed.get(key)
+        if a != b:
+            ok = False
+            if log is not None:
+                log(f"  {key}: live {a!r} != replayed {b!r}")
+    return ok

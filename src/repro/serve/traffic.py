@@ -1,0 +1,122 @@
+"""Request-arrival traces: the production-traffic front end of serve/*.
+
+A serving study starts from *who shows up when*: this module turns a
+:class:`~repro.api.spec.ServeSpec`-shaped config into a deterministic
+sequence of :class:`Request` records (arrival time, prompt length, output
+length).  Two arrival processes:
+
+  * ``poisson`` — memoryless arrivals at a constant mean rate, the
+    steady-state load model;
+  * ``diurnal`` — a sinusoidally modulated rate (peak/trough traffic over
+    a day compressed to ``diurnal_period_s``), so queues build and drain
+    within one run.
+
+Scale is expressed either directly (``rate_rps``) or through the
+millions-of-users knob (``users_m`` x ``user_req_per_day`` spread over a
+day) — the latter is how a "serves millions of users" target becomes a
+requests-per-second number.
+
+Determinism contract (property-tested in tests/test_serve.py): request
+``k`` draws *all* of its randomness from its own child generator seeded
+``[seed, k]`` (the same convention api/sweep.py uses for sample children).
+Arrival time is the cumulative sum of per-request gaps, so truncating the
+trace (smaller ``max_requests`` / shorter ``horizon_s``) yields a byte-
+identical *prefix* of the longer trace, and the trace never consumes the
+simulator's RNG streams — generation is identical under every C3 engine.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List
+
+import numpy as np
+
+__all__ = ["Request", "RequestTrace", "generate_requests",
+           "ARRIVAL_PROCESSES"]
+
+ARRIVAL_PROCESSES = ("poisson", "diurnal")
+
+
+@dataclass
+class Request:
+    """One inference request of the trace."""
+
+    rid: int                        # trace-order id (also the child seed)
+    t_arrival: float                # s since trace start
+    prompt_len: int                 # tokens to prefill
+    output_len: int                 # tokens to decode (>= 1)
+
+
+@dataclass
+class RequestTrace:
+    """A generated arrival trace plus the knobs that produced it."""
+
+    requests: List[Request] = field(default_factory=list)
+    process: str = "poisson"
+    rate_rps: float = 0.0           # effective mean rate used
+    horizon_s: float = 0.0
+    seed: int = 0
+
+    def __len__(self) -> int:
+        return len(self.requests)
+
+    @property
+    def total_prompt_tokens(self) -> int:
+        return int(sum(r.prompt_len for r in self.requests))
+
+    @property
+    def total_output_tokens(self) -> int:
+        return int(sum(r.output_len for r in self.requests))
+
+
+def _diurnal_rate(base: float, amp: float, period_s: float,
+                  t: float) -> float:
+    """Instantaneous arrival rate at time ``t`` under the diurnal model:
+    a full peak/trough swing of relative amplitude ``amp`` per period,
+    starting at the mean and rising (so short horizons see the ramp)."""
+    return base * (1.0 + amp * np.sin(2.0 * np.pi * t / period_s))
+
+
+def _lognormal_len(rng: np.random.Generator, mean: float, sigma: float,
+                   lo: int, hi: int) -> int:
+    """A lognormal token count with the given *mean* (mu is solved from
+    mean and sigma), clipped to [lo, hi]."""
+    mu = np.log(mean) - 0.5 * sigma * sigma
+    return int(np.clip(round(float(rng.lognormal(mu, sigma))), lo, hi))
+
+
+def generate_requests(spec, seed: int) -> RequestTrace:
+    """Materialize the arrival trace for ``spec`` (a ServeSpec).
+
+    Request ``k``'s gap-to-previous, prompt length and output length all
+    come from ``np.random.default_rng([seed, k])`` — the prefix-stable
+    child-seeding convention (docs/serving.md).
+    """
+    if spec.process not in ARRIVAL_PROCESSES:
+        raise ValueError(f"unknown arrival process {spec.process!r} "
+                         f"(expected one of {ARRIVAL_PROCESSES})")
+    rate = spec.arrival_rate()
+    if rate <= 0:
+        raise ValueError(f"arrival rate must be > 0, got {rate}")
+    trace = RequestTrace(process=spec.process, rate_rps=rate,
+                         horizon_s=spec.horizon_s, seed=seed)
+    t = 0.0
+    for k in range(int(spec.max_requests)):
+        rng = np.random.default_rng([seed, k])
+        if spec.process == "diurnal":
+            lam = _diurnal_rate(rate, spec.diurnal_amp,
+                                spec.diurnal_period_s, t)
+        else:
+            lam = rate
+        t = t + float(rng.exponential(1.0)) / lam
+        if t > spec.horizon_s:
+            break
+        trace.requests.append(Request(
+            rid=k, t_arrival=t,
+            prompt_len=_lognormal_len(rng, spec.prompt_mean,
+                                      spec.prompt_sigma, 1,
+                                      int(spec.prompt_max)),
+            output_len=_lognormal_len(rng, spec.output_mean,
+                                      spec.output_sigma, 1,
+                                      int(spec.output_max))))
+    return trace

@@ -107,6 +107,45 @@ class FaultRecord:
 
 
 @dataclass
+class RequestRecord:
+    """One inference request's lifecycle through a serving fleet
+    (serve/*): every timestamp is on the owning node's simulated clock.
+    Incomplete requests (still queued / in flight when the run ends) are
+    flushed with NaN in the fields that never happened, so a trace always
+    carries the *full* offered population — the offline SLO replay
+    (``repro.serve.replay_slo``) recomputes every metric from these rows
+    alone."""
+
+    rid: int
+    node: int
+    t_arrival: float
+    t_admit: float                  # NaN: never reached a batch slot
+    t_first: float                  # NaN: prefill never completed
+    t_done: float                   # NaN: decode incomplete at end of run
+    prompt_len: int
+    output_len: int
+    tokens_out: int                 # decoded tokens actually produced
+
+    @property
+    def complete(self) -> bool:
+        return self.t_done == self.t_done      # not NaN
+
+    @property
+    def ttft(self) -> float:
+        """Time to first token (NaN until prefill completes)."""
+        return self.t_first - self.t_arrival
+
+    @property
+    def queue_wait(self) -> float:
+        return self.t_admit - self.t_arrival
+
+    @property
+    def tpot(self) -> float:
+        """Mean per-output-token latency after the first token."""
+        return (self.t_done - self.t_first) / max(self.output_len - 1, 1)
+
+
+@dataclass
 class TelemetryCollector:
     sensor_cfg: SensorConfig = LOSSLESS
     max_samples: int = 2048         # sampled iterations retained; a cluster
@@ -122,6 +161,11 @@ class TelemetryCollector:
         self.fleet: Deque[FleetSample] = deque(maxlen=self.max_samples)
         self.actions: Deque[ManagerAction] = deque(maxlen=self.max_samples)
         self.events: Deque[FaultRecord] = deque(maxlen=self.max_samples)
+        # request records are never sampled (every completion matters for
+        # the SLO quantiles) but stay ring-bounded; 8 requests/iteration
+        # comfortably covers the registered serve scenarios' arrival rates
+        self.requests: Deque[RequestRecord] = deque(
+            maxlen=self.max_samples * 8)
         self._sensors: Dict[int, SensorModel] = {}
         self._fleet_sensor: Optional[SensorModel] = None
         self._last_iter: Optional[int] = None
@@ -183,6 +227,9 @@ class TelemetryCollector:
             self.samples = deque(self.samples, maxlen=target_samples)
         if (self.actions.maxlen or 0) < target_actions:
             self.actions = deque(self.actions, maxlen=target_actions)
+        target_requests = self.max_samples * 8 * cluster.N
+        if (self.requests.maxlen or 0) < target_requests:
+            self.requests = deque(self.requests, maxlen=target_requests)
         for n, node in enumerate(cluster.nodes):
             self.attach_node(node, n)
         self.meta["n_nodes"] = cluster.N
@@ -277,6 +324,11 @@ class TelemetryCollector:
             node=int(node), device=int(device), value=float(value),
             source=str(source)))
 
+    def on_request(self, record: "RequestRecord") -> None:
+        """Record one serving request's lifecycle (ServingFleet hook) —
+        unsampled: SLO tails need the full population."""
+        self.requests.append(record)
+
     # ------------------------------------------------------------ accessors
     def node_samples(self, node: int = 0) -> List[NodeSample]:
         return [s for s in self.samples if s.node == node]
@@ -293,6 +345,7 @@ class TelemetryCollector:
         self.fleet.clear()
         self.actions.clear()
         self.events.clear()
+        self.requests.clear()
         self._sensors = {}
         self._fleet_sensor = None
         self._last_iter = None

@@ -7,9 +7,12 @@ Format (one JSON object per line):
            {"type": "fleet", "it": ..., "lead": [...], ...}
            {"type": "action", "it": ..., "kind": ..., "values": [...]}
            {"type": "event", "it": ..., "kind": ..., "node": ..., ...}
+           {"type": "request", "rid": ..., "node": ..., "t_arrival": ...}
 
 ``event`` lines carry fault onsets and escalation decisions (FaultRecord);
-readers predating them skip unknown record types, so the version stays 1.
+``request`` lines carry per-request serving lifecycles (RequestRecord,
+the ``repro.serve.replay_slo`` input).  Readers predating either skip
+unknown record types, so the version stays 1.
 
 Floats round-trip exactly (json emits the shortest repr that parses back to
 the same IEEE-754 double), and NaN — not valid JSON — is encoded as null,
@@ -32,7 +35,7 @@ import numpy as np
 
 from repro.telemetry.collector import (FaultRecord, FleetSample,
                                        ManagerAction, NodeSample,
-                                       TelemetryCollector)
+                                       RequestRecord, TelemetryCollector)
 
 TRACE_FORMAT = "lit-silicon-telemetry"
 TRACE_VERSION = 1
@@ -66,12 +69,14 @@ class TelemetryTrace:
     fleet: List[FleetSample] = field(default_factory=list)
     actions: List[ManagerAction] = field(default_factory=list)
     events: List[FaultRecord] = field(default_factory=list)
+    requests: List[RequestRecord] = field(default_factory=list)
 
     @classmethod
     def from_collector(cls, col: TelemetryCollector) -> "TelemetryTrace":
         return cls(meta=dict(col.meta), samples=list(col.samples),
                    fleet=list(col.fleet), actions=list(col.actions),
-                   events=list(getattr(col, "events", [])))
+                   events=list(getattr(col, "events", [])),
+                   requests=list(getattr(col, "requests", [])))
 
     def node_samples(self, node: int = 0) -> List[NodeSample]:
         return [s for s in self.samples if s.node == node]
@@ -136,6 +141,17 @@ def save_trace(src, path: str, extra_meta: Optional[Dict] = None) -> int:
                 "value": (None if val != val else val),
                 "source": ev.source}) + "\n")
             lines += 1
+
+        def _t(x: float):                   # NaN timestamps encode as null
+            return None if x != x else x
+        for rq in trace.requests:
+            f.write(json.dumps({
+                "type": "request", "rid": rq.rid, "node": rq.node,
+                "t_arrival": _t(rq.t_arrival), "t_admit": _t(rq.t_admit),
+                "t_first": _t(rq.t_first), "t_done": _t(rq.t_done),
+                "prompt_len": rq.prompt_len, "output_len": rq.output_len,
+                "tokens_out": rq.tokens_out}) + "\n")
+            lines += 1
     return lines
 
 
@@ -192,6 +208,15 @@ def load_trace(path: str) -> TelemetryTrace:
                     node=r["node"], device=r.get("device", -1),
                     value=(float("nan") if v is None else float(v)),
                     source=r.get("source", "fault")))
+            elif r["type"] == "request":
+                def _t(x):
+                    return float("nan") if x is None else float(x)
+                trace.requests.append(RequestRecord(
+                    rid=r["rid"], node=r["node"],
+                    t_arrival=_t(r["t_arrival"]), t_admit=_t(r["t_admit"]),
+                    t_first=_t(r["t_first"]), t_done=_t(r["t_done"]),
+                    prompt_len=r["prompt_len"], output_len=r["output_len"],
+                    tokens_out=r["tokens_out"]))
     return trace
 
 

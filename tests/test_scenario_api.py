@@ -167,8 +167,10 @@ def test_registry_scenario_round_trips_and_smoke_runs(name):
     assert Scenario.from_json(sc.to_json()).to_dict() == sc.to_dict()
     res = run_scenario(sc, iterations=2)
     assert res.iterations == 2
-    assert np.isfinite(res.metrics.get("throughput",
-                                       res.metrics.get("fleet_tput")))
+    tput = res.metrics.get(
+        "throughput", res.metrics.get(
+            "fleet_tput", res.metrics.get("tokens_per_s")))
+    assert np.isfinite(tput)
     if sc.telemetry is not None:
         assert res.metrics["telemetry_samples"] >= 1
 

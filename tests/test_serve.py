@@ -1,0 +1,354 @@
+"""Serving stack: trace generation determinism, continuous batching,
+SLO metrics + bit-for-bit offline replay, the tail-latency manager
+objective, and the jax `ServingLoop` shape paths.
+
+The load-bearing properties:
+
+  * request traces are *prefix-stable*: request k depends only on
+    ``[seed, k]`` child seeding, so growing the horizon or request cap
+    never changes earlier requests, and the trace is byte-identical
+    across simulator engines (it never touches the sim RNG streams);
+  * SLO summaries replayed from a saved JSONL trace match the live run
+    bit-for-bit (shortest-repr doubles, NaN round-trips as null);
+  * on the pinned serve/straggler-slo seed, the ``tail-latency``
+    objective strictly beats ``throughput`` on fleet p99 TTFT.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.api import get_scenario, run_scenario, with_overrides
+from repro.api.spec import Scenario, ServeSpec
+from repro.serve import (ContinuousBatcher, RequestTrace, SLO_METRICS,
+                         generate_requests, replay_slo, slo_replay_matches,
+                         slo_summary)
+from repro.serve.traffic import _diurnal_rate
+from repro.telemetry.collector import RequestRecord
+from repro.telemetry.trace_io import load_trace
+
+NAN = float("nan")
+
+
+# --------------------------------------------------------------------------- #
+# traffic: [seed, k] child seeding
+# --------------------------------------------------------------------------- #
+def _as_tuples(trace: RequestTrace):
+    return [(r.rid, r.t_arrival, r.prompt_len, r.output_len)
+            for r in trace.requests]
+
+
+@pytest.mark.parametrize("process", ["poisson", "diurnal"])
+def test_trace_prefix_stable_under_growth(process):
+    """Growing horizon or max_requests must not perturb earlier requests:
+    request k draws from rng([seed, k]), never from a shared stream."""
+    base = ServeSpec(process=process, rate_rps=20.0, horizon_s=5.0,
+                     max_requests=64)
+    short = generate_requests(base, seed=7)
+    for grown in (ServeSpec(process=process, rate_rps=20.0, horizon_s=50.0,
+                            max_requests=64),
+                  ServeSpec(process=process, rate_rps=20.0, horizon_s=5.0,
+                            max_requests=4096)):
+        long = generate_requests(grown, seed=7)
+        assert len(long) >= len(short)
+        assert _as_tuples(long)[:len(short)] == _as_tuples(short)
+
+
+def test_trace_seed_and_spec_sensitivity():
+    sv = ServeSpec(rate_rps=20.0, horizon_s=5.0)
+    a, b = generate_requests(sv, seed=1), generate_requests(sv, seed=2)
+    assert _as_tuples(a) != _as_tuples(b)
+    assert _as_tuples(a) == _as_tuples(generate_requests(sv, seed=1))
+
+
+def test_trace_engine_independent():
+    """The trace is pure numpy over the serve spec: two scenario builds
+    differing only in simulator engine carry byte-identical traces."""
+    from repro.api import build_scenario
+    sc = get_scenario("serve/poisson")
+    sc2 = with_overrides(sc, {"sim.engine": "event"})
+    ta = build_scenario(sc).serving.trace
+    tb = build_scenario(sc2).serving.trace
+    assert _as_tuples(ta) == _as_tuples(tb)
+
+
+def test_trace_shapes_and_bounds():
+    sv = ServeSpec(rate_rps=50.0, horizon_s=4.0, prompt_max=1024,
+                   output_max=128)
+    tr = generate_requests(sv, seed=3)
+    assert len(tr) > 50
+    ts = [r.t_arrival for r in tr.requests]
+    assert all(t2 >= t1 for t1, t2 in zip(ts, ts[1:]))
+    assert all(t <= sv.horizon_s for t in ts)
+    assert all(1 <= r.prompt_len <= sv.prompt_max for r in tr.requests)
+    assert all(1 <= r.output_len <= sv.output_max for r in tr.requests)
+    assert [r.rid for r in tr.requests] == list(range(len(tr)))
+    assert tr.total_prompt_tokens == sum(r.prompt_len for r in tr.requests)
+
+
+def test_users_m_arrival_rate():
+    """The millions-of-users knob: users_m * req/day / 86400 wins over
+    rate_rps when set."""
+    sv = ServeSpec(users_m=8.64, user_req_per_day=10.0, rate_rps=999.0)
+    assert sv.arrival_rate() == pytest.approx(1000.0)
+    assert ServeSpec(rate_rps=7.0).arrival_rate() == 7.0
+
+
+def test_diurnal_rate_modulation():
+    assert _diurnal_rate(10.0, 0.5, 40.0, 10.0) == pytest.approx(15.0)
+    assert _diurnal_rate(10.0, 0.5, 40.0, 30.0) == pytest.approx(5.0)
+    lam = [_diurnal_rate(10.0, 0.9, 60.0, t) for t in np.linspace(0, 60, 50)]
+    assert min(lam) > 0
+
+
+# --------------------------------------------------------------------------- #
+# continuous batcher
+# --------------------------------------------------------------------------- #
+def _req(rid, t=0.0, prompt=512, out=4):
+    from repro.serve.traffic import Request
+    return Request(rid=rid, t_arrival=t, prompt_len=prompt, output_len=out)
+
+
+def test_batcher_prefill_then_decode_timeline():
+    b = ContinuousBatcher(slots=1, prefill_chunk=512)
+    b.enqueue(_req(0, t=0.0, prompt=1000, out=3))
+    assert b.admit(now=1.0) == 1
+    assert b.step(2.0) == []          # prefill chunk 1 of 2
+    assert b.step(3.0) == []          # final chunk -> first token @3.0
+    assert b.first_token_events == [(3.0, 3.0)]
+    assert b.step(4.0) == []          # token 2
+    done = b.step(5.0)                # token 3 -> complete, slot freed
+    assert len(done) == 1 and b.n_active == 0
+    rec = done[0]
+    assert (rec.t_admit, rec.t_first, rec.t_done) == (1.0, 3.0, 5.0)
+    assert rec.ttft == pytest.approx(3.0)
+    assert rec.tokens_out == 3 and rec.complete
+    assert rec.tpot == pytest.approx((5.0 - 3.0) / 2)
+
+
+def test_batcher_slot_recycling_and_queue():
+    b = ContinuousBatcher(slots=2, prefill_chunk=512)
+    for i in range(4):
+        b.enqueue(_req(i, t=0.0, prompt=100, out=1))
+    assert b.admit(0.0) == 2 and b.n_queued == 2
+    done = b.step(1.0)                # prefill+first token completes out=1
+    assert [r.rid for r in done] == [0, 1]
+    assert b.admit(1.0) == 2 and b.n_queued == 0
+    assert [r.rid for r in b.step(2.0)] == [2, 3]
+
+
+def test_batcher_oldest_unserved_age():
+    b = ContinuousBatcher(slots=1, prefill_chunk=8)
+    assert b.oldest_unserved_age(5.0) == 0.0
+    b.enqueue(_req(0, t=1.0, prompt=64, out=2))
+    b.enqueue(_req(1, t=2.0, prompt=8, out=2))
+    b.admit(3.0)
+    # rid 0 admitted but mid-prefill, rid 1 queued: oldest is rid 0
+    assert b.oldest_unserved_age(10.0) == pytest.approx(9.0)
+    for t in range(8):
+        b.step(4.0 + t)               # rid 0 first token arrives
+    assert b.oldest_unserved_age(12.0) == pytest.approx(10.0)  # now rid 1
+
+
+def test_batcher_flush_incomplete_records():
+    b = ContinuousBatcher(slots=1, prefill_chunk=512, node=3)
+    b.enqueue(_req(0, t=0.0, prompt=10, out=100))
+    b.enqueue(_req(1, t=0.5, prompt=10, out=100))
+    b.admit(1.0)
+    b.step(2.0)
+    out = b.flush()
+    assert [r.rid for r in out] == [0, 1]
+    assert out[0].t_first == 2.0 and math.isnan(out[0].t_done)
+    assert math.isnan(out[1].t_admit) and math.isnan(out[1].t_first)
+    assert all(r.node == 3 and not r.complete for r in out)
+    assert b.n_active == 0 and b.n_queued == 0
+
+
+def test_batcher_validates_config():
+    with pytest.raises(ValueError, match="batch_slots"):
+        ContinuousBatcher(slots=0, prefill_chunk=1)
+    with pytest.raises(ValueError, match="prefill_chunk"):
+        ContinuousBatcher(slots=1, prefill_chunk=0)
+
+
+# --------------------------------------------------------------------------- #
+# SLO metrics
+# --------------------------------------------------------------------------- #
+def _rec(rid, node=0, arr=0.0, admit=0.0, first=1.0, done=2.0, out=2):
+    return RequestRecord(rid=rid, node=node, t_arrival=arr, t_admit=admit,
+                         t_first=first, t_done=done, prompt_len=8,
+                         output_len=out, tokens_out=out)
+
+
+def test_slo_summary_hand_computed():
+    recs = [_rec(0, first=1.0, done=2.0),            # ttft 1, within SLOs
+            _rec(1, first=3.0, done=4.0),            # ttft 3, misses TTFT
+            _rec(2, first=1.0, done=NAN),            # never completed
+            RequestRecord(rid=3, node=1, t_arrival=0.0, t_admit=NAN,
+                          t_first=NAN, t_done=NAN, prompt_len=8,
+                          output_len=2, tokens_out=0)]
+    s = slo_summary(recs, ttft_deadline_s=2.0, tpot_deadline_s=1.5,
+                    t_elapsed_s=10.0, n_nodes=2)
+    assert s["offered"] == 4.0 and s["completed"] == 2.0
+    assert s["first_tokens"] == 3.0
+    assert s["ttft_p50"] == pytest.approx(1.0)
+    assert s["goodput_rps"] == pytest.approx(0.1)    # only rid 0 in SLO
+    assert s["slo_attainment"] == pytest.approx(0.25)
+    assert s["tokens_per_s"] == pytest.approx(0.6)
+    assert s["ttft_p99_node1"] == -1.0               # no first tokens there
+    assert s["ttft_p99_node_max"] == s["ttft_p99_node0"]
+    for k in SLO_METRICS:
+        assert s[k] == s[k], f"{k} is NaN"
+
+
+def test_slo_summary_empty_population_sentinels():
+    s = slo_summary([], ttft_deadline_s=1.0, tpot_deadline_s=1.0,
+                    t_elapsed_s=0.0, n_nodes=2)
+    assert s["ttft_p99"] == -1.0 and s["slo_attainment"] == -1.0
+    assert s["goodput_rps"] == 0.0
+    assert not any(v != v for v in s.values())
+
+
+# --------------------------------------------------------------------------- #
+# end-to-end scenarios
+# --------------------------------------------------------------------------- #
+def test_serve_poisson_reports_tail_spread():
+    res = run_scenario(get_scenario("serve/poisson"))
+    m = res.metrics
+    assert m["offered"] > 100 and m["completed"] > 100
+    assert m["ttft_p99"] > m["ttft_p50"] > 0
+    assert m["ttft_p99_node_spread"] > 0
+    assert not any(v != v for v in m.values())
+
+
+def test_serve_replay_matches_live_bit_for_bit(tmp_path):
+    path = str(tmp_path / "serve.jsonl")
+    sc = get_scenario("serve/poisson")
+    res = run_scenario(sc, iterations=150, save_trace_path=path)
+    trace = load_trace(path)
+    assert len(trace.requests) == int(res.metrics["offered"])
+    replayed = replay_slo(trace)
+    live = res.serve.summary
+    assert slo_replay_matches(live, replayed, log=print)
+    # and not vacuously: the exact comparator must catch a perturbation
+    replayed["ttft_p99"] += 1e-12
+    assert not slo_replay_matches(live, replayed)
+
+
+def test_replay_requires_serve_meta(tmp_path):
+    class _Empty:
+        meta = {}
+        requests = []
+    with pytest.raises(ValueError, match="serve"):
+        replay_slo(_Empty())
+
+
+@pytest.mark.slow
+def test_tail_latency_objective_beats_throughput_on_pinned_seed():
+    """The CI gate's property: same trace, same budget, same seed — the
+    tail-latency objective must strictly reduce fleet p99 TTFT vs the
+    paper's throughput (speed-equalizing) objective."""
+    tail = run_scenario(get_scenario("serve/straggler-slo"))
+    tp = run_scenario(with_overrides(
+        get_scenario("serve/straggler-slo"),
+        {"manager.config.objective": "throughput"}))
+    p_tail = tail.metrics["ttft_p99"]
+    p_tp = tp.metrics["ttft_p99"]
+    assert 0 < p_tail < p_tp
+    assert tail.metrics["node0_budget_w"] != tp.metrics["node0_budget_w"]
+
+
+def test_serve_spec_validation():
+    with pytest.raises(ValueError, match="process"):
+        Scenario(name="x", serve=ServeSpec(process="bursty"),
+                 fleet=_fleet()).validate()
+    with pytest.raises(ValueError, match="rate"):
+        Scenario(name="x", serve=ServeSpec(rate_rps=0.0),
+                 fleet=_fleet()).validate()
+    with pytest.raises(ValueError):    # serve requires a fleet
+        Scenario(name="x", serve=ServeSpec()).validate()
+
+
+def _fleet():
+    from repro.core.cluster import ClusterConfig
+    return ClusterConfig(n_nodes=2)
+
+
+def test_tail_objective_requires_serve():
+    from repro.core.manager import FleetManagerConfig
+    from repro.api.spec import ManagerSpec
+    sc = Scenario(name="x", fleet=_fleet(),
+                  manager=ManagerSpec(scope="fleet", config=FleetManagerConfig(
+                      use_case="gpu-realloc", objective="tail-latency")))
+    with pytest.raises(ValueError, match="tail-latency"):
+        sc.validate()
+
+
+# --------------------------------------------------------------------------- #
+# jax ServingLoop shape paths
+# --------------------------------------------------------------------------- #
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+
+class _ToyLM:
+    """Duck-typed model: next token = (running token sum) % V, computed
+    row-independently so padding rows cannot contaminate real rows."""
+
+    V = 13
+
+    def prefill(self, params, batch):
+        cache = jnp.sum(batch["tokens"], axis=1, keepdims=True)  # (B, 1)
+        return self._logits(cache), cache
+
+    def decode_step(self, params, tok, cache):
+        cache = cache + tok
+        return self._logits(cache), cache
+
+    def _logits(self, cache):
+        return jax.nn.one_hot(cache % self.V, self.V)            # (B, 1, V)
+
+
+def _expected(prompt, steps):
+    out, acc = [], int(np.sum(prompt))
+    for _ in range(steps):
+        tok = acc % _ToyLM.V
+        out.append(tok)
+        acc += tok
+    return out
+
+
+def test_serving_loop_pads_and_unpads():
+    from repro.serve import ServeConfig, ServingLoop
+    loop = ServingLoop(_ToyLM(), {}, batch_size=4, prompt_len=3,
+                       cfg=ServeConfig(max_new_tokens=5))
+    prompts = np.array([[1, 2, 3], [4, 5, 6]], np.int32)
+    toks = loop.serve(prompts)
+    assert toks.shape == (2, 5)
+    for row, prompt in zip(toks, prompts):
+        assert list(row) == _expected(prompt, 5)
+
+
+def test_serving_loop_reused_buffer_is_rezeroed():
+    """A full batch followed by a smaller one: stale rows in the reused
+    pad buffer must not leak into the smaller call's results."""
+    from repro.serve import ServeConfig, ServingLoop
+    loop = ServingLoop(_ToyLM(), {}, batch_size=3, prompt_len=2,
+                       cfg=ServeConfig(max_new_tokens=4))
+    full = np.array([[9, 9], [7, 7], [5, 5]], np.int32)
+    loop.serve(full)
+    small = loop.serve(np.array([[2, 2]], np.int32))
+    assert small.shape == (1, 4)
+    assert list(small[0]) == _expected([2, 2], 4)
+    assert np.all(loop._pad_buf[1:] == 0)
+
+
+def test_serving_loop_rejects_over_batch_and_ragged():
+    from repro.serve import ServingLoop
+    loop = ServingLoop(_ToyLM(), {}, batch_size=2, prompt_len=4)
+    with pytest.raises(ValueError, match=r"exceeds batch_size=2"):
+        loop.serve(np.zeros((3, 4), np.int32))
+    with pytest.raises(ValueError, match=r"\(n, 4\)"):
+        loop.serve(np.zeros((1, 5), np.int32))
+    with pytest.raises(ValueError, match="shape"):
+        loop.serve(np.zeros((4,), np.int32))
