@@ -9,6 +9,9 @@ robustness nodes are programmatic `Scenario` variants driven through
 Rows:
   * telemetry_overhead_{engine} — per-iteration cost of an attached
                                   lossless collector vs a bare sim
+  * obs_overhead                — per-iteration cost of the observability
+                                  pipeline (metrics + alert rules) vs the
+                                  bare collector, gated < 30%
   * telemetry_replay            — record a short cluster run, replay the
                                   fleet manager offline, check the cap
                                   schedule matches bit-for-bit
@@ -26,9 +29,9 @@ from typing import List
 import numpy as np
 
 from benchmarks.common import Row
-from repro.api import (NodeSpec, Scenario, TelemetrySpec, WorkloadSpec,
-                       build_scenario, get_scenario, run_scenario,
-                       with_overrides)
+from repro.api import (NodeSpec, ObservabilitySpec, Scenario, TelemetrySpec,
+                       WorkloadSpec, build_scenario, get_scenario,
+                       run_scenario, with_overrides)
 from repro.core.c3sim import SimConfig
 from repro.core.manager import FleetManagerConfig
 from repro.telemetry import (SensorConfig, SensorModel, TelemetryTrace,
@@ -76,6 +79,38 @@ def collector_overhead() -> List[Row]:
                      f"base_us={base_us:.0f};recorded_us={rec_us:.0f};"
                      f"overhead_pct={over * 100:.1f}"))
     return rows
+
+
+def obs_overhead() -> List[Row]:
+    """Observability ingest cost: the full pipeline (metrics registry +
+    alert rules, evaluated once per fleet sample) vs the bare lossless
+    collector, on the managed 2-node reference cluster.  The baseline gate
+    pins ``ok`` (overhead < 30%) — a ratio, not a raw wall-clock, so it
+    stays stable on shared CI runners."""
+    reps, rounds, warmup = _iters(40), 3, 3
+
+    def _us_per_step(observability) -> float:
+        sc = get_scenario("telemetry/replay").replace(
+            telemetry=TelemetrySpec(max_samples=warmup + rounds * reps + 1),
+            observability=observability)
+        cl = build_scenario(sc).cluster
+        for _ in range(warmup):             # lazy family creation, caches
+            cl.step()
+        best = float("inf")
+        for _ in range(rounds):             # min-of-rounds rides out GC /
+            t0 = time.perf_counter()        # scheduler noise on shared CI
+            for _ in range(reps):
+                cl.step()
+            best = min(best, (time.perf_counter() - t0) / reps * 1e6)
+        return best
+
+    base_us = _us_per_step(None)
+    obs_us = _us_per_step(ObservabilitySpec())
+    over = (obs_us - base_us) / base_us
+    ok = int(over < 0.30)
+    return [("obs_overhead", obs_us,
+             f"base_us={base_us:.0f};obs_us={obs_us:.0f};"
+             f"overhead_pct={over * 100:.1f};ok={ok}")]
 
 
 def fleet_cfg(n_nodes: int = 2) -> FleetManagerConfig:
@@ -172,7 +207,7 @@ def detection_robustness() -> List[Row]:
 
 def run() -> List[Row]:
     rows: List[Row] = []
-    for fn in (collector_overhead, replay_fidelity, fleet_lead_fidelity,
-               detection_robustness):
+    for fn in (collector_overhead, obs_overhead, replay_fidelity,
+               fleet_lead_fidelity, detection_robustness):
         rows.extend(fn())
     return rows

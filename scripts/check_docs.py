@@ -11,7 +11,11 @@ Asserts, against the code (not a hand-maintained list):
     healing metric the runner reports appears in docs/faults.md;
   * every `serve/*` scenario, every SLO metric name (`SLO_METRICS`),
     every arrival process and every manager objective appears in
-    docs/serving.md.
+    docs/serving.md;
+  * every metric name in the observability catalog (`METRICS`), every
+    alert rule kind (`RULE_KINDS`) and every alert lifecycle state
+    (`ALERT_STATES`) appears in docs/observability.md — which must also
+    cover the `monitor` subcommand.
 
 Exit 0 when covered, 1 with a per-item listing otherwise — same contract
 as the other scripts/ smokes.
@@ -127,6 +131,28 @@ def main() -> int:
                 missing.append(f"manager objective `{obj}` is not "
                                f"documented in docs/serving.md")
 
+    from repro.obs.metrics import METRICS
+    from repro.obs.rules import ALERT_STATES, RULE_KINDS
+    obs_text = docs.get("observability.md", "")
+    if not obs_text:
+        missing.append("docs/observability.md does not exist")
+    else:
+        for metric in METRICS:
+            if f"`{metric}`" not in obs_text:
+                missing.append(f"observability metric `{metric}` is not "
+                               f"documented in docs/observability.md")
+        for kind in RULE_KINDS:
+            if f"`{kind}`" not in obs_text:
+                missing.append(f"alert rule kind `{kind}` is not "
+                               f"documented in docs/observability.md")
+        for state in ALERT_STATES:
+            if f"`{state}`" not in obs_text:
+                missing.append(f"alert state `{state}` is not documented "
+                               f"in docs/observability.md")
+        if "monitor" not in obs_text:
+            missing.append("the `monitor` subcommand is not mentioned in "
+                           "docs/observability.md")
+
     if missing:
         print(f"check_docs: {len(missing)} item(s) missing from docs/ "
               f"({len(docs)} file(s) scanned):", file=sys.stderr)
@@ -138,8 +164,9 @@ def main() -> int:
     print(f"check_docs: ok — {len(list_scenarios())} scenarios, "
           f"{n_cmds} subcommands, {n_flags} flags, "
           f"{len(FAULT_KINDS)} fault kinds, {len(STAGES)} stages, "
-          f"{len(SLO_METRICS)} SLO metrics covered "
-          f"across {len(docs)} docs file(s)")
+          f"{len(SLO_METRICS)} SLO metrics, "
+          f"{len(METRICS)} obs metrics, {len(RULE_KINDS)} rule kinds "
+          f"covered across {len(docs)} docs file(s)")
     return 0
 
 

@@ -1,0 +1,113 @@
+"""CI observability smoke: run the two pinned alerting scenarios
+(``cluster/fault-heal`` and ``serve/straggler-slo``) with the default
+rule set at lossless fidelity, write the fleet-health artifacts
+(dashboard HTML + incident JSONL + telemetry traces), and fail unless
+
+  * every unrecoverable fault on ``cluster/fault-heal`` raises a firing
+    alert within the escalation policy's patience window (time-to-alert
+    <= ``patience_s``) with **zero false positives** — the alert layer
+    must beat the drain it is meant to corroborate;
+  * offline rule evaluation over both recorded traces reproduces the
+    live alert transitions **bit-for-bit** (``alert_replay_matches``) —
+    the same contract the cap-schedule and drain replays already hold.
+
+The scenarios are the same registry entries ``tests/test_obs.py`` pins —
+CI validates one configuration, not two drifting copies.
+
+    PYTHONPATH=src python scripts/obs_smoke.py --out DIR
+
+Exit status 0 = gates hold; 1 = a gate failed.
+"""
+import argparse
+import math
+import os
+import sys
+
+_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+from repro.api import get_scenario, run_scenario              # noqa: E402
+from repro.obs import (alert_replay_matches, render_dashboard,  # noqa: E402
+                       save_incidents, score_alerts)
+from repro.telemetry import load_trace                        # noqa: E402
+
+
+def _check(name: str, jsonl: str, failures: list) -> None:
+    """Replay gate shared by both scenarios: the recorded alert rows must
+    reproduce bit-for-bit from the trace alone."""
+    trace = load_trace(jsonl)
+    n_alerts = sum(1 for e in trace.events if e.source == "alert")
+    if n_alerts == 0:
+        failures.append(f"{name}: no alert transitions were recorded")
+        return
+    log = []
+    if not alert_replay_matches(trace, log=log):
+        failures.append(f"{name}: alert replay diverged from the recording:")
+        failures.extend(f"  {line}" for line in log)
+    else:
+        print(f"{name}: replay matched recording bit-for-bit "
+              f"({n_alerts} alert transitions)")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="obs_smoke",
+                    help="artifact directory (dashboards, incidents, traces)")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    failures = []
+
+    # ---- cluster/fault-heal: detection quality vs fault ground truth ----
+    heal_jsonl = os.path.join(args.out, "heal_trace.jsonl")
+    heal = run_scenario(get_scenario("cluster/fault-heal"),
+                        save_trace_path=heal_jsonl)
+    patience = heal.scenario.escalation.patience_s
+    trace = load_trace(heal_jsonl)
+    score = score_alerts(trace, patience_s=patience)
+    tta = score["time_to_alert_s"]
+    fp = score["false_positives"]
+    print(f"cluster/fault-heal: {int(score['n_alerts_firing'])} firing, "
+          f"{int(fp)} false positive(s), time-to-alert "
+          f"{tta:.3f}s vs patience {patience:g}s")
+    if fp != 0:
+        failures.append(f"cluster/fault-heal: {int(fp)} false positive(s) "
+                        "at lossless fidelity")
+    if not (tta == tta and tta <= patience):
+        failures.append(f"cluster/fault-heal: time-to-alert {tta} did not "
+                        f"beat the escalation patience {patience:g}s")
+    if score["detected"] != 1.0:
+        failures.append("cluster/fault-heal: an unrecoverable fault never "
+                        "raised a firing alert on its node")
+    _check("cluster/fault-heal", heal_jsonl, failures)
+    render_dashboard(trace, os.path.join(args.out, "heal_dashboard.html"))
+    save_incidents(trace, os.path.join(args.out, "heal_incidents.jsonl"))
+
+    # ---- serve/straggler-slo: the SLO-burn path + replay --------------- #
+    serve_jsonl = os.path.join(args.out, "serve_trace.jsonl")
+    run_scenario(get_scenario("serve/straggler-slo"),
+                 save_trace_path=serve_jsonl)
+    s_score = score_alerts(load_trace(serve_jsonl), patience_s=math.nan)
+    print(f"serve/straggler-slo: {int(s_score['n_alerts_firing'])} firing "
+          f"(slo-burn on the backlog is operationally real; no fault "
+          f"ground truth here)")
+    if s_score["n_alerts_firing"] < 1:
+        failures.append("serve/straggler-slo: the slo-burn rule never "
+                        "fired on the pinned backlog")
+    _check("serve/straggler-slo", serve_jsonl, failures)
+    s_trace = load_trace(serve_jsonl)
+    render_dashboard(s_trace, os.path.join(args.out, "serve_dashboard.html"))
+    save_incidents(s_trace, os.path.join(args.out, "serve_incidents.jsonl"))
+
+    if failures:
+        print("obs_smoke: FAILED", file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        return 1
+    print("obs_smoke: ok")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -8,13 +8,13 @@ from repro.api.registry import (SCENARIOS, get_scenario, list_scenarios,
 from repro.api.runner import (BuiltScenario, ScenarioResult, build_scenario,
                               run_scenario)
 from repro.api.spec import (SPEC_FORMAT, SPEC_VERSION, EscalationSpec,
-                            FaultSpec, ManagerSpec, NodeSpec, Scenario,
-                            TelemetrySpec, WorkloadSpec, grid_variants,
-                            with_overrides)
+                            FaultSpec, ManagerSpec, NodeSpec,
+                            ObservabilitySpec, Scenario, TelemetrySpec,
+                            WorkloadSpec, grid_variants, with_overrides)
 
 __all__ = [
     "Scenario", "WorkloadSpec", "NodeSpec", "ManagerSpec", "TelemetrySpec",
-    "FaultSpec", "EscalationSpec",
+    "FaultSpec", "EscalationSpec", "ObservabilitySpec",
     "SPEC_FORMAT", "SPEC_VERSION", "with_overrides", "grid_variants",
     "register", "get_scenario", "list_scenarios", "scenario_names",
     "variants", "SCENARIOS",

@@ -8,6 +8,9 @@ Commands:
   sweep NAME --grid k=v1,v2  grid sweep over dotted-path overrides
   sweep NAME --samples N     Monte-Carlo fleet sweep (versioned artifact)
   replay TRACE.jsonl         offline detect/mitigate over a recorded trace
+  monitor NAME|--trace FILE  run with metrics + alert rules (or evaluate
+                             the rules offline over a recorded trace) and
+                             emit dashboards / incident timelines
 
 Exit codes: 0 success, 1 runtime failure, 2 unknown scenario / bad usage
 (matching ``benchmarks/run.py --only``).
@@ -252,6 +255,99 @@ def cmd_replay(args) -> int:
     return 0
 
 
+def _nanless(obj):
+    """JSON-safe copy: NaN/Inf become None (the monitor payload mixes
+    score dicts that legally carry NaN)."""
+    import math
+    if isinstance(obj, dict):
+        return {k: _nanless(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_nanless(v) for v in obj]
+    if isinstance(obj, float) and not math.isfinite(obj):
+        return None
+    return obj
+
+
+def cmd_monitor(args) -> int:
+    """Live observability run, or offline rule evaluation over a recorded
+    trace.  ``--check-replay`` re-evaluates the rules from the trace and
+    exits 1 unless the firings match the recorded ones bit-for-bit."""
+    import math
+
+    from repro.api.spec import ObservabilitySpec
+    from repro.obs import (alert_replay_matches, render_dashboard,
+                           replay_alerts, save_incidents, score_alerts,
+                           terminal_summary, transitions_to_records)
+    from repro.telemetry import load_trace
+    from repro.telemetry.trace_io import TelemetryTrace
+
+    out = {}
+    if args.trace:
+        trace = load_trace(args.trace)
+        pipe = replay_alerts(trace)
+        out["trace"] = args.trace
+        if not any(e.source == "alert" for e in trace.events):
+            if args.check_replay:
+                print("error: --check-replay needs a trace recorded with "
+                      "observability (no alert rows found)", file=sys.stderr)
+                return 2
+            # recorded without alert rows (record_alerts off, or a
+            # degraded copy): inject the replayed firings so incidents
+            # and the dashboard have something to annotate
+            trace.events = sorted(
+                trace.events + transitions_to_records(pipe.transitions),
+                key=lambda e: e.iteration)
+    else:
+        sc = _load_scenario(args)
+        if sc.observability is None:
+            sc = sc.replace(observability=ObservabilitySpec())
+        if sc.telemetry is None:
+            sc = sc.replace(telemetry=TelemetrySpec())
+        res = run_scenario(sc, iterations=args.iterations,
+                           save_trace_path=args.save_trace)
+        trace = TelemetryTrace.from_collector(res.collector)
+        pipe = res.obs
+        out["scenario"] = sc.name or None
+        out["metrics"] = res.metrics
+        if args.save_trace:
+            out["trace_path"] = args.save_trace
+    patience = float((trace.meta.get("escalation") or {}).get(
+        "patience_s", math.nan))
+    out["transitions"] = len(pipe.transitions)
+    out["alerts"] = score_alerts(trace, patience_s=patience)
+    if args.check_replay:
+        mismatches: List[str] = []
+        out["replay_matches"] = bool(
+            alert_replay_matches(trace, log=mismatches))
+        if mismatches:
+            out["mismatches"] = mismatches[:20]
+    if args.dashboard:
+        render_dashboard(trace, args.dashboard)
+        out["dashboard"] = args.dashboard
+    if args.incidents:
+        save_incidents(trace, args.incidents)
+        out["incidents_file"] = args.incidents
+    if args.metrics:
+        if args.metrics.endswith(".jsonl"):
+            pipe.registry.snapshot_jsonl(args.metrics)
+        else:
+            with open(args.metrics, "w") as f:
+                f.write(pipe.registry.exposition())
+        out["metrics_file"] = args.metrics
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(_nanless(out), f, indent=2, sort_keys=True)
+    if args.json:
+        print(json.dumps(_nanless(out), indent=2, sort_keys=True))
+    else:
+        print(terminal_summary(trace, patience_s=patience))
+        for key in ("dashboard", "incidents_file", "metrics_file",
+                    "trace_path"):
+            if key in out:
+                print(f"{key.replace('_file', '')} written to {out[key]}")
+    return 1 if out.get("replay_matches") is False else 0
+
+
 def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser(
         prog="python -m repro",
@@ -308,6 +404,31 @@ def build_parser() -> argparse.ArgumentParser:
                    help="write the replayed converged caps file")
     p.add_argument("--json", action="store_true")
     p.set_defaults(fn=cmd_replay)
+
+    p = sub.add_parser("monitor",
+                       help="run with the observability pipeline, or "
+                            "evaluate alert rules offline over a trace")
+    _add_scenario_args(p)
+    p.add_argument("--trace", metavar="FILE",
+                   help="offline mode: evaluate the rules over this "
+                        "recorded telemetry JSONL instead of running")
+    p.add_argument("--check-replay", action="store_true",
+                   help="verify offline rule evaluation reproduces the "
+                        "recorded alert firings bit-for-bit (exit 1 on "
+                        "mismatch)")
+    p.add_argument("--dashboard", metavar="PATH",
+                   help="write the HTML fleet-health dashboard")
+    p.add_argument("--incidents", metavar="PATH",
+                   help="write the incident timeline JSONL")
+    p.add_argument("--metrics", metavar="PATH",
+                   help="write the metrics snapshot (Prometheus text, or "
+                        "JSONL when PATH ends in .jsonl)")
+    p.add_argument("--save-trace", metavar="PATH",
+                   help="record + write the telemetry JSONL trace "
+                        "(live mode)")
+    p.add_argument("--json", action="store_true")
+    p.add_argument("--out", help="also write the JSON payload to a file")
+    p.set_defaults(fn=cmd_monitor)
     return ap
 
 

@@ -14,8 +14,9 @@ from __future__ import annotations
 
 from typing import Callable, Dict, List, Tuple
 
-from repro.api.spec import (ManagerSpec, NodeSpec, Scenario, ServeSpec,
-                            TelemetrySpec, WorkloadSpec, grid_variants)
+from repro.api.spec import (ManagerSpec, NodeSpec, ObservabilitySpec,
+                            Scenario, ServeSpec, TelemetrySpec,
+                            WorkloadSpec, grid_variants)
 from repro.core.c3sim import SimConfig
 from repro.core.cluster import ClusterConfig
 from repro.core.escalate import EscalationConfig
@@ -220,7 +221,8 @@ def _heal_faults() -> FaultModel:
     ])
 
 
-def _fault_fleet(name: str, blurb: str, escalation) -> Scenario:
+def _fault_fleet(name: str, blurb: str, escalation,
+                 observability=None) -> Scenario:
     return Scenario(
         name=name, description=blurb,
         workload=_wl8(), sim=_sim(), node=NodeSpec(caps_w=CAP_W),
@@ -228,7 +230,7 @@ def _fault_fleet(name: str, blurb: str, escalation) -> Scenario:
                             inter_node_gbps=100.0),
         manager=_fleet_mgr(4), telemetry=TelemetrySpec(),
         faults=_heal_faults(), escalation=escalation,
-        iterations=160, seed=5)
+        observability=observability, iterations=160, seed=5)
 
 
 @register
@@ -237,8 +239,9 @@ def cluster_fault_heal() -> Scenario:
         "cluster/fault-heal",
         "transient hang + thermal runaway ending in device loss; the "
         "escalation policy detects, drains node 2 and elastically "
-        "restarts on 3 nodes (goodput-scored)",
-        EscalationConfig())
+        "restarts on 3 nodes (goodput-scored); the default alert rules "
+        "watch the same run",
+        EscalationConfig(), observability=ObservabilitySpec())
 
 
 @register
@@ -329,7 +332,8 @@ def serve_straggler_slo() -> Scenario:
         workload=_serve_wl(), sim=_sim(), node=NodeSpec(caps_w=SERVE_CAP_W),
         fleet=_serve_fleet(), manager=_serve_mgr("tail-latency"),
         serve=ServeSpec(process="poisson", rate_rps=4.8, horizon_s=60.0),
-        telemetry=TelemetrySpec(), iterations=450, seed=5)
+        telemetry=TelemetrySpec(), observability=ObservabilitySpec(),
+        iterations=450, seed=5)
 
 
 # --------------------------------------------------------------------------- #

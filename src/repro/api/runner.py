@@ -25,6 +25,8 @@ from repro.core.cluster import ClusterSim
 from repro.core.detect import lead_value_detect, straggler_index
 from repro.core.manager import (FleetPowerManager, run_closed_loop,
                                 run_fleet_closed_loop)
+from repro.obs.incidents import score_alerts
+from repro.obs.pipeline import ObsPipeline
 from repro.serve.engine import ServeReport, ServingFleet
 from repro.telemetry.collector import TelemetryCollector
 from repro.telemetry.replay import detection_report, fleet_lead_report
@@ -68,6 +70,7 @@ class BuiltScenario:
     #                                         the ServingFleet's embedded
     #                                         ClusterSim)
     collector: Optional[TelemetryCollector] = None
+    obs: Optional[ObsPipeline] = None       # metrics + alerting observer
 
     @property
     def sim(self):
@@ -93,6 +96,7 @@ class ScenarioResult:
     trace_path: Optional[str] = None
     heal: Optional[HealReport] = None       # fault/escalation runs only
     serve: Optional[ServeReport] = None     # serve/* runs only
+    obs: Optional[ObsPipeline] = None       # observability runs only
 
     def to_json_dict(self) -> dict:
         """JSON-safe summary (the `--json` CLI payload): name, seed,
@@ -131,6 +135,14 @@ def build_scenario(sc: Scenario,
         collector = TelemetryCollector(
             sensor_cfg=t.sensor, max_samples=max_samples,
             keep_truth=t.keep_truth, with_kernels=t.with_kernels)
+    obs = None
+    if sc.observability is not None:
+        if collector is None:
+            raise ValueError("observability requires Scenario.telemetry "
+                             "(the pipeline observes the recorded stream; "
+                             "run_scenario adds a lossless default)")
+        obs = ObsPipeline(sc.observability, fleet_scope=sc.fleet is not None)
+        obs.attach(collector)
     if sc.fleet is None:
         node = NodeSim(wl, preset, sc.sim, n_devices=sc.node.devices,
                        seed=sc.seed,
@@ -139,7 +151,8 @@ def build_scenario(sc: Scenario,
             node.set_power_caps(np.full(node.G, float(sc.node.caps_w)))
         if collector is not None:
             collector.attach_node(node)
-        return BuiltScenario(sc, wl, node=node, collector=collector)
+        return BuiltScenario(sc, wl, node=node, collector=collector,
+                             obs=obs)
     if sc.serve is not None:
         serving = ServingFleet(wl, preset, sc.sim, sc.fleet, sc.serve,
                                devices_per_node=sc.node.devices,
@@ -159,7 +172,7 @@ def build_scenario(sc: Scenario,
         else:
             collector.attach_cluster(cluster)
     return BuiltScenario(sc, wl, cluster=cluster, serving=serving,
-                         collector=collector)
+                         collector=collector, obs=obs)
 
 
 # --------------------------------------------------------------------------- #
@@ -176,10 +189,12 @@ def run_scenario(sc: Scenario, *, iterations: Optional[int] = None,
     ``sc.telemetry``; the CLI enables a lossless default when asked to
     save without one).
     """
-    if sc.faults is not None and sc.telemetry is None:
-        # fault scenarios observe through telemetry: the escalation policy
-        # consumes the recorded (lossless by default) observed stream, so
-        # the same trace replays the drain decisions offline
+    if (sc.faults is not None or sc.observability is not None) \
+            and sc.telemetry is None:
+        # fault and observability scenarios observe through telemetry: the
+        # escalation policy and the alert pipeline both consume the
+        # recorded (lossless by default) observed stream, so the same
+        # trace replays their decisions offline
         sc = sc.replace(telemetry=TelemetrySpec())
     if (save_trace_path or chrome_trace_path) and sc.telemetry is None:
         raise ValueError("saving a trace requires Scenario.telemetry")
@@ -187,7 +202,7 @@ def run_scenario(sc: Scenario, *, iterations: Optional[int] = None,
     built = build_scenario(sc, iterations=iters)
     result = ScenarioResult(scenario=sc, iterations=iters,
                             node=built.node, cluster=built.cluster,
-                            collector=built.collector)
+                            collector=built.collector, obs=built.obs)
 
     if built.node is not None:
         _run_node(sc, built, iters, result)
@@ -274,7 +289,8 @@ def _run_healing(sc: Scenario, built: BuiltScenario, iters: int,
         tune_after=(sc.manager.tune_after if sc.manager is not None
                     else None),
         devices_per_node=sc.node.devices, seed=sc.seed,
-        node_caps_w=sc.node.caps_w, collector=built.collector)
+        node_caps_w=sc.node.caps_w, collector=built.collector,
+        alert_source=built.obs)
     result.heal = rep
     result.cluster = rep.cluster
     result.manager = rep.manager
@@ -368,7 +384,21 @@ def _metrics(sc: Scenario, iters: int, r: ScenarioResult) -> Dict[str, float]:
     if r.collector is not None:
         m["telemetry_samples"] = len(r.collector.samples)
         m.update(_detection_metrics(sc, r))
+    if r.obs is not None and r.collector is not None:
+        m.update(_obs_metrics(sc, r))
     return m
+
+
+def _obs_metrics(sc: Scenario, r: ScenarioResult) -> Dict[str, float]:
+    """Alert quality of the run's observability pipeline, scored against
+    the recorded fault ground truth (NaN-free like every other metric)."""
+    trace = TelemetryTrace.from_collector(r.collector)
+    patience = (sc.escalation.patience_s if sc.escalation is not None
+                else float("nan"))
+    score = score_alerts(trace, patience_s=patience)
+    return {"obs_alerts_fired": score["n_alerts_firing"],
+            "obs_false_alerts": score["false_positives"],
+            "obs_time_to_alert_s": _num(score["time_to_alert_s"])}
 
 
 def _detection_metrics(sc: Scenario, r: ScenarioResult) -> Dict[str, float]:

@@ -39,6 +39,8 @@ from repro.core.faults import FaultEvent, FaultModel
 from repro.core.manager import FleetManagerConfig, ManagerConfig
 from repro.core.thermal import PRESETS, ChurnEvent, ChurnModel, DevicePreset
 from repro.core.workload import Workload, fsdp_llm_iteration
+from repro.obs.pipeline import ObservabilitySpec
+from repro.obs.rules import AlertRule
 from repro.serve.traffic import ARRIVAL_PROCESSES
 from repro.telemetry.sensors import SensorConfig
 from repro.train.fault import WatchdogConfig
@@ -54,8 +56,8 @@ EscalationSpec = EscalationConfig
 
 __all__ = [
     "SPEC_FORMAT", "SPEC_VERSION", "WorkloadSpec", "NodeSpec", "ManagerSpec",
-    "TelemetrySpec", "FaultSpec", "EscalationSpec", "ServeSpec", "Scenario",
-    "scenario_from_dict", "with_overrides",
+    "TelemetrySpec", "FaultSpec", "EscalationSpec", "ServeSpec",
+    "ObservabilitySpec", "Scenario", "scenario_from_dict", "with_overrides",
 ]
 
 
@@ -226,6 +228,7 @@ class Scenario:
     faults: Optional[FaultModel] = None        # None: no injected faults
     escalation: Optional[EscalationConfig] = None  # None: no drain policy
     serve: Optional[ServeSpec] = None          # None: training-shaped run
+    observability: Optional[ObservabilitySpec] = None  # None: no alerting
     iterations: int = 60
     seed: int = 5                       # NodeSim / ClusterSim thermal seed
 
@@ -254,6 +257,8 @@ class Scenario:
                                  "faults/escalation (the healing loop is "
                                  "training-shaped)")
             self.serve.validate()
+        if self.observability is not None:
+            self.observability.validate()
         if (self.manager is not None
                 and getattr(self.manager.config, "objective", "throughput")
                 == "tail-latency" and self.serve is None):
@@ -363,7 +368,8 @@ _NESTED: Dict[type, Dict[str, type]] = {
     Scenario: {"workload": WorkloadSpec, "sim": SimConfig, "node": NodeSpec,
                "fleet": ClusterConfig, "manager": ManagerSpec,
                "telemetry": TelemetrySpec, "faults": FaultModel,
-               "escalation": EscalationConfig, "serve": ServeSpec},
+               "escalation": EscalationConfig, "serve": ServeSpec,
+               "observability": ObservabilitySpec},
     ManagerSpec: {"sensor": SensorConfig},
     TelemetrySpec: {"sensor": SensorConfig},
     EscalationConfig: {"watchdog": WatchdogConfig},
@@ -406,6 +412,10 @@ def _decode_dataclass(cls: type, data: Any, path: str) -> Any:
                           for i, e in enumerate(v)]
         elif cls is FaultModel and f.name == "events":
             kw[f.name] = [_decode_dataclass(FaultEvent, e, f"{p}[{i}]")
+                          for i, e in enumerate(v)]
+        elif cls is ObservabilitySpec and f.name == "rules" \
+                and v is not None:
+            kw[f.name] = [_decode_dataclass(AlertRule, e, f"{p}[{i}]")
                           for i, e in enumerate(v)]
         elif sub is not None:
             kw[f.name] = _decode_dataclass(sub, v, p)

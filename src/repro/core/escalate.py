@@ -86,6 +86,11 @@ class EscalationConfig:
     sensor_retries: int = 3            # NaN reads tolerated before declaring
     #                                    the node's sensor dead
     drain_mode: str = "escalate"       # escalate | immediate | never
+    alert_corroborate: bool = False    # accept a firing observability alert
+    #                                    (repro.obs) as drain corroboration,
+    #                                    alongside the watchdog — off by
+    #                                    default so pinned drain/goodput
+    #                                    replays are untouched
     drain_s: float = 6.0               # seconds to drain + deschedule a node
     restart_penalty_s: float = 8.0     # checkpoint restore + re-setup time
     checkpoint_period: int = 10        # steps between checkpoints
@@ -188,6 +193,7 @@ class EscalationPolicy:
                           for _ in range(n)]
         self._stalls0 = [0] * n        # stall count at current streak start
         self.streak_t0 = [math.nan] * n   # t_sim of the streak's first strike
+        self.alert_nodes: set = set()  # local indices with a firing alert
 
     # ------------------------------------------------------------------ events
     def emit(self, step: int, t_sim: float, stage: str, node: int,
@@ -198,6 +204,14 @@ class EscalationPolicy:
         if self.on_event is not None:
             self.on_event(ev)
         return ev
+
+    def note_alerts(self, nodes) -> None:
+        """Update the set of *local* node indices with a firing
+        observability alert (``ObsPipeline.firing_nodes()`` live, the
+        reconstructed firing set on replay).  Consulted by ``observe``
+        only when ``cfg.alert_corroborate`` is set — a pure input, so
+        decisions stay replayable."""
+        self.alert_nodes = set(int(n) for n in nodes)
 
     # ----------------------------------------------------------------- observe
     def observe(self, step: int, t_obs: np.ndarray,
@@ -269,7 +283,9 @@ class EscalationPolicy:
                 self.emit(step, t_sim, "escalate", gid, ratio)
             corroborated = (self.sensor_failed[i]
                             or self.watchdogs[i].stalls > self._stalls0[i]
-                            or cfg.drain_mode == "immediate")
+                            or cfg.drain_mode == "immediate"
+                            or (cfg.alert_corroborate
+                                and i in self.alert_nodes))
             if (cfg.drain_mode != "never" and corroborated
                     and decision is None):
                 decision = DrainDecision(
@@ -361,7 +377,8 @@ def run_healing_fleet(workload, preset, sim_cfg, cluster_cfg: ClusterConfig,
                       devices_per_node: int = 8, seed: int = 0,
                       node_caps_w: Optional[float] = None,
                       collector=None,
-                      checkpoint_dir: Optional[str] = None) -> HealReport:
+                      checkpoint_dir: Optional[str] = None,
+                      alert_source=None) -> HealReport:
     """Run ``iterations`` committed fleet steps under fault injection and
     the escalation policy, healing through drains by elastic restart.
 
@@ -490,6 +507,11 @@ def run_healing_fleet(workload, preset, sim_cfg, cluster_cfg: ClusterConfig,
             t_obs = _observed(cluster, collector, it)
             decision = None
             if t_obs is not None:
+                # observability corroboration: the pipeline evaluated its
+                # rules inside run_iteration (at the fleet sample), so the
+                # firing set is current as of this observation
+                if alert_source is not None:
+                    policy.note_alerts(alert_source.firing_nodes())
                 decision = policy.observe(it, t_obs, t_sim=t_total)
             if decision is not None and len(alive) - 1 < esc.min_nodes:
                 decision = None     # floor reached: ride it out

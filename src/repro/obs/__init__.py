@@ -1,0 +1,30 @@
+"""Online observability over the simulated fleet: streaming metrics,
+declarative alert rules with hysteresis, incident timelines, and the
+fleet-health dashboard.  See docs/observability.md."""
+from repro.obs.dashboard import render_dashboard, terminal_summary
+from repro.obs.incidents import (INCIDENTS_FORMAT, INCIDENTS_VERSION,
+                                 Incident, TimelineEvent, build_incidents,
+                                 build_timeline, save_incidents,
+                                 score_alerts)
+from repro.obs.metrics import (DEFAULT_BUCKETS, METRICS, METRICS_FORMAT,
+                               METRICS_VERSION, Counter, Gauge, Histogram,
+                               MetricsRegistry)
+from repro.obs.pipeline import (ObservabilitySpec, ObsPipeline,
+                                alert_replay_matches, replay_alerts,
+                                transitions_to_records)
+from repro.obs.rules import (ALERT_SOURCE, ALERT_STATES, RULE_KINDS,
+                             AlertEngine, AlertRule, AlertTransition,
+                             default_rules)
+
+__all__ = [
+    "METRICS", "METRICS_FORMAT", "METRICS_VERSION", "DEFAULT_BUCKETS",
+    "Counter", "Gauge", "Histogram", "MetricsRegistry",
+    "RULE_KINDS", "ALERT_STATES", "ALERT_SOURCE", "AlertRule",
+    "AlertTransition", "AlertEngine", "default_rules",
+    "ObservabilitySpec", "ObsPipeline", "replay_alerts",
+    "alert_replay_matches", "transitions_to_records",
+    "TimelineEvent", "Incident", "build_timeline", "build_incidents",
+    "score_alerts", "save_incidents", "INCIDENTS_FORMAT",
+    "INCIDENTS_VERSION",
+    "render_dashboard", "terminal_summary",
+]

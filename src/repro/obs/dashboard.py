@@ -1,0 +1,273 @@
+"""Fleet-health dashboard: a static, self-contained HTML report.
+
+``render_dashboard`` turns a recorded :class:`TelemetryTrace` into one
+HTML file with zero external dependencies — inline CSS and Python-computed
+SVG sparklines, no JavaScript — so the artifact survives CI upload and
+opens anywhere.  Panels:
+
+  * per-node health strip: temperature (max over devices), node power,
+    mean power cap, observed lead — the Lit Silicon signals, one sparkline
+    each, with firing-alert counts per node;
+  * serve SLO panel (when the trace carries the serve tail signal);
+  * the incident list (from :mod:`repro.obs.incidents`) with per-incident
+    fault kinds, alert rules and drain outcome;
+  * the alert score line (time-to-alert, false positives).
+
+``terminal_summary`` prints the same story as text for the CLI.
+"""
+from __future__ import annotations
+
+import html
+import math
+from typing import Dict, List, Optional, Sequence
+
+from repro.obs.incidents import (build_incidents, build_timeline,
+                                 score_alerts)
+from repro.obs.rules import ALERT_SOURCE
+
+__all__ = ["render_dashboard", "terminal_summary"]
+
+_W, _H = 260, 42                    # sparkline viewport (px)
+
+
+def _finite(xs: Sequence[float]) -> List[float]:
+    return [x for x in xs if x == x]
+
+
+def _spark(values: Sequence[float], color: str = "#2a6fb0") -> str:
+    """One SVG sparkline; NaN samples break the polyline into segments."""
+    fin = _finite(values)
+    if not fin:
+        return (f'<svg width="{_W}" height="{_H}">'
+                f'<text x="4" y="{_H - 14}" class="mut">no data</text></svg>')
+    lo, hi = min(fin), max(fin)
+    span = (hi - lo) or 1.0
+    n = max(len(values) - 1, 1)
+
+    def _xy(i: int, v: float) -> str:
+        x = 2 + (_W - 4) * i / n
+        y = 2 + (_H - 4) * (1.0 - (v - lo) / span)
+        return f"{x:.1f},{y:.1f}"
+
+    segs, cur = [], []
+    for i, v in enumerate(values):
+        if v != v:
+            if len(cur) > 1:
+                segs.append(cur)
+            cur = []
+        else:
+            cur.append(_xy(i, v))
+    if len(cur) > 1:
+        segs.append(cur)
+    polys = "".join(
+        f'<polyline points="{" ".join(s)}" fill="none" '
+        f'stroke="{color}" stroke-width="1.4"/>' for s in segs)
+    if not polys and fin:           # single isolated points
+        polys = "".join(
+            f'<circle cx="{_xy(i, v).split(",")[0]}" '
+            f'cy="{_xy(i, v).split(",")[1]}" r="1.5" fill="{color}"/>'
+            for i, v in enumerate(values) if v == v)
+    return f'<svg width="{_W}" height="{_H}" class="spark">{polys}</svg>'
+
+
+def _fmt(v: float, unit: str = "") -> str:
+    if v != v:
+        return "—"
+    return f"{v:.3g}{unit}"
+
+
+def _node_series(trace) -> Dict[int, Dict[str, List[float]]]:
+    """Per-node sparkline inputs, aligned on the fleet sample grid when
+    one exists, else on the node-sample grid."""
+    out: Dict[int, Dict[str, List[float]]] = {}
+    n_nodes = trace.n_nodes
+    for n in range(n_nodes):
+        out[n] = {"temp": [], "power": [], "cap": [], "lead": [],
+                  "tail": []}
+    by_iter: Dict[int, Dict[int, object]] = {}
+    for s in trace.samples:
+        by_iter.setdefault(s.iteration, {})[s.node] = s
+    iters = sorted(by_iter)
+    for it in iters:
+        row = by_iter[it]
+        for n in range(n_nodes):
+            s = row.get(n)
+            if s is None:
+                out[n]["temp"].append(math.nan)
+                out[n]["cap"].append(math.nan)
+            else:
+                t = _finite(list(map(float, s.temp)))
+                c = _finite(list(map(float, s.cap)))
+                out[n]["temp"].append(max(t) if t else math.nan)
+                out[n]["cap"].append(sum(c) / len(c) if c else math.nan)
+    for fs in trace.fleet:
+        for n in range(n_nodes):
+            inr = n < len(fs.t_local)
+            out[n]["power"].append(
+                float(fs.node_power[n]) if inr else math.nan)
+            lead = fs.lead_obs if fs.lead_obs is not None else fs.lead
+            out[n]["lead"].append(
+                float(lead[n]) if (inr and lead is not None) else math.nan)
+            tail = getattr(fs, "tail", None)
+            out[n]["tail"].append(
+                float(tail[n]) if (inr and tail is not None) else math.nan)
+    return out
+
+
+def _firing_counts(trace) -> Dict[int, int]:
+    out: Dict[int, int] = {}
+    for ev in trace.events:
+        if ev.source == ALERT_SOURCE and ev.kind.endswith("/firing"):
+            out[ev.node] = out.get(ev.node, 0) + 1
+    return out
+
+
+_CSS = """
+body{font:14px/1.45 system-ui,sans-serif;margin:24px;color:#1c2733}
+h1{font-size:20px} h2{font-size:16px;margin-top:28px}
+table{border-collapse:collapse;margin-top:8px}
+td,th{padding:4px 10px;border-bottom:1px solid #dde4ea;text-align:left;
+      vertical-align:middle}
+th{font-weight:600;color:#51616f}
+.mut{fill:#8a97a3;color:#8a97a3;font-size:11px}
+.spark{background:#f6f8fa;border-radius:3px}
+.bad{color:#b3261e;font-weight:600} .ok{color:#1b7f4d;font-weight:600}
+.pill{display:inline-block;padding:1px 8px;border-radius:9px;
+      background:#eef2f5;margin-right:4px;font-size:12px}
+"""
+
+
+def render_dashboard(trace, path: str,
+                     title: Optional[str] = None) -> int:
+    """Write the HTML fleet-health report; returns bytes written."""
+    series = _node_series(trace)
+    firing = _firing_counts(trace)
+    timeline = build_timeline(trace)
+    incidents = build_incidents(timeline)
+    score = score_alerts(trace)
+    esc = trace.meta.get("escalation") or {}
+    patience = esc.get("patience_s", math.nan)
+    topo = trace.meta.get("topology", "?")
+    title = title or f"Lit Silicon fleet health — {topo}"
+    has_tail = any(_finite(s["tail"]) for s in series.values())
+
+    rows = []
+    for n in sorted(series):
+        s = series[n]
+        nf = firing.get(n, 0)
+        cls = "bad" if nf else "ok"
+        cells = [f"<td>node{n}</td>"]
+        for key, color in (("temp", "#b3261e"), ("power", "#2a6fb0"),
+                           ("cap", "#7a5af8"), ("lead", "#c77d00")):
+            fin = _finite(s[key])
+            last = fin[-1] if fin else math.nan
+            cells.append(f"<td>{_spark(s[key], color)}<br>"
+                         f'<span class="mut">last {_fmt(last)}</span></td>')
+        cells.append(f'<td class="{cls}">{nf}</td>')
+        rows.append("<tr>" + "".join(cells) + "</tr>")
+
+    tail_rows = ""
+    if has_tail:
+        trows = []
+        for n in sorted(series):
+            fin = _finite(series[n]["tail"])
+            last = fin[-1] if fin else math.nan
+            peak = max(fin) if fin else math.nan
+            trows.append(
+                f"<tr><td>node{n}</td>"
+                f'<td>{_spark(series[n]["tail"], "#1b7f4d")}</td>'
+                f"<td>{_fmt(last, ' s')}</td>"
+                f"<td>{_fmt(peak, ' s')}</td></tr>")
+        tail_rows = ("<h2>Serve tail signal</h2><table>"
+                     "<tr><th>node</th><th>tail signal</th><th>last</th>"
+                     "<th>peak</th></tr>" + "".join(trows) + "</table>")
+
+    inc_rows = []
+    for inc in incidents:
+        kinds = "".join(f'<span class="pill">{html.escape(k)}</span>'
+                        for k in inc.fault_kinds) or "—"
+        rules = "".join(f'<span class="pill">{html.escape(r)}</span>'
+                        for r in inc.alert_rules) or "—"
+        state = ("drained" if inc.drained
+                 else ("open" if inc.open else "resolved"))
+        inc_rows.append(
+            f"<tr><td>node{inc.node}</td><td>{_fmt(inc.t_open, ' s')}</td>"
+            f"<td>{_fmt(inc.t_close, ' s')}</td><td>{kinds}</td>"
+            f"<td>{rules}</td><td>{state}</td>"
+            f"<td>{len(inc.events)}</td></tr>")
+    inc_table = ("<table><tr><th>node</th><th>open</th><th>close</th>"
+                 "<th>faults</th><th>alert rules</th><th>state</th>"
+                 "<th>events</th></tr>" + "".join(inc_rows) + "</table>"
+                 if inc_rows else "<p>No incidents.</p>")
+
+    fp = score["false_positives"]
+    tta = score["time_to_alert_s"]
+    fp_cls = "ok" if fp == 0 else "bad"
+    tta_txt = _fmt(tta, " s")
+    if patience == patience and tta == tta:
+        tta_cls = "ok" if tta <= patience else "bad"
+        tta_txt += f" (patience {_fmt(patience, ' s')})"
+    else:
+        tta_cls = ""
+    doc = f"""<!doctype html><html><head><meta charset="utf-8">
+<title>{html.escape(title)}</title><style>{_CSS}</style></head><body>
+<h1>{html.escape(title)}</h1>
+<p>{len(trace.samples)} node samples · {len(trace.fleet)} fleet samples ·
+{len(trace.events)} events · {len(trace.requests)} requests ·
+sensor <code>{html.escape(str(trace.meta.get('sensor', {})))}</code></p>
+<p>Alerts firing: <b>{int(score['n_alerts_firing'])}</b> ·
+false positives: <span class="{fp_cls}">{int(fp)}</span> ·
+time-to-alert: <span class="{tta_cls}">{tta_txt}</span></p>
+<h2>Node health</h2>
+<table><tr><th>node</th><th>temp (max °C)</th><th>power (W)</th>
+<th>cap (mean W)</th><th>lead (s)</th><th>alerts</th></tr>
+{''.join(rows)}</table>
+{tail_rows}
+<h2>Incidents</h2>
+{inc_table}
+</body></html>"""
+    data = doc.encode()
+    with open(path, "wb") as f:
+        f.write(data)
+    return len(data)
+
+
+def terminal_summary(trace, patience_s: float = math.nan) -> str:
+    """The dashboard's story as plain text for the CLI."""
+    if patience_s != patience_s:
+        patience_s = float(
+            (trace.meta.get("escalation") or {}).get("patience_s",
+                                                     math.nan))
+    score = score_alerts(trace, patience_s=patience_s)
+    timeline = build_timeline(trace)
+    incidents = build_incidents(timeline)
+    firing = _firing_counts(trace)
+    lines = [f"fleet: {trace.n_nodes} node(s), topology "
+             f"{trace.meta.get('topology', '?')}, "
+             f"{len(trace.fleet)} fleet sample(s), "
+             f"{len(trace.events)} event(s)"]
+    lines.append(
+        f"alerts: {int(score['n_alerts_firing'])} firing "
+        f"({int(score['n_alerts_pending'])} pending, "
+        f"{int(score['n_alerts_resolved'])} resolved), "
+        f"{int(score['false_positives'])} false positive(s)")
+    tta = score["time_to_alert_s"]
+    if tta == tta:
+        extra = ""
+        if patience_s == patience_s:
+            verdict = "within" if tta <= patience_s else "BEYOND"
+            extra = f" — {verdict} patience {patience_s:g}s"
+        lines.append(f"time-to-alert: {tta:.3g}s{extra}")
+    for n in sorted(firing):
+        lines.append(f"  node{n}: {firing[n]} firing alert(s)")
+    for inc in incidents:
+        state = ("drained" if inc.drained
+                 else ("open" if inc.open else "resolved"))
+        lines.append(
+            f"incident node{inc.node}: t={inc.t_open:.3g}s"
+            + (f"→{inc.t_close:.3g}s" if not inc.open else "→…")
+            + f" [{state}] faults={','.join(inc.fault_kinds) or '-'}"
+              f" rules={','.join(inc.alert_rules) or '-'}")
+    if not incidents:
+        lines.append("no incidents")
+    return "\n".join(lines)

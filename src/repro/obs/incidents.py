@@ -1,0 +1,267 @@
+"""Incident timelines: one ordered, replayable event log per run.
+
+A recorded trace carries three event vocabularies — injected fault onsets
+(``source="fault"``), EscalationPolicy stage transitions (``source=
+"escalation"``) and alert lifecycle transitions (``source="alert"``) —
+plus the manager's mitigation actions.  :func:`build_timeline` merges them
+onto one simulated-seconds axis (actions, which carry only an iteration
+number, are timestamped from the fleet samples' cumulative clock), and
+:func:`build_incidents` groups the per-node story: an incident opens at
+the first fault onset or alert on a node, collects everything that
+happens to that node, and closes when its last alert resolves or the
+node is drained.
+
+Because the timeline is a pure function of the trace, it is replayable:
+rebuilding it from the same JSONL yields the identical log — the same
+idiom as cap-schedule and drain replay.
+
+:func:`score_alerts` scores the alert stream against fault ground truth:
+**time-to-alert** (first unrecoverable onset → first firing alert on that
+node — the number gated against the escalation policy's ``patience_s``)
+and the **false-positive count** (firing alerts on nodes with no fault
+active at/before the firing time).  Run it over traces degraded with
+``repro.telemetry.degrade`` to measure how detection quality falls with
+sensor fidelity.
+
+Node-id caveat: fault/escalation events carry *global* node ids while
+alert labels are *local* fleet indices; the two coincide until a second
+post-drain epoch remaps survivors (none of the registered scenarios do).
+"""
+from __future__ import annotations
+
+import json
+import math
+from dataclasses import asdict, dataclass, field
+from typing import Dict, List, Optional
+
+from repro.obs.rules import ALERT_SOURCE
+
+__all__ = ["INCIDENTS_FORMAT", "INCIDENTS_VERSION", "TimelineEvent",
+           "Incident", "build_timeline", "build_incidents",
+           "score_alerts", "save_incidents"]
+
+INCIDENTS_FORMAT = "lit-silicon-incidents"
+INCIDENTS_VERSION = 1
+
+
+@dataclass
+class TimelineEvent:
+    """One entry of the merged event log."""
+
+    t: float                        # simulated seconds
+    iteration: int
+    source: str                     # "fault" | "escalation" | "alert" | "action"
+    kind: str                       # fault kind / stage / "rule/state" / action
+    node: int                       # -1: fleet-scope
+    device: int = -1
+    value: float = math.nan
+
+
+@dataclass
+class Incident:
+    """One node's correlated story: opened by the first fault or alert,
+    closed by the last alert resolving or the node draining."""
+
+    node: int
+    t_open: float
+    t_close: float = math.nan       # NaN: still open at end of trace
+    events: List[TimelineEvent] = field(default_factory=list)
+    fault_kinds: List[str] = field(default_factory=list)
+    alert_rules: List[str] = field(default_factory=list)
+    drained: bool = False
+
+    @property
+    def open(self) -> bool:
+        return self.t_close != self.t_close
+
+
+def _iteration_clock(trace) -> Dict[int, float]:
+    """iteration -> simulated seconds *after* that iteration committed,
+    accumulated from the sampled fleet rows (the pipeline clock's basis)."""
+    clock, out = 0.0, {}
+    for fs in trace.fleet:
+        clock += float(fs.t_fleet)
+        out[fs.iteration] = clock
+    return out
+
+
+def build_timeline(trace, include_actions: bool = True) -> List[TimelineEvent]:
+    """Merge events (+ optionally manager actions) onto one time axis,
+    ordered by (t, iteration) with ties kept in recording order."""
+    out: List[TimelineEvent] = []
+    for ev in trace.events:
+        out.append(TimelineEvent(
+            t=float(ev.t_sim), iteration=int(ev.iteration),
+            source=ev.source, kind=ev.kind, node=int(ev.node),
+            device=int(ev.device), value=float(ev.value)))
+    if include_actions:
+        clock = _iteration_clock(trace)
+        for a in trace.actions:
+            out.append(TimelineEvent(
+                t=clock.get(a.iteration, math.nan),
+                iteration=int(a.iteration), source="action", kind=a.kind,
+                node=int(a.node),
+                value=float(len(a.values))))
+    def _key(e: TimelineEvent):
+        return (e.t if e.t == e.t else math.inf, e.iteration)
+    out.sort(key=_key)              # stable: ties keep recording order
+    return out
+
+
+def build_incidents(timeline: List[TimelineEvent]) -> List[Incident]:
+    """Group the timeline into per-node incidents (see module docstring).
+    Manager actions never open an incident but are folded into open ones
+    on their node."""
+    open_by_node: Dict[int, Incident] = {}
+    firing: Dict[int, set] = {}     # node -> rules currently firing
+    done: List[Incident] = []
+
+    def _close(inc: Incident, t: float) -> None:
+        inc.t_close = float(t)
+        done.append(inc)
+        del open_by_node[inc.node]
+
+    for ev in timeline:
+        n = ev.node
+        if n < 0:
+            continue
+        inc = open_by_node.get(n)
+        opening = (ev.source == "fault"
+                   or (ev.source == ALERT_SOURCE
+                       and not ev.kind.endswith("/resolved"))
+                   or ev.source == "escalation")
+        if inc is None:
+            if not opening:
+                continue            # actions alone don't open incidents
+            inc = Incident(node=n, t_open=float(ev.t))
+            open_by_node[n] = inc
+            firing.setdefault(n, set())
+        inc.events.append(ev)
+        if ev.source == "fault" and ev.kind not in inc.fault_kinds:
+            inc.fault_kinds.append(ev.kind)
+        if ev.source == ALERT_SOURCE:
+            rule, _, state = ev.kind.rpartition("/")
+            if rule not in inc.alert_rules:
+                inc.alert_rules.append(rule)
+            if state == "firing":
+                firing[n].add(rule)
+            elif state == "resolved":
+                firing[n].discard(rule)
+                # story over: nothing firing and no fault/escalation keeps
+                # the node's incident open
+                if not firing[n] and not inc.fault_kinds:
+                    _close(inc, ev.t)
+        if ev.source == "escalation" and ev.kind == "drain":
+            inc.drained = True
+            _close(inc, ev.t)
+    done.extend(open_by_node.values())
+    done.sort(key=lambda i: i.t_open)
+    return done
+
+
+def score_alerts(trace, patience_s: float = math.nan) -> dict:
+    """Score the recorded alert stream against fault ground truth.
+
+    Returns a NaN-free-where-possible dict:
+
+      * ``n_alerts_firing`` / ``n_alerts_pending`` / ``n_alerts_resolved``
+      * ``false_positives`` — firing alerts on a node with no fault onset
+        at/before the firing time (a node-less firing counts unless *any*
+        fault preceded it)
+      * ``time_to_alert_s`` — first unrecoverable onset → first firing
+        alert on that node (NaN when never alerted)
+      * ``detected`` — 1.0 when every unrecoverable onset eventually had a
+        firing alert on its node
+      * ``within_patience`` — 1.0 when ``time_to_alert_s <= patience_s``
+        (NaN patience → NaN)
+      * ``per_fault`` — one entry per fault onset with its own
+        time-to-alert
+    """
+    from repro.core.faults import UNRECOVERABLE_KINDS
+
+    alerts = [ev for ev in trace.events if ev.source == ALERT_SOURCE]
+    faults = [ev for ev in trace.events if ev.source == "fault"]
+    fir = [ev for ev in alerts if ev.kind.endswith("/firing")]
+    n_pending = sum(1 for ev in alerts if ev.kind.endswith("/pending"))
+    n_resolved = sum(1 for ev in alerts if ev.kind.endswith("/resolved"))
+
+    first_onset: Dict[int, float] = {}
+    for ev in faults:
+        if ev.node not in first_onset or ev.t_sim < first_onset[ev.node]:
+            first_onset[ev.node] = float(ev.t_sim)
+    any_onset = min(first_onset.values()) if first_onset else math.inf
+
+    false_pos = 0
+    for ev in fir:
+        if ev.node >= 0:
+            onset = first_onset.get(ev.node, math.inf)
+        else:
+            onset = any_onset
+        if ev.t_sim < onset:
+            false_pos += 1
+
+    per_fault: List[dict] = []
+    ttas: List[float] = []
+    for ev in faults:
+        hits = [a.t_sim - ev.t_sim for a in fir
+                if a.node == ev.node and a.t_sim >= ev.t_sim]
+        tta = min(hits) if hits else math.nan
+        per_fault.append({"kind": ev.kind, "node": ev.node,
+                          "onset_t": float(ev.t_sim),
+                          "time_to_alert_s": tta})
+        if ev.kind in UNRECOVERABLE_KINDS:
+            ttas.append(tta)
+
+    detected = (1.0 if ttas and all(t == t for t in ttas)
+                else (0.0 if ttas else math.nan))
+    tta_first = ttas[0] if ttas else math.nan
+    within = math.nan
+    if patience_s == patience_s and tta_first == tta_first:
+        within = 1.0 if tta_first <= patience_s else 0.0
+    return {"n_alerts_firing": float(len(fir)),
+            "n_alerts_pending": float(n_pending),
+            "n_alerts_resolved": float(n_resolved),
+            "false_positives": float(false_pos),
+            "time_to_alert_s": tta_first,
+            "detected": detected,
+            "within_patience": within,
+            "per_fault": per_fault}
+
+
+def save_incidents(trace, path: str,
+                   extra_meta: Optional[dict] = None) -> int:
+    """Write the timeline + incident groupings as versioned JSONL; returns
+    the line count.  One header, then ``{"type": "timeline", ...}`` rows
+    in order, then ``{"type": "incident", ...}`` summaries."""
+    timeline = build_timeline(trace)
+    incidents = build_incidents(timeline)
+    score = score_alerts(trace)
+
+    def _nn(x):                     # NaN -> null, everything else verbatim
+        return None if isinstance(x, float) and x != x else x
+
+    lines = 0
+    with open(path, "w") as f:
+        meta = dict(extra_meta or {})
+        meta["score"] = {k: _nn(v) for k, v in score.items()
+                         if k != "per_fault"}
+        f.write(json.dumps({"format": INCIDENTS_FORMAT,
+                            "version": INCIDENTS_VERSION,
+                            "meta": meta}) + "\n")
+        lines += 1
+        for ev in timeline:
+            d = asdict(ev)
+            d = {k: _nn(v) for k, v in d.items()}
+            d["type"] = "timeline"
+            f.write(json.dumps(d) + "\n")
+            lines += 1
+        for inc in incidents:
+            f.write(json.dumps({
+                "type": "incident", "node": inc.node,
+                "t_open": _nn(inc.t_open), "t_close": _nn(inc.t_close),
+                "n_events": len(inc.events),
+                "fault_kinds": inc.fault_kinds,
+                "alert_rules": inc.alert_rules,
+                "drained": inc.drained}) + "\n")
+            lines += 1
+    return lines

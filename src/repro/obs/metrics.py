@@ -1,0 +1,379 @@
+"""Streaming metrics registry: the Prometheus-shaped signal layer.
+
+``MetricsRegistry`` holds Counter / Gauge / Histogram families keyed by a
+metric name from the :data:`METRICS` catalog, each with labeled children
+(``node``/``gpu``/``kind``-style label sets).  The registry is fed from
+``TelemetryCollector`` hooks through :class:`~repro.obs.pipeline.ObsPipeline`
+— the hooks fire identically under every engine (event / batched / vector /
+jax fallback), so the series a rule evaluates are engine-independent by
+construction.
+
+Design constraints, inherited from the repo's replay idiom:
+
+  * updates are a pure function of the ingested record stream — no wall
+    clocks, no RNG — so replaying a recorded JSONL trace through a fresh
+    registry reproduces every series (and every alert computed from them)
+    bit-for-bit;
+  * histograms use *fixed* bucket boundaries plus a bounded sample window
+    for quantiles, so memory stays O(buckets + window) on unbounded runs;
+  * NaN observations are counted (``nan_count``) but never poison buckets
+    or quantiles — a dead sensor degrades a series, it must not corrupt it.
+
+Export surfaces: :meth:`MetricsRegistry.exposition` (Prometheus text
+format 0.0.4) and :meth:`MetricsRegistry.snapshot_jsonl` (a versioned
+JSONL snapshot, one series per line — the machine-readable artifact the
+dashboard and CI consume).
+"""
+from __future__ import annotations
+
+import json
+import math
+from typing import Dict, Iterable, List, Optional, Tuple
+
+__all__ = ["METRICS", "METRICS_FORMAT", "METRICS_VERSION", "Counter",
+           "Gauge", "Histogram", "MetricsRegistry", "DEFAULT_BUCKETS"]
+
+METRICS_FORMAT = "lit-silicon-metrics"
+METRICS_VERSION = 1
+
+# The metric catalog: every series the pipeline can emit, with its type and
+# help text.  scripts/check_docs.py enforces that each name is documented
+# in docs/observability.md, so the catalog cannot silently grow past the
+# docs.  Label conventions: ``node`` (global node id), ``gpu`` (device
+# index within the node), ``kind``/``stage``/``rule``/``state`` for the
+# categorical counters, ``topology`` on the fleet series.
+METRICS: Dict[str, Tuple[str, str]] = {
+    "sim_iterations_total": (
+        "counter", "sampled iterations ingested by the pipeline"),
+    "node_step_seconds": (
+        "gauge", "per-node local iteration time (ground truth)"),
+    "node_time_obs_seconds": (
+        "gauge", "per-node iteration time as the fleet sensor observed it "
+                 "(NaN while the node's sensor is dead) — the straggler-"
+                 "ratio rule input"),
+    "node_lead_seconds": (
+        "gauge", "per-node lead estimate (barrier-wait shaped)"),
+    "node_power_watts": (
+        "gauge", "summed device power per node"),
+    "fleet_step_seconds": (
+        "gauge", "fleet-committed iteration time (barrier-stretched)"),
+    "device_temp_celsius": (
+        "gauge", "observed device temperature"),
+    "device_power_watts": (
+        "gauge", "observed device power draw"),
+    "device_cap_watts": (
+        "gauge", "manager-set device power cap"),
+    "device_freq_ghz": (
+        "gauge", "device clock (DVFS governor state)"),
+    "serve_tail_seconds": (
+        "gauge", "per-node serving tail signal (TTFT-quantile ∨ head-of-"
+                 "line age) — the SLO burn-rate rule input"),
+    "manager_actions_total": (
+        "counter", "power-manager mitigation actions by kind"),
+    "fault_events_total": (
+        "counter", "injected fault onsets by kind"),
+    "escalation_events_total": (
+        "counter", "escalation stage transitions by stage"),
+    "alerts_total": (
+        "counter", "alert state transitions by rule and state"),
+    "requests_completed_total": (
+        "counter", "serving requests recorded (completed + flushed)"),
+    "request_ttft_seconds": (
+        "histogram", "time to first token over recorded requests"),
+    "iteration_seconds": (
+        "histogram", "distribution of committed iteration times"),
+}
+
+# Geometric bucket ladder covering the simulator's dynamic range: kernel-
+# scale milliseconds up through multi-second healing stalls and TTFTs.
+DEFAULT_BUCKETS: Tuple[float, ...] = (
+    0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 0.5,
+    1.0, 2.5, 5.0, 10.0, 25.0, 60.0)
+
+Labels = Tuple[Tuple[str, str], ...]
+
+
+def _labels_key(labels: Optional[Dict[str, object]]) -> Labels:
+    if not labels:
+        return ()
+    return tuple(sorted((str(k), str(v)) for k, v in labels.items()))
+
+
+def _fmt_labels(key: Labels) -> str:
+    if not key:
+        return ""
+    return "{" + ",".join(f'{k}="{v}"' for k, v in key) + "}"
+
+
+def _fmt_value(v: float) -> str:
+    if v != v:
+        return "NaN"
+    if math.isinf(v):
+        return "+Inf" if v > 0 else "-Inf"
+    return repr(float(v))
+
+
+class Counter:
+    """Monotone labeled counter."""
+
+    kind = "counter"
+
+    def __init__(self, name: str, help: str = ""):
+        self.name = name
+        self.help = help
+        self.children: Dict[Labels, float] = {}
+
+    def inc(self, labels: Optional[Dict[str, object]] = None,
+            amount: float = 1.0) -> None:
+        if amount < 0:
+            raise ValueError(f"{self.name}: counters only go up "
+                             f"(inc {amount})")
+        key = _labels_key(labels)
+        self.children[key] = self.children.get(key, 0.0) + float(amount)
+
+    def value(self, labels: Optional[Dict[str, object]] = None) -> float:
+        return self.children.get(_labels_key(labels), 0.0)
+
+    def total(self) -> float:
+        return float(sum(self.children.values()))
+
+    # ------------------------------------------------------------- export
+    def expose(self) -> Iterable[str]:
+        for key in sorted(self.children):
+            yield f"{self.name}{_fmt_labels(key)} " \
+                  f"{_fmt_value(self.children[key])}"
+
+    def snapshot_rows(self) -> Iterable[dict]:
+        for key in sorted(self.children):
+            yield {"metric": self.name, "type": self.kind,
+                   "labels": dict(key), "value": self.children[key]}
+
+
+class Gauge:
+    """Labeled last-value gauge.  NaN is a legal value (a dead sensor's
+    reading) — rules treat it as condition-false, never as a crash."""
+
+    kind = "gauge"
+
+    def __init__(self, name: str, help: str = ""):
+        self.name = name
+        self.help = help
+        self.children: Dict[Labels, float] = {}
+
+    def set(self, value: float,
+            labels: Optional[Dict[str, object]] = None) -> None:
+        self.children[_labels_key(labels)] = float(value)
+
+    def value(self, labels: Optional[Dict[str, object]] = None) -> float:
+        return self.children.get(_labels_key(labels), math.nan)
+
+    def items(self) -> List[Tuple[Labels, float]]:
+        return sorted(self.children.items())
+
+    # ------------------------------------------------------------- export
+    def expose(self) -> Iterable[str]:
+        for key in sorted(self.children):
+            v = self.children[key]
+            yield f"{self.name}{_fmt_labels(key)} {_fmt_value(v)}"
+
+    def snapshot_rows(self) -> Iterable[dict]:
+        for key in sorted(self.children):
+            v = self.children[key]
+            yield {"metric": self.name, "type": self.kind,
+                   "labels": dict(key), "value": (None if v != v else v)}
+
+
+class _HistChild:
+    """One labeled histogram series: fixed cumulative buckets + a bounded
+    window of recent finite samples for streaming quantiles."""
+
+    def __init__(self, buckets: Tuple[float, ...], window: int):
+        self.buckets = buckets
+        self.bucket_counts = [0] * (len(buckets) + 1)   # +1: the +Inf bucket
+        self.count = 0                                   # finite observations
+        self.sum = 0.0
+        self.nan_count = 0
+        self.window = int(window)
+        self._recent: List[float] = []                   # ring of last W
+        self._recent_pos = 0
+
+    def observe(self, value: float) -> None:
+        v = float(value)
+        if v != v:                    # NaN: counted, never binned/windowed
+            self.nan_count += 1
+            return
+        self.count += 1
+        self.sum += v
+        i = 0
+        for i, ub in enumerate(self.buckets):
+            if v <= ub:
+                break
+        else:
+            i = len(self.buckets)
+        self.bucket_counts[i] += 1
+        if len(self._recent) < self.window:
+            self._recent.append(v)
+        else:                          # fixed-size ring, no deque import
+            self._recent[self._recent_pos] = v
+            self._recent_pos = (self._recent_pos + 1) % self.window
+
+    def quantile(self, q: float) -> float:
+        """Windowed quantile over the most recent finite samples (nearest-
+        rank on the sorted window).  Empty window → NaN; a single sample is
+        every quantile of itself."""
+        if not 0.0 <= q <= 1.0:
+            raise ValueError(f"quantile must be in [0, 1], got {q}")
+        if not self._recent:
+            return math.nan
+        xs = sorted(self._recent)
+        idx = min(len(xs) - 1, max(0, math.ceil(q * len(xs)) - 1))
+        return xs[idx]
+
+    def cumulative(self) -> List[int]:
+        out, acc = [], 0
+        for c in self.bucket_counts:
+            acc += c
+            out.append(acc)
+        return out
+
+
+class Histogram:
+    """Labeled histogram with fixed buckets and windowed quantiles."""
+
+    kind = "histogram"
+
+    def __init__(self, name: str, help: str = "",
+                 buckets: Tuple[float, ...] = DEFAULT_BUCKETS,
+                 window: int = 128):
+        if list(buckets) != sorted(set(buckets)):
+            raise ValueError(f"{name}: buckets must be strictly increasing")
+        self.name = name
+        self.help = help
+        self.buckets = tuple(float(b) for b in buckets)
+        self.window = int(window)
+        self.children: Dict[Labels, _HistChild] = {}
+
+    def child(self, labels: Optional[Dict[str, object]] = None) -> _HistChild:
+        key = _labels_key(labels)
+        if key not in self.children:
+            self.children[key] = _HistChild(self.buckets, self.window)
+        return self.children[key]
+
+    def observe(self, value: float,
+                labels: Optional[Dict[str, object]] = None) -> None:
+        self.child(labels).observe(value)
+
+    def quantile(self, q: float,
+                 labels: Optional[Dict[str, object]] = None) -> float:
+        key = _labels_key(labels)
+        if key not in self.children:
+            return math.nan
+        return self.children[key].quantile(q)
+
+    # ------------------------------------------------------------- export
+    def expose(self) -> Iterable[str]:
+        for key in sorted(self.children):
+            ch = self.children[key]
+            cum = ch.cumulative()
+            for ub, c in zip(self.buckets, cum):
+                lk = key + (("le", _fmt_value(ub)),)
+                yield f"{self.name}_bucket{_fmt_labels(lk)} {c}"
+            lk = key + (("le", "+Inf"),)
+            yield f"{self.name}_bucket{_fmt_labels(lk)} {cum[-1]}"
+            yield f"{self.name}_sum{_fmt_labels(key)} {_fmt_value(ch.sum)}"
+            yield f"{self.name}_count{_fmt_labels(key)} {ch.count}"
+
+    def snapshot_rows(self) -> Iterable[dict]:
+        for key in sorted(self.children):
+            ch = self.children[key]
+            p50, p99 = ch.quantile(0.5), ch.quantile(0.99)
+            yield {"metric": self.name, "type": self.kind,
+                   "labels": dict(key),
+                   "count": ch.count, "sum": ch.sum,
+                   "nan_count": ch.nan_count,
+                   "buckets": {_fmt_value(ub): c for ub, c in
+                               zip(self.buckets, ch.cumulative())},
+                   "p50": (None if p50 != p50 else p50),
+                   "p99": (None if p99 != p99 else p99)}
+
+
+class MetricsRegistry:
+    """All metric families, instantiated lazily from the catalog."""
+
+    def __init__(self, hist_window: int = 128,
+                 buckets: Tuple[float, ...] = DEFAULT_BUCKETS):
+        self.hist_window = int(hist_window)
+        self.buckets = tuple(buckets)
+        self._families: Dict[str, object] = {}
+
+    # ------------------------------------------------------------- access
+    def _family(self, name: str):
+        fam = self._families.get(name)
+        if fam is None:
+            if name not in METRICS:
+                raise KeyError(f"unknown metric {name!r} (catalog: "
+                               f"{sorted(METRICS)})")
+            kind, help_ = METRICS[name]
+            if kind == "counter":
+                fam = Counter(name, help_)
+            elif kind == "gauge":
+                fam = Gauge(name, help_)
+            else:
+                fam = Histogram(name, help_, buckets=self.buckets,
+                                window=self.hist_window)
+            self._families[name] = fam
+        return fam
+
+    def counter(self, name: str) -> Counter:
+        fam = self._family(name)
+        if not isinstance(fam, Counter):
+            raise TypeError(f"{name} is a {fam.kind}, not a counter")
+        return fam
+
+    def gauge(self, name: str) -> Gauge:
+        fam = self._family(name)
+        if not isinstance(fam, Gauge):
+            raise TypeError(f"{name} is a {fam.kind}, not a gauge")
+        return fam
+
+    def histogram(self, name: str) -> Histogram:
+        fam = self._family(name)
+        if not isinstance(fam, Histogram):
+            raise TypeError(f"{name} is a {fam.kind}, not a histogram")
+        return fam
+
+    def series(self, name: str) -> List[Tuple[Dict[str, str], float]]:
+        """(labels dict, value) pairs for a gauge family — the rule
+        engine's read path.  Unregistered families read as empty."""
+        fam = self._families.get(name)
+        if fam is None or not isinstance(fam, Gauge):
+            return []
+        return [(dict(k), v) for k, v in fam.items()]
+
+    # ------------------------------------------------------------- export
+    def exposition(self) -> str:
+        """Prometheus text exposition format 0.0.4."""
+        lines: List[str] = []
+        for name in sorted(self._families):
+            fam = self._families[name]
+            lines.append(f"# HELP {name} {fam.help}")
+            lines.append(f"# TYPE {name} {fam.kind}")
+            lines.extend(fam.expose())
+        return "\n".join(lines) + ("\n" if lines else "")
+
+    def snapshot_jsonl(self, path: str,
+                       extra_meta: Optional[dict] = None) -> int:
+        """Versioned JSONL snapshot: a header line then one line per
+        labeled series.  Returns the line count."""
+        meta = dict(extra_meta or {})
+        lines = 0
+        with open(path, "w") as f:
+            f.write(json.dumps({"format": METRICS_FORMAT,
+                                "version": METRICS_VERSION,
+                                "meta": meta}) + "\n")
+            lines += 1
+            for name in sorted(self._families):
+                for row in self._families[name].snapshot_rows():
+                    f.write(json.dumps(row) + "\n")
+                    lines += 1
+        return lines

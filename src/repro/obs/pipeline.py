@@ -1,0 +1,334 @@
+"""ObsPipeline: collector hooks → metrics registry → alert engine.
+
+The pipeline is a *pure observer* over ``TelemetryCollector`` records: it
+registers itself on ``collector.observers`` and is handed every record the
+collector appends (node/fleet samples, manager actions, fault/escalation
+events, serving requests).  It never touches the simulators, so attaching
+it cannot perturb physics or RNG streams — the same records are produced
+with or without observability.
+
+Per ingested record it updates the :class:`~repro.obs.metrics.MetricsRegistry`
+gauges/counters/histograms, and once per sampled iteration (at the fleet
+sample in fleet scope, at each node sample in bare-node scope) it runs the
+:class:`~repro.obs.rules.AlertEngine`.  Alert transitions are persisted
+back into the collector's event ring as ``FaultRecord`` rows with
+``source="alert"`` — the same JSONL ``event`` lines fault onsets and
+escalation decisions already use, so the trace format version stays 1 and
+every existing reader skips them.
+
+The pipeline clock is simulated seconds accumulated from the records
+themselves (``t_fleet`` per fleet sample, realigned by event ``t_sim`` —
+a drain's heal time enters through the escalation ``restart`` event), so
+:func:`replay_alerts` can feed a *recorded* trace through a fresh pipeline
+and reproduce every live alert transition bit-for-bit — the exact contract
+``replay_escalation`` already established for drain decisions, verified by
+:func:`alert_replay_matches`.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import List, Optional, Set
+
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.rules import (ALERT_SOURCE, AlertEngine, AlertRule,
+                             AlertTransition, default_rules)
+
+__all__ = ["ObservabilitySpec", "ObsPipeline", "replay_alerts",
+           "alert_replay_matches", "transitions_to_records"]
+
+
+@dataclass
+class ObservabilitySpec:
+    """The observability section of a Scenario (JSON round-trip like the
+    fault/escalation sections).  ``rules=None`` means the default Lit
+    Silicon rule set."""
+
+    rules: Optional[List[AlertRule]] = None
+    window: int = 128               # histogram quantile window (samples)
+    record_alerts: bool = True      # persist transitions into the trace
+
+    def validate(self) -> "ObservabilitySpec":
+        if self.window < 1:
+            raise ValueError("observability window must be >= 1")
+        if self.rules is not None:
+            for r in self.rules:
+                r.validate()
+        return self
+
+    def rule_objects(self) -> List[AlertRule]:
+        return list(self.rules) if self.rules is not None else default_rules()
+
+    # manual dict codec (used for trace meta, mirroring EscalationConfig)
+    def to_dict(self) -> dict:
+        return {"rules": (None if self.rules is None
+                          else [r.to_dict() for r in self.rules]),
+                "window": self.window,
+                "record_alerts": self.record_alerts}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ObservabilitySpec":
+        d = dict(d)
+        rules = d.pop("rules", None)
+        names = {"window", "record_alerts"}
+        unknown = sorted(set(d) - names)
+        if unknown:
+            raise ValueError(f"unknown ObservabilitySpec key(s) {unknown}")
+        spec = cls(**d)
+        if rules is not None:
+            spec.rules = [r if isinstance(r, AlertRule)
+                          else AlertRule.from_dict(r) for r in rules]
+        return spec.validate()
+
+
+# gauge families labeled by (local) node index — trimmed when the fleet
+# shrinks after a drain so stale faulty-node readings can't hold an alert
+# firing or skew the fleet median forever
+_NODE_GAUGES = ("node_step_seconds", "node_time_obs_seconds",
+                "node_lead_seconds", "node_power_watts",
+                "serve_tail_seconds", "device_temp_celsius",
+                "device_power_watts", "device_cap_watts", "device_freq_ghz")
+
+
+class ObsPipeline:
+    """One live (or replayed) observability session.
+
+    ``fleet_scope=True`` (cluster / serve): rules evaluate once per fleet
+    sample, after the iteration's node samples and fault onsets were
+    ingested — the same intra-iteration order the collector's hooks fire
+    in live, which is what makes replay bit-for-bit.  ``fleet_scope=
+    False`` (bare NodeSim): rules evaluate at every node sample.
+    """
+
+    def __init__(self, spec: Optional[ObservabilitySpec] = None,
+                 collector=None, fleet_scope: bool = True):
+        self.spec = (spec if spec is not None
+                     else ObservabilitySpec()).validate()
+        self.registry = MetricsRegistry(hist_window=self.spec.window)
+        self.engine = AlertEngine(self.spec.rule_objects())
+        self.collector = collector
+        self.fleet_scope = bool(fleet_scope)
+        self.clock = 0.0                # simulated seconds, record-derived
+
+    # ------------------------------------------------------------ attaching
+    def attach(self, collector) -> "ObsPipeline":
+        """Register on the collector's observer list and stamp the spec
+        into trace meta so offline tooling replays the same rule set."""
+        collector.observers.append(self)
+        collector.meta["observability"] = self.spec.to_dict()
+        self.collector = collector
+        return self
+
+    # -------------------------------------------------------------- queries
+    @property
+    def transitions(self) -> List[AlertTransition]:
+        return self.engine.transitions
+
+    def firing_nodes(self) -> Set[int]:
+        return self.engine.firing_nodes()
+
+    # ---------------------------------------------------------------- hooks
+    def on_node_sample(self, s) -> None:
+        reg = self.registry
+        lb = {"node": s.node}
+        reg.gauge("node_step_seconds").set(s.t_local, lb)
+        reg.histogram("iteration_seconds").observe(s.t_wall, lb)
+        for g in range(len(s.power)):
+            glb = {"node": s.node, "gpu": g}
+            reg.gauge("device_temp_celsius").set(float(s.temp[g]), glb)
+            reg.gauge("device_power_watts").set(float(s.power[g]), glb)
+            reg.gauge("device_cap_watts").set(float(s.cap[g]), glb)
+            reg.gauge("device_freq_ghz").set(float(s.freq[g]), glb)
+        if not self.fleet_scope:
+            self.clock += float(s.t_wall)
+            reg.counter("sim_iterations_total").inc()
+            self._evaluate(s.iteration)
+
+    def on_fleet_sample(self, fs) -> None:
+        reg = self.registry
+        reg.gauge("fleet_step_seconds").set(
+            float(fs.t_fleet), {"topology": fs.topology})
+        n_nodes = len(fs.t_local)
+        for n in range(n_nodes):
+            lb = {"node": n}
+            reg.gauge("node_power_watts").set(float(fs.node_power[n]), lb)
+            if fs.t_obs is not None:
+                reg.gauge("node_time_obs_seconds").set(
+                    float(fs.t_obs[n]), lb)
+            if fs.lead_obs is not None:
+                reg.gauge("node_lead_seconds").set(
+                    float(fs.lead_obs[n]), lb)
+            tail = getattr(fs, "tail", None)
+            if tail is not None:
+                reg.gauge("serve_tail_seconds").set(float(tail[n]), lb)
+        self._trim_nodes(n_nodes)
+        self.clock += float(fs.t_fleet)
+        reg.counter("sim_iterations_total").inc()
+        if self.fleet_scope:
+            self._evaluate(fs.iteration)
+
+    def on_action(self, a) -> None:
+        self.registry.counter("manager_actions_total").inc(
+            {"kind": a.kind})
+
+    def on_event(self, ev) -> None:
+        if ev.source == ALERT_SOURCE:
+            return                   # our own output echoed back
+        # events carry the global simulated clock (a fault's scheduled
+        # onset; an escalation restart's post-heal time) — realigning here
+        # is how drain heal time enters the pipeline clock
+        self.clock = max(self.clock, float(ev.t_sim))
+        if ev.source == "escalation":
+            self.registry.counter("escalation_events_total").inc(
+                {"stage": ev.kind})
+        else:
+            self.registry.counter("fault_events_total").inc(
+                {"kind": ev.kind})
+
+    def on_request(self, r) -> None:
+        self.registry.counter("requests_completed_total").inc(
+            {"node": r.node})
+        self.registry.histogram("request_ttft_seconds").observe(
+            r.ttft, {"node": r.node})
+
+    # ------------------------------------------------------------ internals
+    def _trim_nodes(self, n_nodes: int) -> None:
+        """Drop node-labeled gauge children whose node index fell off the
+        fleet (post-drain rebuild): a drained node's last faulty reading
+        must not keep feeding the rules."""
+        for name in _NODE_GAUGES:
+            fam = self.registry._families.get(name)
+            if fam is None:
+                continue
+            drop = []
+            for key in fam.children:
+                node = dict(key).get("node")
+                if node is not None and int(node) >= n_nodes:
+                    drop.append(key)
+            for key in drop:
+                del fam.children[key]
+
+    def _evaluate(self, iteration: int) -> None:
+        for tr in self.engine.evaluate(int(iteration), self.clock,
+                                       self.registry):
+            self.registry.counter("alerts_total").inc(
+                {"rule": tr.rule, "state": tr.state})
+            if self.collector is not None and self.spec.record_alerts:
+                self.collector.on_fault_event(
+                    tr.iteration, tr.t, tr.kind, tr.node,
+                    device=tr.device, value=tr.value, source=ALERT_SOURCE)
+
+
+# --------------------------------------------------------------------------- #
+# offline replay — the bit-for-bit contract
+# --------------------------------------------------------------------------- #
+def replay_alerts(trace, spec: Optional[ObservabilitySpec] = None,
+                  fleet_scope: Optional[bool] = None) -> ObsPipeline:
+    """Feed a recorded trace through a fresh pipeline, reconstructing the
+    live intra-iteration hook order:
+
+        node samples → fault onsets → fleet sample (rules evaluate)
+        → manager actions → escalation events
+
+    ``spec`` defaults to the one stamped into ``trace.meta`` at recording
+    time (so a replay runs the same rules), falling back to the defaults.
+    Returns the replayed pipeline; its ``transitions`` are what
+    :func:`alert_replay_matches` compares against the recorded ones.
+    """
+    if spec is None:
+        meta = trace.meta.get("observability")
+        spec = (ObservabilitySpec.from_dict(meta) if meta
+                else ObservabilitySpec())
+    if fleet_scope is None:
+        fleet_scope = bool(trace.fleet)
+    pipe = ObsPipeline(spec, collector=None, fleet_scope=fleet_scope)
+    samples = list(trace.samples)
+    events = list(trace.events)
+    actions = list(trace.actions)
+    si = ei = ai = 0
+    for fs in trace.fleet:
+        while si < len(samples) and samples[si].iteration <= fs.iteration:
+            pipe.on_node_sample(samples[si])
+            si += 1
+        # fault onsets are reported before the fleet sample of the same
+        # iteration, and an elastic "restart" row carries the iteration it
+        # *precedes* (the first step of the new epoch — its post-heal
+        # timestamp realigns the clock before that step's sample);
+        # all other escalation (and alert) rows of the iteration come after
+        while ei < len(events) and (
+                events[ei].iteration < fs.iteration
+                or (events[ei].iteration == fs.iteration
+                    and (events[ei].source == "fault"
+                         or events[ei].kind == "restart"))):
+            pipe.on_event(events[ei])      # on_event skips source="alert"
+            ei += 1
+        pipe.on_fleet_sample(fs)
+        while ai < len(actions) and actions[ai].iteration <= fs.iteration:
+            pipe.on_action(actions[ai])
+            ai += 1
+        while ei < len(events) and events[ei].iteration <= fs.iteration:
+            pipe.on_event(events[ei])
+            ei += 1
+    # tail: records past the last fleet sample (or a fleet-less node trace)
+    for s in samples[si:]:
+        pipe.on_node_sample(s)
+    for ev in events[ei:]:
+        pipe.on_event(ev)
+    for a in actions[ai:]:
+        pipe.on_action(a)
+    for r in trace.requests:
+        pipe.on_request(r)
+    return pipe
+
+
+def transitions_to_records(transitions: List[AlertTransition]) -> list:
+    """Alert transitions as trace event rows (``FaultRecord`` with
+    ``source="alert"``) — what a live run with ``record_alerts`` would
+    have persisted.  Used to score a degraded trace's replayed alerts
+    through ``repro.obs.incidents.score_alerts``."""
+    from repro.telemetry.collector import FaultRecord
+    return [FaultRecord(iteration=tr.iteration, t_sim=tr.t, kind=tr.kind,
+                        node=tr.node, device=tr.device, value=tr.value,
+                        source=ALERT_SOURCE) for tr in transitions]
+
+
+def _feq(a: float, b: float) -> bool:
+    a, b = float(a), float(b)
+    if math.isnan(a) and math.isnan(b):
+        return True
+    return a == b
+
+
+def alert_replay_matches(trace, spec: Optional[ObservabilitySpec] = None,
+                         log=None) -> bool:
+    """True iff offline rule evaluation over ``trace`` reproduces the
+    recorded alert transitions bit-for-bit (iteration, rule/state, node,
+    device, timestamp, signal value).  ``log`` takes a callable (e.g.
+    ``print``) or a list (divergence lines are appended)."""
+    if log is None:
+        say = lambda s: None
+    elif callable(log):
+        say = log
+    else:
+        say = log.append
+    recorded = [ev for ev in trace.events if ev.source == ALERT_SOURCE]
+    pipe = replay_alerts(trace, spec)
+    replayed = pipe.transitions
+    if len(recorded) != len(replayed):
+        say(f"alert replay: {len(replayed)} transitions vs "
+            f"{len(recorded)} recorded")
+        return False
+    ok = True
+    for i, (rec, rep) in enumerate(zip(recorded, replayed)):
+        if (rec.iteration != rep.iteration or rec.kind != rep.kind
+                or rec.node != rep.node or rec.device != rep.device
+                or not _feq(rec.t_sim, rep.t)
+                or not _feq(rec.value, rep.value)):
+            say(f"alert replay mismatch at #{i}: recorded "
+                f"(it={rec.iteration}, {rec.kind}, node={rec.node}, "
+                f"dev={rec.device}, t={rec.t_sim}, v={rec.value}) vs "
+                f"replayed (it={rep.iteration}, {rep.kind}, "
+                f"node={rep.node}, dev={rep.device}, t={rep.t}, "
+                f"v={rep.value})")
+            ok = False
+    return ok

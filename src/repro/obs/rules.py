@@ -1,0 +1,343 @@
+"""Declarative alert rules with Prometheus-style ``for:`` hysteresis.
+
+A rule names a metric from the :data:`~repro.obs.metrics.METRICS` catalog
+and a condition over it; the :class:`AlertEngine` evaluates every rule once
+per ingested iteration and runs one state machine per labeled series:
+
+    inactive → pending → firing → (resolved →) inactive
+
+``for_s`` is the hysteresis window: the condition must hold continuously
+for that many *simulated* seconds before a pending alert fires — a blip
+shorter than the window produces a pending transition and then silently
+resets (flap suppression, exactly Prometheus' ``for:`` semantics).  With
+``for_s == 0`` the alert fires on the first true evaluation, skipping the
+pending phase.  A firing alert emits ``resolved`` when the condition turns
+false.
+
+Rule kinds (the Lit Silicon detection vocabulary):
+
+  * ``threshold``   — metric ``op`` threshold per labeled series;
+  * ``fleet_ratio`` — node-labeled metric vs the median of the *other*
+                      nodes (the paper's straggler-lead detection shaped
+                      as a rule: a node running ``threshold``x slower than
+                      the fleet median is lit);
+  * ``slo_burn``    — metric / ``target`` (the SLO objective) exceeds
+                      ``threshold`` — burn rate > 1 means the serve tail
+                      signal is consuming error budget;
+  * ``temp_slope``  — d(metric)/dt over a trailing ``window_s`` window
+                      exceeds ``threshold`` (°C/s) — the thermal-runaway
+                      precursor: temperature *slope* leads the absolute
+                      limit by many seconds.
+
+Determinism: evaluation is a pure function of the ingested gauge values
+and the simulated clock — no wall time, no RNG — so live alert firings
+replay bit-for-bit from a recorded trace (tested through
+``repro.obs.pipeline.replay_alerts``).  NaN inputs evaluate as
+condition-false and are excluded from medians and slope windows.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["RULE_KINDS", "ALERT_STATES", "AlertRule", "AlertTransition",
+           "AlertEngine", "default_rules", "ALERT_SOURCE"]
+
+RULE_KINDS = ("threshold", "fleet_ratio", "slo_burn", "temp_slope")
+
+# lifecycle states a series can transition *into* (inactive is the rest
+# state transitions depart from; a pending→inactive flap reset is silent)
+ALERT_STATES = ("pending", "firing", "resolved")
+
+# FaultRecord.source tag alert transitions persist under in a trace
+ALERT_SOURCE = "alert"
+
+
+@dataclass(frozen=True)
+class AlertRule:
+    """One declarative rule (JSON round-trips through the scenario codec;
+    frozen so a rule set can be shared across engines safely)."""
+
+    name: str
+    kind: str                       # RULE_KINDS entry
+    metric: str                     # gauge family the rule consumes
+    threshold: float
+    for_s: float = 0.0              # hysteresis window (simulated seconds)
+    op: str = ">"                   # threshold direction: ">" | "<"
+    target: float = 1.0             # slo_burn denominator (the SLO itself)
+    window_s: float = 6.0           # temp_slope trailing window
+    grace_s: float = 0.0            # boot suppression: condition-false
+    #                                 until the clock reaches this — the
+    #                                 cold-start transient (a fleet climbing
+    #                                 to thermal steady state) is not an
+    #                                 incident
+    severity: str = "warn"          # "warn" | "page" (annotation only)
+
+    def validate(self) -> "AlertRule":
+        if not self.name:
+            raise ValueError("alert rule needs a name")
+        if self.kind not in RULE_KINDS:
+            raise ValueError(f"rule {self.name!r}: kind must be one of "
+                             f"{RULE_KINDS}, got {self.kind!r}")
+        if self.op not in (">", "<"):
+            raise ValueError(f"rule {self.name!r}: op must be '>' or '<'")
+        if self.for_s < 0:
+            raise ValueError(f"rule {self.name!r}: for_s must be >= 0")
+        if self.grace_s < 0:
+            raise ValueError(f"rule {self.name!r}: grace_s must be >= 0")
+        if self.kind == "slo_burn" and self.target <= 0:
+            raise ValueError(f"rule {self.name!r}: slo_burn target must "
+                             "be > 0")
+        if self.kind == "temp_slope" and self.window_s <= 0:
+            raise ValueError(f"rule {self.name!r}: temp_slope window_s "
+                             "must be > 0")
+        if self.severity not in ("warn", "page"):
+            raise ValueError(f"rule {self.name!r}: severity must be "
+                             "'warn' or 'page'")
+        return self
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "AlertRule":
+        names = {f.name for f in dataclasses.fields(cls)}
+        unknown = sorted(set(d) - names)
+        if unknown:
+            raise ValueError(f"unknown AlertRule key(s) {unknown}")
+        return cls(**d).validate()
+
+
+def default_rules() -> List[AlertRule]:
+    """The Lit Silicon default rule set.  Thresholds are calibrated on the
+    pinned ``cluster/fault-heal`` and ``serve/straggler-slo`` scenarios so
+    that at lossless fidelity every injected fault raises an alert within
+    the escalation policy's patience window and the boosted-but-managed
+    straggler (a power-cap-fixable lean, not a fault) stays quiet.
+
+      * straggler-ratio mirrors the EscalationPolicy threshold (1.25) with
+        half its patience as hysteresis — the alert leads the drain;
+      * overtemp sits above the DVFS throttle band (the governor holds
+        healthy devices near t_hot), so only runaway-class excursions trip;
+      * runaway-slope watches d(temp)/dt: on the pinned fault-heal run the
+        steepest healthy 4 s slope is 0.69 °C/s (elastic-restart warmup),
+        while the injected runaway crosses 0.8 °C/s 3.1 s after onset and
+        keeps accelerating — threshold 0.8 with a short 0.5 s hold fires
+        3.84 s after onset, inside the escalation patience (4 s), with the
+        healthy fleet never even going pending.  The 6 s boot grace covers
+        the one benign excursion above threshold: the air-cooled serve
+        node climbs at ~0.88 °C/s for its first ~5 s while it settles
+        toward its (hotter) steady state;
+      * slo-burn fires when the serve tail signal burns the TTFT deadline
+        at >= 1.5x for several seconds.
+    """
+    return [
+        AlertRule("straggler-ratio", "fleet_ratio", "node_time_obs_seconds",
+                  threshold=1.25, for_s=2.0, severity="page"),
+        AlertRule("device-overtemp", "threshold", "device_temp_celsius",
+                  threshold=102.0, for_s=1.0, severity="warn"),
+        AlertRule("runaway-slope", "temp_slope", "device_temp_celsius",
+                  threshold=0.8, for_s=0.5, window_s=4.0, grace_s=6.0,
+                  severity="page"),
+        AlertRule("slo-burn", "slo_burn", "serve_tail_seconds",
+                  threshold=1.5, target=2.0, for_s=4.0, severity="page"),
+    ]
+
+
+@dataclass(frozen=True)
+class AlertTransition:
+    """One lifecycle transition of one rule's labeled series."""
+
+    iteration: int
+    t: float                        # simulated-seconds pipeline clock
+    rule: str
+    state: str                      # ALERT_STATES entry
+    node: int = -1
+    device: int = -1
+    value: float = math.nan         # the rule's computed signal value
+
+    @property
+    def kind(self) -> str:
+        """The ``FaultRecord.kind`` encoding: ``rule/state``."""
+        return f"{self.rule}/{self.state}"
+
+
+@dataclass
+class _SeriesState:
+    state: str = "inactive"         # inactive | pending | firing
+    pending_t0: float = math.nan
+
+
+@dataclass
+class _SlopeWindow:
+    ts: List[float] = field(default_factory=list)
+    vs: List[float] = field(default_factory=list)
+
+    def push(self, t: float, v: float, window_s: float) -> None:
+        self.ts.append(t)
+        self.vs.append(v)
+        while self.ts and self.ts[0] < t - window_s:
+            self.ts.pop(0)
+            self.vs.pop(0)
+
+    def slope(self) -> float:
+        if len(self.ts) < 2 or self.ts[-1] <= self.ts[0]:
+            return math.nan
+        return (self.vs[-1] - self.vs[0]) / (self.ts[-1] - self.ts[0])
+
+
+def _series_ids(labels: Dict[str, str]) -> Tuple[int, int]:
+    def _i(k: str) -> int:
+        try:
+            return int(labels.get(k, -1))
+        except (TypeError, ValueError):
+            return -1
+    return _i("node"), _i("gpu")
+
+
+class AlertEngine:
+    """Evaluates a rule set against a registry once per iteration."""
+
+    def __init__(self, rules: Optional[List[AlertRule]] = None):
+        self.rules = [r.validate() for r in (rules if rules is not None
+                                             else default_rules())]
+        seen = set()
+        for r in self.rules:
+            if r.name in seen:
+                raise ValueError(f"duplicate rule name {r.name!r}")
+            seen.add(r.name)
+        self._state: Dict[Tuple[str, Tuple], _SeriesState] = {}
+        self._slopes: Dict[Tuple[str, Tuple], _SlopeWindow] = {}
+        self.transitions: List[AlertTransition] = []
+
+    # ------------------------------------------------------------ queries
+    def firing(self) -> List[Tuple[str, Tuple]]:
+        return [k for k, s in self._state.items() if s.state == "firing"]
+
+    def firing_nodes(self) -> set:
+        """Global node ids with at least one firing series — the optional
+        EscalationPolicy corroboration input."""
+        out = set()
+        for (rule, key), st in self._state.items():
+            if st.state != "firing":
+                continue
+            node, _ = _series_ids(dict(key))
+            if node >= 0:
+                out.add(node)
+        return out
+
+    # ---------------------------------------------------------- evaluation
+    def _signals(self, rule: AlertRule, registry) -> List[Tuple[Dict, float]]:
+        """(labels, signal value) per labeled series of the rule's metric,
+        with the kind-specific arithmetic applied.  NaN signals are kept
+        (they evaluate condition-false but still drive resolved)."""
+        series = registry.series(rule.metric)
+        if rule.kind == "threshold":
+            return series
+        if rule.kind == "slo_burn":
+            return [(lb, v / rule.target) for lb, v in series]
+        if rule.kind == "fleet_ratio":
+            by_node: Dict[int, List[float]] = {}
+            for lb, v in series:
+                node, _ = _series_ids(lb)
+                by_node.setdefault(node, []).append(v)
+            node_val = {n: max(vs) for n, vs in by_node.items()}
+            out = []
+            for lb, _ in ((lb, v) for lb, v in series):
+                node, _ = _series_ids(lb)
+                others = [x for n, x in node_val.items()
+                          if n != node and x == x]
+                med = _median(others)
+                v = node_val[node]
+                ratio = (v / med if (med == med and med > 0 and v == v)
+                         else math.nan)
+                out.append((lb, ratio))
+            return out
+        # temp_slope: handled in evaluate (needs the clock to window)
+        return series
+
+    def evaluate(self, iteration: int, t: float,
+                 registry) -> List[AlertTransition]:
+        """One evaluation pass; returns (and records) the transitions it
+        emitted.  Call exactly once per ingested iteration — live and
+        replay must agree on the evaluation grid for bit-for-bit parity."""
+        out: List[AlertTransition] = []
+        seen_keys = set()
+        for rule in self.rules:
+            if rule.kind == "temp_slope":
+                sigs = []
+                for lb, v in registry.series(rule.metric):
+                    key = (rule.name, tuple(sorted(lb.items())))
+                    w = self._slopes.setdefault(key, _SlopeWindow())
+                    if v == v:      # NaN reads never enter the window
+                        w.push(float(t), float(v), rule.window_s)
+                    sigs.append((lb, w.slope()))
+            else:
+                sigs = self._signals(rule, registry)
+            for lb, sig in sigs:
+                cond = _cond(sig, rule) and t >= rule.grace_s
+                key = (rule.name, tuple(sorted(lb.items())))
+                seen_keys.add(key)
+                st = self._state.setdefault(key, _SeriesState())
+                node, device = _series_ids(lb)
+                if cond:
+                    if st.state == "inactive":
+                        if rule.for_s <= 0:
+                            st.state = "firing"
+                            out.append(AlertTransition(
+                                iteration, t, rule.name, "firing",
+                                node, device, float(sig)))
+                        else:
+                            st.state = "pending"
+                            st.pending_t0 = float(t)
+                            out.append(AlertTransition(
+                                iteration, t, rule.name, "pending",
+                                node, device, float(sig)))
+                    elif (st.state == "pending"
+                          and t - st.pending_t0 >= rule.for_s):
+                        st.state = "firing"
+                        out.append(AlertTransition(
+                            iteration, t, rule.name, "firing",
+                            node, device, float(sig)))
+                else:
+                    if st.state == "firing":
+                        st.state = "inactive"
+                        out.append(AlertTransition(
+                            iteration, t, rule.name, "resolved",
+                            node, device, float(sig)))
+                    elif st.state == "pending":
+                        # flap shorter than for_s: silent reset, no firing
+                        st.state = "inactive"
+                        st.pending_t0 = math.nan
+        # a series that vanished (e.g. its node was drained and trimmed
+        # from the registry) reads as condition-false: resolve a firing
+        # machine, silently reset a pending one — it must not fire forever
+        for key, st in self._state.items():
+            if key in seen_keys or st.state == "inactive":
+                continue
+            if st.state == "firing":
+                node, device = _series_ids(dict(key[1]))
+                out.append(AlertTransition(
+                    iteration, t, key[0], "resolved",
+                    node, device, math.nan))
+            st.state = "inactive"
+            st.pending_t0 = math.nan
+        self.transitions.extend(out)
+        return out
+
+
+def _median(xs: List[float]) -> float:
+    if not xs:
+        return math.nan
+    xs = sorted(xs)
+    n = len(xs)
+    mid = n // 2
+    return xs[mid] if n % 2 else 0.5 * (xs[mid - 1] + xs[mid])
+
+
+def _cond(sig: float, rule: AlertRule) -> bool:
+    if sig != sig:
+        return False
+    return sig > rule.threshold if rule.op == ">" else sig < rule.threshold

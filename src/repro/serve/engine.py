@@ -89,9 +89,10 @@ class ServingFleet:
 
     # ------------------------------------------------------------- plumbing
     def attach_collector(self, collector) -> None:
-        """Attach telemetry: per-node commit hooks + fleet meta (the
-        cluster's ``step`` is never called, so no fleet rows appear —
-        serve traces carry node + request records)."""
+        """Attach telemetry: per-node commit hooks + per-round fleet rows
+        (``on_serve_round``: async replicas have no barrier, so the fleet
+        row carries the round span, the observed per-node intervals and
+        the tail signal) + per-request records."""
         collector.attach_cluster(self.cluster)
         self.collector = collector
 
@@ -152,6 +153,10 @@ class ServingFleet:
                 node.commit(tr, t_interval=tr.t_iter)
                 self.clock[n] = t_end
             sig = self._tail_signal(ttft_windows, tq, tw_s)
+            if self.collector is not None:
+                self.collector.on_serve_round(
+                    r, [float(tr.t_iter) for tr in traces], sig,
+                    topology=self.cluster.topology.name)
             if manager is not None and r >= tune_after:
                 manager.on_serve_iteration(r, traces, tail_signal=sig)
             rep.round_history.append({

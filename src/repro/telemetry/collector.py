@@ -72,6 +72,11 @@ class FleetSample:
     #                                 itself (NaN where the node's sensor is
     #                                 dead) — the EscalationPolicy input, so
     #                                 drain decisions replay bit-for-bit
+    tail: Optional[np.ndarray] = None      # (N,) serving tail signal
+    #                                 (``ServingFleet._tail_signal``) — only
+    #                                 on serve-scope rows; None on training
+    #                                 fleets and on traces recorded before
+    #                                 serving emitted fleet rows
 
 
 @dataclass
@@ -170,6 +175,11 @@ class TelemetryCollector:
         self._fleet_sensor: Optional[SensorModel] = None
         self._last_iter: Optional[int] = None
         self._last_decision = False
+        # pure observers (e.g. repro.obs.ObsPipeline): each appended record
+        # is forwarded to every observer, after it enters the ring — the
+        # observers see exactly the sampled stream a trace would carry, so
+        # anything computed from them replays bit-for-bit offline
+        self.observers: List = []
 
     # ------------------------------------------------------------ attaching
     def sensor_for(self, node_index: int) -> SensorModel:
@@ -275,6 +285,8 @@ class TelemetryCollector:
             freq=s.freq.copy(), cap=s.cap.copy(),
             truth_start=(truth if (lossy and self.keep_truth
                                    and self.with_kernels) else None)))
+        for ob in self.observers:
+            ob.on_node_sample(self.samples[-1])
 
     def on_cluster_step(self, cluster, traces) -> None:
         h = cluster.history[-1]
@@ -307,12 +319,16 @@ class TelemetryCollector:
             node_power=np.asarray(h["node_power"], float).copy(),
             topology=str(h["topology"]),
             lead_obs=lead_obs, t_obs=t_obs))
+        for ob in self.observers:
+            ob.on_fleet_sample(self.fleet[-1])
 
     def on_manager_action(self, kind: str, iteration: int,
                           values: np.ndarray, node: int = -1) -> None:
         self.actions.append(ManagerAction(
             iteration=int(iteration), kind=kind, node=node,
             values=np.asarray(values, float).copy()))
+        for ob in self.observers:
+            ob.on_action(self.actions[-1])
 
     def on_fault_event(self, iteration: int, t_sim: float, kind: str,
                        node: int, device: int = -1, value: float = 0.0,
@@ -323,11 +339,58 @@ class TelemetryCollector:
             iteration=int(iteration), t_sim=float(t_sim), kind=str(kind),
             node=int(node), device=int(device), value=float(value),
             source=str(source)))
+        for ob in self.observers:
+            ob.on_event(self.events[-1])
 
     def on_request(self, record: "RequestRecord") -> None:
         """Record one serving request's lifecycle (ServingFleet hook) —
         unsampled: SLO tails need the full population."""
         self.requests.append(record)
+        for ob in self.observers:
+            ob.on_request(record)
+
+    def on_serve_round(self, round_index: int, t_local: np.ndarray,
+                       tail: np.ndarray, topology: str = "serve") -> None:
+        """Record a serving round as a fleet row: async replicas have no
+        barrier, so ``t_fleet`` is the round's span (the slowest node's
+        interval) and ``lead`` the shortfall behind it.  ``t_obs`` passes
+        through the fleet sensor exactly like a training fleet row, so the
+        straggler-ratio signal degrades with sensor fidelity the same way;
+        ``tail`` is the per-node SLO tail signal (exact: it is engine
+        state, not a sensor reading)."""
+        if not self._sampled(int(round_index)):
+            return
+        t_local = np.asarray(t_local, float).copy()
+        t_obs = np.asarray(self.fleet_sensor().observe_times(t_local),
+                           float).copy()
+        lead_obs = (np.nanmax(t_obs) - t_obs
+                    if np.isfinite(t_obs).any()
+                    else np.full_like(t_obs, np.nan))
+        self.fleet.append(FleetSample(
+            iteration=int(round_index), t_fleet=float(np.max(t_local)),
+            lead=t_local.max() - t_local, t_local=t_local,
+            node_power=np.array([float(np.sum(s.power)) for s in
+                                 self._node_power_rows(round_index,
+                                                       len(t_local))]),
+            topology=str(topology),
+            lead_obs=lead_obs, t_obs=t_obs,
+            tail=np.asarray(tail, float).copy()))
+        for ob in self.observers:
+            ob.on_fleet_sample(self.fleet[-1])
+
+    def _node_power_rows(self, iteration: int, n: int):
+        """The iteration's node samples in node order (zero-power dummies
+        where a node's sample is missing) — serve fleet rows reuse the
+        power the commit hooks already observed rather than re-drawing."""
+        rows = {s.node: s for s in self.samples
+                if s.iteration == iteration}
+        dummy = NodeSample(iteration=iteration, node=-1, t_local=0.0,
+                           t_wall=0.0, comp_start=np.empty((0, 0)),
+                           comp_end=np.empty((0, 0)),
+                           overlap=np.empty((0, 0)),
+                           power=np.zeros(1), temp=np.zeros(1),
+                           freq=np.zeros(1), cap=np.zeros(1))
+        return [rows.get(i, dummy) for i in range(n)]
 
     # ------------------------------------------------------------ accessors
     def node_samples(self, node: int = 0) -> List[NodeSample]:

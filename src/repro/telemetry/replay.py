@@ -276,6 +276,13 @@ def replay_escalation(trace: TelemetryTrace, cfg=None) -> EscalationReplay:
     decisions: List = []
     t_sim = 0.0
     heal_s = cfg.drain_s + cfg.restart_penalty_s
+    # recorded alert transitions reconstruct the observability firing set
+    # the live policy saw via note_alerts (only consulted when
+    # cfg.alert_corroborate is on): transitions with iteration <= the
+    # sample's were emitted before the live observe() call
+    alert_rows = [e for e in trace.events if e.source == "alert"]
+    ai = 0
+    firing: dict = {}               # (rule, node, device) -> True
     for fs in samples:
         if len(fs.t_obs) != len(alive):
             raise ValueError(
@@ -284,6 +291,15 @@ def replay_escalation(trace: TelemetryTrace, cfg=None) -> EscalationReplay:
                 f"is {len(alive)} — the trace's drains diverge from this "
                 "config's decisions")
         t_sim += float(fs.t_fleet)
+        while ai < len(alert_rows) and alert_rows[ai].iteration <= fs.iteration:
+            ev = alert_rows[ai]
+            ai += 1
+            rule, _, state = ev.kind.rpartition("/")
+            if state == "firing":
+                firing[(rule, ev.node, ev.device)] = True
+            elif state == "resolved":
+                firing.pop((rule, ev.node, ev.device), None)
+        policy.note_alerts({n for (_, n, _) in firing if n >= 0})
         decision = policy.observe(fs.iteration, fs.t_obs, t_sim=t_sim)
         if decision is not None and len(alive) - 1 < cfg.min_nodes:
             decision = None         # mirror the live runner's fleet floor
@@ -349,7 +365,18 @@ def degrade(trace: TelemetryTrace, sensor: SensorModel) -> TelemetryTrace:
     The sensor's ``sample_period``/``phase_jitter`` subsample which
     iterations survive; noise/quantization/dropout degrade the rest.  The
     returned trace keeps the truth beside the observation so
-    ``detection_report`` can quantify the damage."""
+    ``detection_report`` can quantify the damage.
+
+    Fleet rows are re-observed too: ``t_obs`` is redrawn from the true
+    per-node times through a fleet-scope stream of the same config
+    (``FLEET_SENSOR_OFFSET``, mirroring live recording), preserving the
+    recorded dead-sensor NaN mask, and ``lead_obs`` is recomputed from it.
+    Fault/escalation events and request records carry over unchanged
+    (they are engine facts, not sensor readings); recorded *alert* rows
+    are dropped — they were computed at the recording fidelity, and
+    ``repro.obs.replay_alerts`` over the degraded trace regenerates them
+    at the degraded one."""
+    from repro.telemetry.collector import FLEET_SENSOR_OFFSET
     out = TelemetryTrace(meta=dict(trace.meta))
     out.meta["sensor"] = sensor.cfg.to_dict()
     keep = {it for it in sorted({s.iteration for s in trace.samples})
@@ -364,8 +391,22 @@ def degrade(trace: TelemetryTrace, sensor: SensorModel) -> TelemetryTrace:
             power=np.asarray(sensor.observe_power(s.power), float),
             temp=np.asarray(sensor.observe_temp(s.temp), float),
             truth_start=np.array(truth, float, copy=True)))
-    out.fleet = [fs for fs in trace.fleet if fs.iteration in keep]
+    fleet_sensor = SensorModel(sensor.cfg, seed_offset=FLEET_SENSOR_OFFSET)
+    for fs in trace.fleet:
+        if fs.iteration not in keep:
+            continue
+        t_obs = np.asarray(fleet_sensor.observe_times(
+            np.asarray(fs.t_local, float)), float).copy()
+        if fs.t_obs is not None:
+            t_obs[np.isnan(np.asarray(fs.t_obs, float))] = np.nan
+        finite = np.isfinite(t_obs)
+        lead_obs = (np.max(t_obs[finite]) - t_obs if finite.any()
+                    else np.full_like(t_obs, np.nan))
+        out.fleet.append(dataclasses.replace(
+            fs, t_obs=t_obs, lead_obs=lead_obs))
     out.actions = list(trace.actions)
+    out.events = [e for e in trace.events if e.source != "alert"]
+    out.requests = list(trace.requests)
     return out
 
 

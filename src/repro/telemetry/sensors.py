@@ -62,15 +62,29 @@ class SensorConfig:
 
 LOSSLESS = SensorConfig()
 
-# A plausible rocm-smi-style counter stack at the paper's Table-II default
-# sampling period.  The constants are placeholders pending calibration
-# against real rocm-smi captures (see ROADMAP): 1 W / 1 °C register steps
-# are the documented interface; noise levels are set to the scale of the
-# simulator's kernel durations (~1 ms median).
+# The rocm-smi-style counter stack, calibrated knob by knob (this preset
+# is pinned by tests/test_obs.py — change it deliberately):
+#
+#   * timestamps — kernel starts come from a profiler hook (hipEvent /
+#     rocprof), whose documented tick is ~1 us; the host-side read adds
+#     scheduling jitter of a few tens of us.  So quant_time_s=1e-6 and
+#     noise σ=20 us — three orders tighter than the old 1 ms placeholder,
+#     which was noise at the scale of a whole kernel, not of a clock read.
+#   * power — the SMU's average-socket-power register steps in 1 W
+#     (documented interface) and the averaging window makes successive
+#     reads wobble a couple of watts against the true instantaneous draw
+#     at MI300-class power levels: σ=2 W.
+#   * temperature — edge/junction sensors also report whole degrees;
+#     sensor accuracy is ~±1 °C: σ=1 °C, 1 °C step.
+#   * sampling — rocm-smi polls on a wall clock (~1 s period) while the
+#     fleet iterates every ~0.35-0.40 s, so a poll lands roughly every
+#     3rd iteration with ±1 iteration of scheduling phase slack.
+#   * dropout — a busy SMU occasionally rejects a read; ~0.1 % per
+#     device-sample matches how rarely a long capture shows a hole.
 ROCM_SMI_LIKE = SensorConfig(
-    noise_time_s=1e-3, noise_power_w=3.0, noise_temp_c=0.5,
-    quant_time_s=1e-5, quant_power_w=1.0, quant_temp_c=1.0,
-    sample_period=10, phase_jitter=2, dropout_p=0.002,
+    noise_time_s=2e-5, noise_power_w=2.0, noise_temp_c=1.0,
+    quant_time_s=1e-6, quant_power_w=1.0, quant_temp_c=1.0,
+    sample_period=3, phase_jitter=1, dropout_p=0.001,
 )
 
 

@@ -23,7 +23,10 @@ guarantee (replay.py) is tested *through* this round trip.
 Perfetto / chrome://tracing): one process per node, one thread per device,
 complete ("X") events per kernel, and counter ("C") tracks for power,
 temperature and caps.  Unsampled iterations are elided, so the timeline is
-the concatenation of sampled intervals.
+the concatenation of sampled intervals.  A synthetic "fleet" process adds
+cluster-scope counter tracks (lead, observed step time, node power, serve
+tail) and instant ("i") events for fault onsets, escalation stages and
+alert transitions, so one file shows physics and alerts together.
 """
 from __future__ import annotations
 
@@ -126,7 +129,8 @@ def save_trace(src, path: str, extra_meta: Optional[Dict] = None) -> int:
                 "node_power": _enc(fs.node_power),
                 "topology": fs.topology,
                 "lead_obs": _enc(fs.lead_obs),
-                "t_obs": _enc(fs.t_obs)}) + "\n")
+                "t_obs": _enc(fs.t_obs),
+                "tail": _enc(fs.tail)}) + "\n")
             lines += 1
         for a in trace.actions:
             f.write(json.dumps({
@@ -196,7 +200,8 @@ def load_trace(path: str) -> TelemetryTrace:
                     # .get(): traces written before the fleet sensor existed
                     # load with lead_obs=None rather than failing
                     lead_obs=_dec(r.get("lead_obs")),
-                    t_obs=_dec(r.get("t_obs"))))
+                    t_obs=_dec(r.get("t_obs")),
+                    tail=_dec(r.get("tail"))))
             elif r["type"] == "action":
                 trace.actions.append(ManagerAction(
                     iteration=r["it"], kind=r["kind"], node=r["node"],
@@ -273,6 +278,42 @@ def export_chrome_trace(src, path: str, max_samples: Optional[int] = None,
                 events.append({"ph": "C", "name": cname, "pid": s.node,
                                "tid": 0, "ts": ts, "args": vals})
         offsets[s.node] = off + s.t_wall
+    # ---------------------------------------------------------------- fleet
+    # one extra "fleet" process carries the cluster-scope signals: counter
+    # tracks per fleet sample (lead / observed time / node power / serve
+    # tail) on the cumulative sampled-fleet clock, plus instant events for
+    # every fault onset, escalation stage and alert transition — so a
+    # single Perfetto file shows physics and alerts together.  Event
+    # timestamps are the records' own simulated-seconds clock, which
+    # coincides with the cumulative track clock at lossless fidelity.
+    fleet_pid = max([trace.n_nodes] + [n + 1 for n in seen_nodes])
+    if trace.fleet or trace.events:
+        events.append({"ph": "M", "name": "process_name", "pid": fleet_pid,
+                       "tid": 0, "args": {"name": "fleet"}})
+    if counters:
+        clock = 0.0
+        for fs in trace.fleet:
+            clock += float(fs.t_fleet)
+            ts = clock * 1e6
+            lead = fs.lead_obs if fs.lead_obs is not None else fs.lead
+            for cname, vec in (("lead_s", lead), ("t_obs_s", fs.t_obs),
+                               ("node_power_w", fs.node_power),
+                               ("tail_s", fs.tail)):
+                if vec is None:
+                    continue
+                vals = {f"node{n}": (None if np.isnan(v) else float(v))
+                        for n, v in enumerate(np.asarray(vec, float))}
+                events.append({"ph": "C", "name": cname, "pid": fleet_pid,
+                               "tid": 0, "ts": ts, "args": vals})
+    for ev in trace.events:
+        events.append({
+            "ph": "i", "name": f"{ev.source}:{ev.kind}", "cat": ev.source,
+            "pid": fleet_pid, "tid": 0, "ts": float(ev.t_sim) * 1e6,
+            "s": "g",
+            "args": {"node": ev.node, "device": ev.device,
+                     "iter": ev.iteration,
+                     "value": (None if ev.value != ev.value
+                               else float(ev.value))}})
     with open(path, "w") as f:
         json.dump({"traceEvents": events,
                    "displayTimeUnit": "ms",

@@ -1,0 +1,530 @@
+"""Observability layer: metrics registry, alert rules with hysteresis,
+live-vs-replay alert parity, incident scoring, and the fidelity story.
+
+The load-bearing contract is the replay one: alert firings are a pure
+function of the recorded telemetry stream and the rule set, so offline
+rule evaluation over a lossless trace must reproduce the live transitions
+bit-for-bit — same iterations, same timestamps, same signal values — on
+every engine.  Everything else (bucket arithmetic, flap suppression,
+incident grouping) feeds that guarantee.
+"""
+import copy
+import json
+import math
+
+import numpy as np
+import pytest
+
+from repro.api import ObservabilitySpec, Scenario, get_scenario, \
+    run_scenario, with_overrides
+from repro.core.escalate import EscalationConfig, EscalationPolicy
+from repro.obs import (DEFAULT_BUCKETS, AlertEngine, AlertRule,
+                       MetricsRegistry, alert_replay_matches,
+                       build_incidents, build_timeline, default_rules,
+                       render_dashboard, replay_alerts, save_incidents,
+                       score_alerts, terminal_summary,
+                       transitions_to_records)
+from repro.telemetry import ROCM_SMI_LIKE, SensorConfig, SensorModel, \
+    degrade, load_trace, save_trace
+from repro.telemetry.collector import FaultRecord
+from repro.telemetry.trace_io import TelemetryTrace, export_chrome_trace
+
+
+# --------------------------------------------------------------------------- #
+# shared recorded run (module-scoped: many tests read the same trace)
+# --------------------------------------------------------------------------- #
+@pytest.fixture(scope="module")
+def heal_result():
+    """cluster/fault-heal long enough to cover the transient hang, the
+    thermal runaway firing (onset t=12, fires ~t=15.9), the drain and the
+    elastic restart."""
+    return run_scenario(get_scenario("cluster/fault-heal"), iterations=60)
+
+
+@pytest.fixture(scope="module")
+def heal_trace(heal_result):
+    return TelemetryTrace.from_collector(heal_result.collector)
+
+
+# --------------------------------------------------------------------------- #
+# metrics registry
+# --------------------------------------------------------------------------- #
+def test_counter_inc_and_negative_rejected():
+    reg = MetricsRegistry()
+    c = reg.counter("alerts_total")
+    c.inc({"rule": "r", "state": "firing"})
+    c.inc({"rule": "r", "state": "firing"}, 2.0)
+    assert c.value({"rule": "r", "state": "firing"}) == 3.0
+    assert c.total() == 3.0
+    with pytest.raises(ValueError):
+        c.inc({"rule": "r", "state": "firing"}, -1.0)
+
+
+def test_registry_rejects_unknown_and_mistyped_metrics():
+    reg = MetricsRegistry()
+    with pytest.raises(KeyError):
+        reg.gauge("not_a_metric")
+    with pytest.raises(TypeError):
+        reg.counter("device_temp_celsius")     # it's a gauge
+
+
+def test_histogram_empty_window_quantile_is_nan():
+    reg = MetricsRegistry()
+    child = reg.histogram("iteration_seconds").child({})
+    assert math.isnan(child.quantile(0.5))
+    assert child.count == 0
+
+
+def test_histogram_single_sample_every_quantile():
+    reg = MetricsRegistry()
+    child = reg.histogram("iteration_seconds").child({})
+    child.observe(0.25)
+    for q in (0.0, 0.5, 0.99, 1.0):
+        assert child.quantile(q) == 0.25
+    with pytest.raises(ValueError):
+        child.quantile(1.5)
+
+
+def test_histogram_nan_bearing_window():
+    """NaN observations never enter the quantile window or the buckets;
+    they are tallied separately so the data loss is still visible."""
+    reg = MetricsRegistry()
+    child = reg.histogram("iteration_seconds").child({})
+    for v in (0.1, math.nan, 0.3, math.nan):
+        child.observe(v)
+    assert child.count == 2 and child.nan_count == 2
+    assert child.quantile(1.0) == 0.3
+    assert not math.isnan(child.sum)
+
+
+def test_histogram_buckets_cumulative_and_windowed_eviction():
+    reg = MetricsRegistry(hist_window=4)
+    child = reg.histogram("iteration_seconds").child({})
+    for v in (0.002, 0.02, 0.2, 2.0, 20.0):
+        child.observe(v)
+    # buckets are cumulative over *all* observations…
+    cum = child.cumulative()
+    assert cum[-1] == 5                        # +Inf bucket sees everything
+    assert all(a <= b for a, b in zip(cum, cum[1:]))
+    # …while quantiles only see the trailing window (0.002 evicted)
+    assert child.quantile(0.0) == 0.02
+
+
+def test_exposition_format_and_nan_encoding():
+    reg = MetricsRegistry()
+    reg.gauge("device_temp_celsius").set(math.nan, {"node": 0, "gpu": 1})
+    reg.histogram("iteration_seconds").observe(0.05)
+    text = reg.exposition()
+    assert "# TYPE device_temp_celsius gauge" in text
+    assert 'device_temp_celsius{gpu="1",node="0"} NaN' in text
+    assert 'iteration_seconds_bucket{le="+Inf"} 1' in text
+    assert "iteration_seconds_count 1" in text
+
+
+def test_snapshot_jsonl_versioned(tmp_path):
+    reg = MetricsRegistry()
+    reg.counter("sim_iterations_total").inc()
+    p = tmp_path / "m.jsonl"
+    n = reg.snapshot_jsonl(str(p))
+    lines = [json.loads(l) for l in p.read_text().splitlines()]
+    assert len(lines) == n
+    assert lines[0]["format"] == "lit-silicon-metrics"
+    assert lines[0]["version"] == 1
+    assert any(r.get("metric") == "sim_iterations_total" for r in lines[1:])
+
+
+def test_default_buckets_strictly_increasing():
+    assert all(a < b for a, b in zip(DEFAULT_BUCKETS, DEFAULT_BUCKETS[1:]))
+
+
+# --------------------------------------------------------------------------- #
+# alert rules: hysteresis, flap suppression, grace
+# --------------------------------------------------------------------------- #
+def _temp_rule(**kw):
+    base = dict(name="hot", kind="threshold", metric="device_temp_celsius",
+                threshold=100.0)
+    base.update(kw)
+    return AlertRule(**base)
+
+
+def _feed(engine, series, dt=1.0):
+    """Drive one gauge series through the engine; returns transitions."""
+    reg = MetricsRegistry()
+    out = []
+    for i, v in enumerate(series):
+        reg.gauge("device_temp_celsius").set(v, {"node": 0, "gpu": 0})
+        out.extend(engine.evaluate(i, i * dt, reg))
+    return out
+
+
+def test_for_hysteresis_suppresses_flaps():
+    eng = AlertEngine([_temp_rule(for_s=3.0)])
+    # two-sample blip: pending, then silent reset — never fires
+    trs = _feed(eng, [90, 105, 105, 90, 90, 90])
+    assert [t.state for t in trs] == ["pending"]
+    # sustained past for_s: pending at the first breach, firing once the
+    # window elapses, resolved when it clears
+    eng2 = AlertEngine([_temp_rule(for_s=3.0)])
+    trs2 = _feed(eng2, [90, 105, 105, 105, 105, 105, 90])
+    assert [t.state for t in trs2] == ["pending", "firing", "resolved"]
+    fire = [t for t in trs2 if t.state == "firing"][0]
+    assert fire.t - trs2[0].t >= 3.0
+
+
+def test_for_zero_fires_immediately():
+    eng = AlertEngine([_temp_rule(for_s=0.0)])
+    trs = _feed(eng, [90, 105])
+    assert [t.state for t in trs] == ["firing"]
+
+
+def test_grace_suppresses_boot_transient():
+    eng = AlertEngine([_temp_rule(for_s=0.0, grace_s=3.5)])
+    trs = _feed(eng, [105, 105, 105, 105, 105])   # t = 0..4
+    assert [t.state for t in trs] == ["firing"]
+    assert trs[0].t >= 3.5
+
+
+def test_fleet_ratio_is_against_median_of_others():
+    rule = AlertRule("lag", "fleet_ratio", "node_time_obs_seconds",
+                     threshold=1.25, for_s=0.0)
+    eng = AlertEngine([rule])
+    reg = MetricsRegistry()
+    for n, v in enumerate([0.4, 0.4, 0.4, 0.6]):
+        reg.gauge("node_time_obs_seconds").set(v, {"node": n})
+    trs = eng.evaluate(0, 0.0, reg)
+    assert len(trs) == 1 and trs[0].node == 3
+    assert trs[0].state == "firing"
+    assert trs[0].value == pytest.approx(1.5)
+
+
+def test_vanished_series_resolves_firing_alert():
+    eng = AlertEngine([_temp_rule(for_s=0.0)])
+    reg = MetricsRegistry()
+    g = reg.gauge("device_temp_celsius")
+    g.set(120.0, {"node": 0, "gpu": 0})
+    trs = eng.evaluate(0, 0.0, reg)
+    assert [t.state for t in trs] == ["firing"]
+    # the node is drained: its gauge child disappears from the registry
+    g.children.clear()
+    trs2 = eng.evaluate(1, 1.0, reg)
+    assert [t.state for t in trs2] == ["resolved"]
+    assert math.isnan(trs2[0].value) and trs2[0].node == 0
+    assert not eng.firing_nodes()
+
+
+def test_alert_rule_validation_and_round_trip():
+    with pytest.raises(ValueError, match="kind"):
+        AlertRule("x", "nope", "device_temp_celsius", 1.0).validate()
+    with pytest.raises(ValueError, match="for_s"):
+        AlertRule("x", "threshold", "device_temp_celsius", 1.0,
+                  for_s=-1).validate()
+    with pytest.raises(ValueError, match="grace_s"):
+        AlertRule("x", "threshold", "device_temp_celsius", 1.0,
+                  grace_s=-1).validate()
+    r = default_rules()[0]
+    assert AlertRule.from_dict(r.to_dict()) == r
+    with pytest.raises(ValueError, match="bogus"):
+        AlertRule.from_dict({**r.to_dict(), "bogus": 1})
+
+
+def test_engine_rejects_duplicate_rule_names():
+    with pytest.raises(ValueError, match="duplicate"):
+        AlertEngine([_temp_rule(), _temp_rule()])
+
+
+# --------------------------------------------------------------------------- #
+# scenario spec integration
+# --------------------------------------------------------------------------- #
+def test_observability_spec_round_trips_through_scenario_json():
+    sc = get_scenario("cluster/fault-heal")
+    assert sc.observability is not None
+    back = Scenario.from_json(sc.to_json())
+    assert back.to_dict() == sc.to_dict()
+    # a custom rule list survives too
+    sc2 = sc.replace(observability=ObservabilitySpec(
+        rules=[AlertRule("only", "threshold", "device_temp_celsius", 90.0,
+                         for_s=1.0)]))
+    back2 = Scenario.from_json(sc2.to_json())
+    assert back2.observability.rule_objects()[0].name == "only"
+
+
+def test_observability_spec_rejects_unknown_rule_keys():
+    d = get_scenario("cluster/fault-heal").to_dict()
+    d["observability"]["rules"] = [{"name": "x", "kind": "threshold",
+                                    "metric": "device_temp_celsius",
+                                    "threshold": 1.0, "bogus": 2}]
+    with pytest.raises((ValueError, TypeError), match="bogus"):
+        Scenario.from_dict(d)
+
+
+def test_rocm_smi_like_preset_pinned():
+    """The calibrated rocm-smi sensor stack (see sensors.py for the
+    rationale).  A drive-by change to any constant silently re-scores
+    every fidelity study — fail loudly instead."""
+    assert ROCM_SMI_LIKE == SensorConfig(
+        noise_time_s=2e-5, noise_power_w=2.0, noise_temp_c=1.0,
+        quant_time_s=1e-6, quant_power_w=1.0, quant_temp_c=1.0,
+        sample_period=3, phase_jitter=1, dropout_p=0.001)
+
+
+# --------------------------------------------------------------------------- #
+# live pipeline on the pinned fault scenario
+# --------------------------------------------------------------------------- #
+def test_fault_heal_alerts_beat_patience_with_zero_false_positives(
+        heal_result):
+    m = heal_result.metrics
+    assert m["obs_false_alerts"] == 0.0
+    patience = heal_result.scenario.escalation.patience_s
+    assert 0.0 < m["obs_time_to_alert_s"] <= patience
+    # the runaway precursor is the first rule to fire, on the right device
+    firing = [t for t in heal_result.obs.transitions if t.state == "firing"]
+    assert firing[0].rule == "runaway-slope"
+    assert (firing[0].node, firing[0].device) == (2, 3)
+    # the transient kernel hang went pending but never fired (flap ridden
+    # out by for_s, same philosophy as the escalation patience window)
+    hang = [t for t in heal_result.obs.transitions if t.node == 1]
+    assert {t.state for t in hang} == {"pending"}
+
+
+def test_alert_transitions_recorded_in_trace(heal_trace):
+    rows = [e for e in heal_trace.events if e.source == "alert"]
+    assert rows and all("/" in e.kind for e in rows)
+    states = {e.kind.rpartition("/")[2] for e in rows}
+    assert "firing" in states and "pending" in states
+
+
+def test_trace_meta_carries_observability_spec(heal_trace):
+    spec = ObservabilitySpec.from_dict(heal_trace.meta["observability"])
+    assert [r.name for r in spec.rule_objects()] == \
+        [r.name for r in default_rules()]
+
+
+def test_obs_pipeline_trims_drained_node_gauges(heal_result):
+    """After the elastic restart the fleet is 3 nodes: the pipeline must
+    not keep evaluating rules against the drained node's last reading."""
+    reg = heal_result.obs.registry
+    nodes = {lb["node"] for lb, _ in reg.series("node_time_obs_seconds")}
+    assert nodes <= {"0", "1", "2"}
+
+
+# --------------------------------------------------------------------------- #
+# live vs replay: the bit-for-bit contract, across engines
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("engine", ["event", "batched", "vector"])
+def test_alert_replay_bit_for_bit_across_engines(engine):
+    sc = with_overrides(get_scenario("cluster/fault-heal"),
+                        {"fleet.engine": engine})
+    res = run_scenario(sc, iterations=45)
+    trace = TelemetryTrace.from_collector(res.collector)
+    assert any(e.source == "alert" for e in trace.events)
+    log = []
+    assert alert_replay_matches(trace, log=log), "\n".join(log)
+
+
+def test_alert_replay_survives_jsonl_round_trip(heal_trace, tmp_path):
+    p = str(tmp_path / "t.jsonl")
+    save_trace(heal_trace, p)
+    back = load_trace(p)
+    log = []
+    assert alert_replay_matches(back, log=log), "\n".join(log)
+
+
+def test_replay_detects_tampered_recording(heal_trace):
+    import dataclasses
+    tampered = copy.copy(heal_trace)
+    tampered.events = [
+        dataclasses.replace(e, t_sim=e.t_sim + 1.0)
+        if e.source == "alert" and e.kind.endswith("/firing") else e
+        for e in heal_trace.events]
+    assert not alert_replay_matches(tampered)
+
+
+# --------------------------------------------------------------------------- #
+# serve scope: tail rows, slo-burn, parity
+# --------------------------------------------------------------------------- #
+@pytest.fixture(scope="module")
+def serve_result():
+    """serve/straggler-slo shortened, with the slo-burn rule tightened so
+    the backlog alert actually fires inside the shortened horizon."""
+    sc = get_scenario("serve/straggler-slo")
+    sc = sc.replace(observability=ObservabilitySpec(rules=[
+        AlertRule("slo-burn", "slo_burn", "serve_tail_seconds",
+                  threshold=0.5, target=2.0, for_s=2.0, severity="page"),
+    ]))
+    return run_scenario(sc, iterations=150)
+
+
+def test_serve_fleet_rows_carry_tail_signal(serve_result, tmp_path):
+    trace = TelemetryTrace.from_collector(serve_result.collector)
+    tails = [fs.tail for fs in trace.fleet if fs.tail is not None]
+    assert len(tails) == len(trace.fleet)
+    assert all(len(t) == trace.n_nodes for t in tails)
+    p = str(tmp_path / "serve.jsonl")
+    save_trace(trace, p)
+    back = load_trace(p)
+    np.testing.assert_array_equal(back.fleet[-1].tail, trace.fleet[-1].tail)
+
+
+def test_serve_slo_burn_fires_and_replays(serve_result):
+    trace = TelemetryTrace.from_collector(serve_result.collector)
+    firing = [e for e in trace.events
+              if e.source == "alert" and e.kind == "slo-burn/firing"]
+    assert firing, "tightened slo-burn rule should fire on the backlog"
+    log = []
+    assert alert_replay_matches(trace, log=log), "\n".join(log)
+
+
+# --------------------------------------------------------------------------- #
+# fidelity: detection quality degrades monotonically with sensor noise
+# --------------------------------------------------------------------------- #
+def test_false_positives_monotone_in_sensor_noise(heal_trace):
+    fps = []
+    for noise in (0.0, 0.5, 1.0, 2.0):
+        if noise == 0.0:
+            deg = heal_trace
+        else:
+            cfg = SensorConfig(noise_temp_c=noise, noise_time_s=noise * 1e-3,
+                               seed=3)
+            deg = degrade(heal_trace, SensorModel(cfg))
+        pipe = replay_alerts(deg)
+        scored = copy.copy(deg)
+        scored.events = sorted(
+            [e for e in deg.events if e.source != "alert"]
+            + transitions_to_records(pipe.transitions),
+            key=lambda e: e.iteration)
+        s = score_alerts(scored, patience_s=4.0)
+        fps.append(s["false_positives"])
+    assert fps[0] == 0.0
+    assert all(a <= b for a, b in zip(fps, fps[1:])), fps
+    assert fps[-1] > 0.0
+
+
+# --------------------------------------------------------------------------- #
+# incidents + scoring
+# --------------------------------------------------------------------------- #
+def test_timeline_is_ordered_and_multi_source(heal_trace):
+    tl = build_timeline(heal_trace)
+    ts = [e.t for e in tl if e.t == e.t]
+    assert ts == sorted(ts)
+    assert {"fault", "alert", "escalation"} <= {e.source for e in tl}
+
+
+def test_incidents_group_the_runaway_into_a_drained_incident(heal_trace):
+    incidents = build_incidents(build_timeline(heal_trace))
+    node2 = [i for i in incidents if i.node == 2]
+    assert node2
+    assert "thermal_runaway" in node2[0].fault_kinds
+    assert "runaway-slope" in node2[0].alert_rules
+    assert node2[0].drained and not node2[0].open
+
+
+def test_score_alerts_counts_unmatched_firing_as_false_positive(heal_trace):
+    doctored = copy.copy(heal_trace)
+    doctored.events = heal_trace.events + [FaultRecord(
+        iteration=5, t_sim=2.0, kind="ghost/firing", node=3, device=-1,
+        value=9.9, source="alert")]
+    s = score_alerts(doctored, patience_s=4.0)
+    base = score_alerts(heal_trace, patience_s=4.0)
+    assert s["false_positives"] == base["false_positives"] + 1
+
+
+def test_score_alerts_reports_per_fault_and_patience(heal_trace):
+    s = score_alerts(heal_trace, patience_s=4.0)
+    assert s["detected"] == 1.0 and s["within_patience"] == 1.0
+    assert s["time_to_alert_s"] == pytest.approx(3.943, abs=0.1)
+    kinds = {f["kind"] for f in s["per_fault"]}
+    assert "thermal_runaway" in kinds
+
+
+def test_save_incidents_versioned_jsonl(heal_trace, tmp_path):
+    p = tmp_path / "inc.jsonl"
+    n = save_incidents(heal_trace, str(p))
+    lines = [json.loads(l) for l in p.read_text().splitlines()]
+    assert len(lines) == n
+    assert lines[0]["format"] == "lit-silicon-incidents"
+    types = {l.get("type") for l in lines[1:]}
+    assert types == {"timeline", "incident"}
+
+
+# --------------------------------------------------------------------------- #
+# dashboard + chrome trace
+# --------------------------------------------------------------------------- #
+def test_dashboard_renders_self_contained_html(heal_trace, tmp_path):
+    p = tmp_path / "dash.html"
+    n = render_dashboard(heal_trace, str(p))
+    html = p.read_text()
+    assert n == len(html.encode())
+    assert "<svg" in html and "node2" in html
+    assert "<script" not in html and "https://" not in html
+    txt = terminal_summary(heal_trace, patience_s=4.0)
+    assert "time-to-alert" in txt and "within patience" in txt
+
+
+def test_chrome_trace_carries_fleet_counters_and_alert_instants(
+        heal_trace, tmp_path):
+    p = tmp_path / "chrome.json"
+    export_chrome_trace(heal_trace, str(p))
+    with open(p) as f:
+        doc = json.load(f)
+    evs = doc["traceEvents"] if isinstance(doc, dict) else doc
+    counters = {e["name"] for e in evs if e.get("ph") == "C"}
+    assert {"lead_s", "t_obs_s", "node_power_w"} <= counters
+    instants = [e for e in evs if e.get("ph") == "i"]
+    assert any(e["name"].startswith("alert:") for e in instants)
+    assert any(e["name"].startswith("fault:") for e in instants)
+
+
+# --------------------------------------------------------------------------- #
+# monitor CLI (offline mode; obs_smoke.py covers the live path in CI)
+# --------------------------------------------------------------------------- #
+def test_cli_monitor_offline_check_replay(heal_trace, tmp_path, capsys):
+    from repro.api.cli import main
+    trace_path = str(tmp_path / "t.jsonl")
+    save_trace(heal_trace, trace_path)
+    dash = str(tmp_path / "d.html")
+    rc = main(["monitor", "--trace", trace_path, "--check-replay",
+               "--dashboard", dash, "--json"])
+    out = json.loads(capsys.readouterr().out)
+    assert rc == 0
+    assert out["replay_matches"] is True
+    assert out["alerts"]["false_positives"] == 0
+    assert "<svg" in open(dash).read()
+
+
+def test_cli_monitor_refuses_check_without_recorded_alerts(
+        heal_trace, tmp_path, capsys):
+    from repro.api.cli import main
+    bare = copy.copy(heal_trace)
+    bare.events = [e for e in heal_trace.events if e.source != "alert"]
+    trace_path = str(tmp_path / "bare.jsonl")
+    save_trace(bare, trace_path)
+    rc = main(["monitor", "--trace", trace_path, "--check-replay"])
+    assert rc == 2
+    capsys.readouterr()
+
+
+# --------------------------------------------------------------------------- #
+# escalation corroboration
+# --------------------------------------------------------------------------- #
+def test_alert_corroboration_unlocks_the_drain():
+    """A steady straggler that never spikes gives the watchdog nothing to
+    corroborate with — only the observability alert clears the drain."""
+    def drive(policy, alert_node=None):
+        decision = None
+        for step in range(12):
+            if alert_node is not None:
+                policy.note_alerts({alert_node})
+            t = np.array([0.4, 0.4, 0.4, 0.6])
+            d = policy.observe(step, t, t_sim=step * 0.4)
+            decision = decision or d
+        return decision
+
+    base = EscalationPolicy(EscalationConfig(patience_s=1.0),
+                            nodes=[0, 1, 2, 3])
+    assert drive(base) is None
+    cor = EscalationPolicy(
+        EscalationConfig(patience_s=1.0, alert_corroborate=True),
+        nodes=[0, 1, 2, 3])
+    d = drive(cor, alert_node=3)
+    assert d is not None and d.global_node == 3
+    assert d.reason == "straggle"
