@@ -101,7 +101,7 @@ def main() -> None:
     if args.write_fresh:
         with open(args.write_fresh, "w") as f:
             json.dump({"tolerance": tol, "metrics": fresh}, f, indent=2,
-                      sort_keys=True)
+                      sort_keys=True, allow_nan=False)
 
     if args.map:
         pairs = []

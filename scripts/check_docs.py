@@ -15,7 +15,10 @@ Asserts, against the code (not a hand-maintained list):
   * every metric name in the observability catalog (`METRICS`), every
     alert rule kind (`RULE_KINDS`) and every alert lifecycle state
     (`ALERT_STATES`) appears in docs/observability.md — which must also
-    cover the `monitor` subcommand.
+    cover the `monitor` subcommand;
+  * every lint rule id in `repro.analysis.RULES`, with its title,
+    appears in docs/analysis.md — which must also cover the baseline
+    workflow and the exit-code contract.
 
 Exit 0 when covered, 1 with a per-item listing otherwise — same contract
 as the other scripts/ smokes.
@@ -153,6 +156,22 @@ def main() -> int:
             missing.append("the `monitor` subcommand is not mentioned in "
                            "docs/observability.md")
 
+    from repro.analysis import RULES
+    analysis_text = docs.get("analysis.md", "")
+    if not analysis_text:
+        missing.append("docs/analysis.md does not exist")
+    else:
+        for rid, rule in sorted(RULES.items()):
+            if f"`{rid}`" not in analysis_text:
+                missing.append(f"lint rule `{rid}` is not documented in "
+                               f"docs/analysis.md")
+            elif rule.title not in analysis_text:
+                missing.append(f"lint rule `{rid}` title is out of date in "
+                               f"docs/analysis.md (expected: {rule.title!r})")
+        for needed in ("baseline", "--update-baseline", "exit"):
+            if needed not in analysis_text:
+                missing.append(f"docs/analysis.md does not cover {needed!r}")
+
     if missing:
         print(f"check_docs: {len(missing)} item(s) missing from docs/ "
               f"({len(docs)} file(s) scanned):", file=sys.stderr)
@@ -165,7 +184,8 @@ def main() -> int:
           f"{n_cmds} subcommands, {n_flags} flags, "
           f"{len(FAULT_KINDS)} fault kinds, {len(STAGES)} stages, "
           f"{len(SLO_METRICS)} SLO metrics, "
-          f"{len(METRICS)} obs metrics, {len(RULE_KINDS)} rule kinds "
+          f"{len(METRICS)} obs metrics, {len(RULE_KINDS)} rule kinds, "
+          f"{len(RULES)} lint rules "
           f"covered across {len(docs)} docs file(s)")
     return 0
 

@@ -1,0 +1,52 @@
+"""CI gate: run the repro-lint invariant checker over the repo.
+
+Thin wrapper over ``repro.analysis`` with the CI-friendly shape: lint the
+default targets (src/repro, scripts, benchmarks, examples) against the
+committed baseline, write the JSON report as a build artifact, and exit
+with the lint contract:
+
+  0  clean — no findings, no stale baseline entries
+  1  findings outside the baseline, or baseline entries matching nothing
+  2  usage/configuration error (bad path, malformed baseline)
+
+Same check as ``python -m repro lint --json --out REPORT`` — this script
+exists so the CI lint job does not need the package's console entry point
+wired up to get a report artifact.
+
+Usage: PYTHONPATH=src python scripts/check_invariants.py
+           [--root DIR] [--report FILE] [--baseline FILE|none]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from repro.analysis import lint_paths, render_json, render_text
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--root", default=None,
+                    help="repo root (default: this script's parent repo)")
+    ap.add_argument("--report", default="lint_report.json",
+                    help="where to write the JSON report artifact "
+                         "(default: lint_report.json)")
+    ap.add_argument("--baseline", default=None, metavar="FILE|none",
+                    help="baseline file (default: <root>/lint_baseline.json "
+                         "if present; 'none' disables suppression)")
+    args = ap.parse_args()
+    root = args.root or str(Path(__file__).resolve().parent.parent)
+    try:
+        result, _ = lint_paths(root=root, baseline_path=args.baseline)
+    except (ValueError, FileNotFoundError) as e:
+        print(f"check_invariants: error: {e}", file=sys.stderr)
+        return 2
+    Path(args.report).write_text(render_json(result) + "\n")
+    print(render_text(result))
+    print(f"check_invariants: JSON report written to {args.report}")
+    return result.exit_code()
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,142 @@
+"""Versioned suppression file for reviewed, accepted violations.
+
+A baseline entry names a rule, a path and either a ``snippet`` (the
+finding's matching identity — the stripped source line, or
+``Class.field`` for the parity rule) or ``"scope": "file"`` to accept a
+whole file (benchmark timing harnesses are wall-clock *by design*).
+Every entry carries a human ``reason``; the file is itself a registered
+artifact (``repro-lint-baseline`` v1) written NaN-free and key-sorted —
+the discipline RPL003 enforces everywhere else.
+
+Line numbers are deliberately not part of the identity, so entries
+survive edits elsewhere in the file; an entry that stops matching
+anything is *stale* and fails the lint run until pruned (run with
+``--update-baseline``) — accepted violations cannot silently outlive the
+code they excused.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple
+
+from repro.analysis.linter import Finding
+
+BASELINE_FORMAT = "repro-lint-baseline"
+BASELINE_VERSION = 1
+
+_UNREVIEWED = "UNREVIEWED: justify or fix, then edit this entry"
+
+
+@dataclass(frozen=True)
+class BaselineEntry:
+    rule: str
+    path: str
+    snippet: str = ""               # "" with scope="file"
+    scope: str = "line"             # "line" | "file"
+    reason: str = _UNREVIEWED
+
+    def matches(self, f: Finding) -> bool:
+        if self.rule != f.rule or self.path != f.path:
+            return False
+        return self.scope == "file" or self.snippet == f.snippet
+
+    def to_dict(self) -> dict:
+        d = {"rule": self.rule, "path": self.path, "reason": self.reason}
+        if self.scope == "file":
+            d["scope"] = "file"
+        else:
+            d["snippet"] = self.snippet
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict, where: str) -> "BaselineEntry":
+        unknown = set(d) - {"rule", "path", "snippet", "scope", "reason"}
+        if unknown:
+            raise ValueError(f"{where}: unknown baseline entry key(s) "
+                             f"{sorted(unknown)}")
+        for k in ("rule", "path"):
+            if k not in d:
+                raise ValueError(f"{where}: baseline entry missing {k!r}")
+        scope = d.get("scope", "line")
+        if scope not in ("line", "file"):
+            raise ValueError(f"{where}: bad baseline scope {scope!r}")
+        if scope == "line" and "snippet" not in d:
+            raise ValueError(f"{where}: line-scoped baseline entry needs "
+                             f"a snippet")
+        return cls(rule=d["rule"], path=d["path"],
+                   snippet=d.get("snippet", ""), scope=scope,
+                   reason=d.get("reason", _UNREVIEWED))
+
+
+@dataclass
+class Baseline:
+    entries: List[BaselineEntry] = field(default_factory=list)
+    path: Optional[str] = None
+
+    @classmethod
+    def empty(cls) -> "Baseline":
+        return cls(entries=[])
+
+    def apply(self, findings: List[Finding]) -> Tuple[List[Finding],
+                                                      List[Finding],
+                                                      List[dict]]:
+        """(kept, suppressed, stale_entries).  An entry may suppress any
+        number of findings (file scope, or a repeated identical line);
+        stale = matched zero findings this run."""
+        hit: Dict[BaselineEntry, int] = {e: 0 for e in self.entries}
+        kept, suppressed = [], []
+        for f in findings:
+            match = next((e for e in self.entries if e.matches(f)), None)
+            if match is None:
+                kept.append(f)
+            else:
+                hit[match] += 1
+                suppressed.append(f)
+        stale = [e.to_dict() for e in self.entries if hit[e] == 0]
+        return kept, suppressed, stale
+
+    def to_dict(self) -> dict:
+        ordered = sorted(self.entries,
+                         key=lambda e: (e.rule, e.path, e.scope, e.snippet))
+        return {"format": BASELINE_FORMAT, "version": BASELINE_VERSION,
+                "entries": [e.to_dict() for e in ordered]}
+
+    def save(self, path: str) -> None:
+        text = json.dumps(self.to_dict(), indent=2, sort_keys=True,
+                          allow_nan=False)
+        Path(path).write_text(text + "\n")
+
+
+def load_baseline(path: str) -> Baseline:
+    p = Path(path)
+    if not p.exists():
+        raise FileNotFoundError(f"baseline file does not exist: {path}")
+    data = json.loads(p.read_text())
+    if not isinstance(data, dict) or data.get("format") != BASELINE_FORMAT:
+        raise ValueError(f"{path}: not a {BASELINE_FORMAT} document")
+    if int(data.get("version", 0)) > BASELINE_VERSION:
+        raise ValueError(f"{path}: baseline version {data.get('version')} "
+                         f"is newer than supported {BASELINE_VERSION}")
+    entries = [BaselineEntry.from_dict(e, f"{path}[{i}]")
+               for i, e in enumerate(data.get("entries", []))]
+    return Baseline(entries=entries, path=path)
+
+
+def update_baseline(old: Baseline, findings: List[Finding]) -> Baseline:
+    """Refresh a baseline against the current findings: keep entries that
+    still match (reasons preserved), drop stale ones, add UNREVIEWED
+    entries for new findings.  The add/expire round-trip the CLI's
+    ``--update-baseline`` exposes."""
+    kept = [e for e in old.entries
+            if any(e.matches(f) for f in findings)]
+    covered = list(kept)
+    added: List[BaselineEntry] = []
+    for f in findings:
+        if any(e.matches(f) for e in covered):
+            continue
+        e = BaselineEntry(rule=f.rule, path=f.path, snippet=f.snippet)
+        covered.append(e)
+        added.append(e)
+    return Baseline(entries=kept + added, path=old.path)

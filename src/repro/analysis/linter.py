@@ -1,0 +1,217 @@
+"""The rule engine: collect files, parse once, run per-file and
+cross-file rule visitors, fold the baseline in, and hand a deterministic
+``LintResult`` to the reporters.
+
+Paths are handled repo-root-relative (posix) throughout, so rule scopes
+("only inside src/repro/core") and baseline entries are stable across
+checkouts and usable against fixture trees in tests (pass ``root=``).
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Tuple
+
+# directories never worth parsing (generated/caches/vendored test shims)
+_SKIP_DIRS = {"__pycache__", ".git", ".ruff_cache", "_shims",
+              ".pytest_cache", "build", "dist"}
+
+
+@dataclass(frozen=True, order=True)
+class Finding:
+    """One invariant violation, anchored to a source line.
+
+    ``snippet`` is the matching identity the baseline keys on: the
+    stripped source line for line rules, a ``Class.field`` token for the
+    cross-module parity rule — line numbers deliberately stay out of the
+    baseline so entries survive unrelated edits above them."""
+
+    rule: str
+    path: str
+    line: int
+    col: int
+    message: str
+    snippet: str = ""
+
+    def to_dict(self) -> dict:
+        return {"rule": self.rule, "path": self.path, "line": self.line,
+                "col": self.col, "message": self.message,
+                "snippet": self.snippet}
+
+    def format(self) -> str:
+        return (f"{self.path}:{self.line}:{self.col}: "
+                f"{self.rule} {self.message}")
+
+
+@dataclass
+class FileCtx:
+    """One parsed file, as the rules see it."""
+
+    path: str                       # repo-root-relative posix path
+    tree: ast.Module
+    source: str
+    lines: List[str] = field(default_factory=list)
+    _parents: Optional[Dict[ast.AST, ast.AST]] = None
+
+    def line_at(self, lineno: int) -> str:
+        if 1 <= lineno <= len(self.lines):
+            return self.lines[lineno - 1].strip()
+        return ""
+
+    def finding(self, rule: str, node: ast.AST, message: str,
+                snippet: Optional[str] = None) -> Finding:
+        line = getattr(node, "lineno", 1)
+        return Finding(rule=rule, path=self.path, line=line,
+                       col=getattr(node, "col_offset", 0) + 1,
+                       message=message,
+                       snippet=(self.line_at(line)
+                                if snippet is None else snippet))
+
+    def parents(self) -> Dict[ast.AST, ast.AST]:
+        """child -> parent map over the whole tree (built lazily once)."""
+        if self._parents is None:
+            self._parents = {}
+            for parent in ast.walk(self.tree):
+                for child in ast.iter_child_nodes(parent):
+                    self._parents[child] = parent
+        return self._parents
+
+    def ancestors(self, node: ast.AST) -> Iterable[ast.AST]:
+        p = self.parents()
+        while node in p:
+            node = p[node]
+            yield node
+
+
+@dataclass
+class LintResult:
+    root: str
+    files_scanned: int
+    findings: List[Finding]                 # non-baselined, sorted
+    suppressed: List[Finding]               # matched a baseline entry
+    stale_baseline: List[dict]              # entries that matched nothing
+    rules_run: List[str]
+
+    @property
+    def clean(self) -> bool:
+        return not self.findings and not self.stale_baseline
+
+    def exit_code(self) -> int:
+        return 0 if self.clean else 1
+
+
+def _iter_py_files(targets: List[Path]) -> List[Path]:
+    out: List[Path] = []
+    for t in targets:
+        if t.is_file() and t.suffix == ".py":
+            out.append(t)
+        elif t.is_dir():
+            for p in sorted(t.rglob("*.py")):
+                if not any(part in _SKIP_DIRS for part in p.parts):
+                    out.append(p)
+    return out
+
+
+def _load_ctx(path: Path, rel: str) -> FileCtx:
+    source = path.read_text()
+    try:
+        tree = ast.parse(source, filename=str(path))
+    except SyntaxError as e:
+        raise ValueError(f"{rel}: cannot parse: {e}") from e
+    return FileCtx(path=rel, tree=tree, source=source,
+                   lines=source.splitlines())
+
+
+def run_lint(paths: Iterable[str], root: str,
+             rules: Optional[Iterable[str]] = None,
+             baseline: Optional["Baseline"] = None) -> LintResult:
+    """Lint ``paths`` (files or directories, relative to or under
+    ``root``) with the selected rules (default: all), returning a
+    deterministic LintResult.  Unknown rule ids and unreadable paths raise
+    ValueError / FileNotFoundError (CLI exit code 2)."""
+    from repro.analysis.baseline import Baseline  # circular-import dance
+    from repro.analysis.rules import RULES
+
+    rootp = Path(root).resolve()
+    rule_ids = list(rules) if rules is not None else list(RULES)
+    unknown = [r for r in rule_ids if r not in RULES]
+    if unknown:
+        raise ValueError(f"unknown rule id(s) {unknown} "
+                         f"(known: {sorted(RULES)})")
+
+    targets: List[Path] = []
+    for p in paths:
+        cand = Path(p)
+        if not cand.is_absolute():
+            cand = rootp / cand
+        if not cand.exists():
+            raise FileNotFoundError(f"lint target does not exist: {p}")
+        targets.append(cand)
+
+    ctxs: Dict[str, FileCtx] = {}
+    for f in _iter_py_files(targets):
+        try:
+            rel = f.resolve().relative_to(rootp).as_posix()
+        except ValueError:
+            rel = f.as_posix()
+        if rel not in ctxs:
+            ctxs[rel] = _load_ctx(f, rel)
+
+    findings: List[Finding] = []
+    for rid in rule_ids:
+        rule = RULES[rid]
+        if rule.check_file is not None:
+            for rel in sorted(ctxs):
+                if rule.scope(rel):
+                    findings.extend(rule.check_file(ctxs[rel]))
+        if rule.check_project is not None:
+            findings.extend(rule.check_project(ctxs))
+    findings.sort()
+
+    bl = baseline if baseline is not None else Baseline.empty()
+    kept, suppressed, stale = bl.apply(findings)
+    return LintResult(root=str(rootp), files_scanned=len(ctxs),
+                      findings=kept, suppressed=suppressed,
+                      stale_baseline=stale, rules_run=rule_ids)
+
+
+def default_targets(root: str) -> List[str]:
+    """The repo surfaces the invariants cover, filtered by existence."""
+    rootp = Path(root)
+    return [d for d in ("src/repro", "scripts", "benchmarks", "examples")
+            if (rootp / d).exists()]
+
+
+def find_repo_root(start: Optional[str] = None) -> str:
+    """Nearest ancestor holding src/repro (a checkout); falls back to the
+    installed package's grandparent so ``repro lint`` still resolves."""
+    cur = Path(start or Path.cwd()).resolve()
+    for cand in (cur, *cur.parents):
+        if (cand / "src" / "repro").is_dir():
+            return str(cand)
+    pkg = Path(__file__).resolve().parents[2]   # .../src
+    return str(pkg.parent)
+
+
+def lint_paths(paths: Optional[Iterable[str]] = None,
+               root: Optional[str] = None,
+               rules: Optional[Iterable[str]] = None,
+               baseline_path: Optional[str] = None) -> Tuple[LintResult,
+                                                             "Baseline"]:
+    """One-call front door used by the CLI and scripts/check_invariants:
+    resolve root + default targets + default baseline, run, return both
+    the result and the (possibly empty) baseline that was applied."""
+    from repro.analysis.baseline import Baseline, load_baseline
+
+    root = root or find_repo_root()
+    targets = list(paths) if paths else default_targets(root)
+    if baseline_path == "none":
+        bl = Baseline.empty()
+    elif baseline_path:
+        bl = load_baseline(baseline_path)
+    else:
+        default = Path(root) / "lint_baseline.json"
+        bl = load_baseline(str(default)) if default.exists() \
+            else Baseline.empty()
+    return run_lint(targets, root=root, rules=rules, baseline=bl), bl

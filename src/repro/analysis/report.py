@@ -1,0 +1,65 @@
+"""Human + JSON reporters over a LintResult.
+
+The JSON report is itself a versioned artifact (``repro-lint-report`` v1,
+declared in the schema registry) written with the very discipline RPL003
+enforces — ``sort_keys=True, allow_nan=False`` — so the CI artifact is
+byte-deterministic for a given tree."""
+from __future__ import annotations
+
+import json
+from collections import Counter
+from typing import Dict
+
+from repro.analysis.linter import LintResult
+
+REPORT_FORMAT = "repro-lint-report"
+REPORT_VERSION = 1
+
+
+def render_json(result: LintResult) -> str:
+    from repro.analysis.rules import RULES
+    counts = Counter(f.rule for f in result.findings)
+    doc: Dict = {
+        "format": REPORT_FORMAT,
+        "version": REPORT_VERSION,
+        "root": result.root,
+        "files_scanned": result.files_scanned,
+        "rules_run": list(result.rules_run),
+        "rule_titles": {rid: RULES[rid].title for rid in result.rules_run},
+        "counts": dict(sorted(counts.items())),
+        "findings": [f.to_dict() for f in result.findings],
+        "suppressed_count": len(result.suppressed),
+        "stale_baseline": result.stale_baseline,
+        "clean": result.clean,
+        "exit_code": result.exit_code(),
+    }
+    return json.dumps(doc, indent=2, sort_keys=True, allow_nan=False)
+
+
+def render_text(result: LintResult) -> str:
+    from repro.analysis.rules import RULES
+    out = []
+    by_rule: Dict[str, list] = {}
+    for f in result.findings:
+        by_rule.setdefault(f.rule, []).append(f)
+    for rid in sorted(by_rule):
+        out.append(f"{rid} — {RULES[rid].title} "
+                   f"({len(by_rule[rid])} finding(s))")
+        for f in by_rule[rid]:
+            out.append(f"  {f.format()}")
+            if f.snippet:
+                out.append(f"      {f.snippet}")
+    for e in result.stale_baseline:
+        ident = e.get("snippet") or "scope=file"
+        out.append(f"stale baseline entry: {e['rule']} {e['path']} "
+                   f"[{ident}] matches nothing — prune it "
+                   f"(repro lint --update-baseline)")
+    n = len(result.findings)
+    out.append(f"repro-lint: {result.files_scanned} file(s), "
+               f"{len(result.rules_run)} rule(s): "
+               f"{n} finding(s), {len(result.suppressed)} baselined, "
+               f"{len(result.stale_baseline)} stale baseline entr"
+               f"{'y' if len(result.stale_baseline) == 1 else 'ies'}")
+    if result.clean:
+        out.append("clean — every invariant holds")
+    return "\n".join(out)

@@ -1,0 +1,141 @@
+"""Rule registry + the small AST vocabulary the rule modules share.
+
+A rule is a dataclass with an id (``RPLnnn``), a one-line title, a scope
+predicate over repo-relative posix paths, and one or both of:
+
+  * ``check_file(ctx)``      — per-file visitor, yields Findings;
+  * ``check_project(ctxs)``  — cross-file analysis over the whole lint set
+                               (RPL005 engine parity needs to compare
+                               modules against each other).
+
+``FileCtx`` carries the parsed tree, the source, and a parent map so rules
+can climb from a node to its enclosing statement (RPL004 needs to know
+whether an unordered producer sits under a ``sorted()``).
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Iterable, List, Optional
+
+from repro.analysis.linter import FileCtx, Finding
+
+
+@dataclass(frozen=True)
+class Rule:
+    id: str
+    title: str
+    rationale: str                  # which repo contract the rule protects
+    scope: Callable[[str], bool]    # repo-relative posix path -> in scope?
+    check_file: Optional[Callable[[FileCtx], Iterable[Finding]]] = None
+    check_project: Optional[
+        Callable[[Dict[str, FileCtx]], Iterable[Finding]]] = None
+
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` for a Name/Attribute chain, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def call_name(node: ast.AST) -> Optional[str]:
+    """Dotted name of a call's callee, else None."""
+    return dotted_name(node.func) if isinstance(node, ast.Call) else None
+
+
+def used_field_names(tree: ast.AST) -> set:
+    """Every name a module reads attribute-style: ``x.name`` attribute
+    accesses, string-literal subscripts ``d["name"]``, and
+    ``getattr(x, "name", ...)`` literals — the cross-module usage signal
+    RPL005 compares engine modules by."""
+    names: set = set()
+    for n in ast.walk(tree):
+        if isinstance(n, ast.Attribute):
+            names.add(n.attr)
+        elif (isinstance(n, ast.Subscript)
+              and isinstance(n.slice, ast.Constant)
+              and isinstance(n.slice.value, str)):
+            names.add(n.slice.value)
+        elif (isinstance(n, ast.Call) and isinstance(n.func, ast.Name)
+              and n.func.id in ("getattr", "hasattr") and len(n.args) >= 2
+              and isinstance(n.args[1], ast.Constant)
+              and isinstance(n.args[1].value, str)):
+            names.add(n.args[1].value)
+    return names
+
+
+def dataclass_fields(tree: ast.AST, class_name: str) -> Optional[List[str]]:
+    """Annotated field names of ``class_name`` in ``tree`` (declaration
+    order), or None when the class is absent."""
+    for n in ast.walk(tree):
+        if isinstance(n, ast.ClassDef) and n.name == class_name:
+            return [s.target.id for s in n.body
+                    if isinstance(s, ast.AnnAssign)
+                    and isinstance(s.target, ast.Name)]
+    return None
+
+
+def module_str_constants(tree: ast.AST) -> Dict[str, str]:
+    """Module-level ``NAME = "literal"`` string bindings."""
+    out: Dict[str, str] = {}
+    for n in tree.body if isinstance(tree, ast.Module) else []:
+        if (isinstance(n, ast.Assign) and len(n.targets) == 1
+                and isinstance(n.targets[0], ast.Name)
+                and isinstance(n.value, ast.Constant)
+                and isinstance(n.value.value, str)):
+            out[n.targets[0].id] = n.value.value
+    return out
+
+
+def module_int_constants(tree: ast.AST) -> Dict[str, int]:
+    """Module-level ``NAME = <int>`` bindings."""
+    out: Dict[str, int] = {}
+    for n in tree.body if isinstance(tree, ast.Module) else []:
+        if (isinstance(n, ast.Assign) and len(n.targets) == 1
+                and isinstance(n.targets[0], ast.Name)
+                and isinstance(n.value, ast.Constant)
+                and isinstance(n.value.value, bool) is False
+                and isinstance(n.value.value, int)):
+            out[n.targets[0].id] = n.value.value
+    return out
+
+
+def path_in(*prefixes: str) -> Callable[[str], bool]:
+    """Scope predicate: path starts with any of the given prefixes."""
+    def pred(path: str) -> bool:
+        return any(path == p or path.startswith(p.rstrip("/") + "/")
+                   or (p.endswith(".py") and path == p) for p in prefixes)
+    return pred
+
+
+def path_not_in(*prefixes: str) -> Callable[[str], bool]:
+    inside = path_in(*prefixes)
+    return lambda path: not inside(path)
+
+
+# rule modules are imported at the bottom so they can use the helpers above
+from repro.analysis.rules import (clock, floats, ordering, parity,  # noqa: E402
+                                  rng, serialization)
+
+RULES: Dict[str, Rule] = {
+    r.id: r for r in (
+        rng.RPL001,
+        clock.RPL002,
+        serialization.RPL003,
+        ordering.RPL004,
+        parity.RPL005,
+        serialization.RPL006,
+        floats.RPL007,
+        clock.RPL008,
+    )
+}
+
+__all__ = ["RULES", "Rule", "call_name", "dataclass_fields", "dotted_name",
+           "module_int_constants", "module_str_constants", "path_in",
+           "path_not_in", "used_field_names"]

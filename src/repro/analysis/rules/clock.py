@@ -1,0 +1,131 @@
+"""RPL002 + RPL008 — wall-clock discipline.
+
+The simulation, serving, telemetry and observability layers run on an
+*injectable simulated clock*: every timestamp in a trace is derived from
+step counts and modeled durations, which is what makes record/replay
+bit-for-bit and lets tests drive time deterministically.  A single
+``time.time()`` smuggled into those layers produces traces that can never
+replay.
+
+RPL002 flags wall-clock *calls* inside the clocked layers.  References
+(``clock=time.perf_counter`` as an injectable default) are fine — only
+``time.time()``-style call sites are violations.  Benchmarks measure real
+elapsed time by design and live in the baseline, file-scoped.
+
+RPL008 flags watchdog-style classes (``__init__`` taking a ``clock``
+parameter) that fall back to a wall-clock callable instead of requiring
+injection — whether as the parameter default (``clock=time.monotonic``)
+or as a body fallback (``self.clock = time.monotonic if clock is None
+else clock``).  Either way, constructing the object without arguments
+looks pure but silently binds real time.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Optional
+
+from repro.analysis.linter import FileCtx, Finding
+from repro.analysis.rules import Rule, call_name, dotted_name, path_in
+
+WALL_CLOCKS = {
+    "time.time", "time.time_ns",
+    "time.monotonic", "time.monotonic_ns",
+    "time.perf_counter", "time.perf_counter_ns",
+    "time.process_time", "time.process_time_ns",
+    "datetime.now", "datetime.utcnow", "datetime.today",
+    "datetime.datetime.now", "datetime.datetime.utcnow",
+    "datetime.datetime.today", "date.today", "datetime.date.today",
+}
+
+_CLOCKED_LAYERS = ("src/repro/core", "src/repro/serve",
+                   "src/repro/telemetry", "src/repro/obs",
+                   "src/repro/launch", "benchmarks")
+
+
+def _check_calls(ctx: FileCtx) -> Iterator[Finding]:
+    for node in ast.walk(ctx.tree):
+        name = call_name(node)
+        if name in WALL_CLOCKS:
+            yield ctx.finding(
+                "RPL002", node,
+                f"{name}() inside a clocked layer — timestamps here must "
+                f"come from the injectable simulated clock, or the layer "
+                f"can never replay bit-for-bit")
+
+
+RPL002 = Rule(
+    id="RPL002",
+    title="wall-clock call inside a simulated-clock layer",
+    rationale="core/serve/telemetry/obs/launch derive all timestamps from "
+              "the injectable simulated clock; wall-clock calls there "
+              "produce traces that cannot replay",
+    scope=path_in(*_CLOCKED_LAYERS),
+    check_file=_check_calls,
+)
+
+
+_CLOCK_PARAMS = ("clock", "now", "time_fn", "clock_fn")
+
+
+def _wall_clock_ref(expr: ast.AST) -> Optional[str]:
+    """Dotted wall-clock name referenced anywhere inside ``expr``."""
+    for sub in ast.walk(expr):
+        name = dotted_name(sub)
+        if name in WALL_CLOCKS:
+            return name
+    return None
+
+
+def _default_clock_classes(ctx: FileCtx) -> Iterator[Finding]:
+    for cls in ast.walk(ctx.tree):
+        if not isinstance(cls, ast.ClassDef):
+            continue
+        for fn in cls.body:
+            if not (isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef))
+                    and fn.name == "__init__"):
+                continue
+            args = fn.args
+            params = args.args + args.kwonlyargs
+            defaults = ([None] * (len(args.args) - len(args.defaults))
+                        + list(args.defaults) + list(args.kw_defaults))
+            clock_params = [p.arg for p in params
+                            if p.arg in _CLOCK_PARAMS]
+            if not clock_params:
+                continue
+            # wall-clock as the parameter default
+            for param, default in zip(params, defaults):
+                if param.arg not in _CLOCK_PARAMS or default is None:
+                    continue
+                name = _wall_clock_ref(default)
+                if name is not None:
+                    yield ctx.finding(
+                        "RPL008", fn,
+                        f"{cls.name}.__init__ defaults {param.arg!r} to "
+                        f"{name} — default the clock to None and require "
+                        f"injection (or explicit dt) so construction "
+                        f"stays deterministic",
+                        snippet=f"{cls.name}.__init__.{param.arg}")
+            # wall-clock as a body fallback
+            # (self.clock = time.monotonic if clock is None else clock)
+            for stmt in fn.body:
+                for sub in ast.walk(stmt):
+                    name = dotted_name(sub)
+                    if name in WALL_CLOCKS:
+                        yield ctx.finding(
+                            "RPL008", sub,
+                            f"{cls.name}.__init__ falls back to {name} "
+                            f"for {clock_params[0]!r} — require an "
+                            f"injected clock (or explicit dt) instead of "
+                            f"a wall-clock default",
+                            snippet=f"{cls.name}.__init__.{clock_params[0]}")
+
+
+RPL008 = Rule(
+    id="RPL008",
+    title="class defaults its clock parameter to wall time",
+    rationale="a clock parameter defaulting to time.monotonic makes the "
+              "zero-argument constructor silently nondeterministic; "
+              "default to None and require injection",
+    scope=path_in("src/repro"),
+    check_file=_default_clock_classes,
+)

@@ -1,0 +1,64 @@
+"""RPL007 — bare float equality in replay / equivalence paths.
+
+The replay and detection layers compare *modeled* quantities that are
+reconstructed through arithmetic — comparing them with ``==`` against a
+float literal encodes an exactness assumption that holds only until
+someone reorders an operation.  Where the contract genuinely IS
+bit-identity (trace replay equivalence), the comparison belongs on the
+encoded artifact values or behind ``np.array_equal`` with an explicit
+comment; a threshold belongs in ``math.isclose`` / ``np.isclose`` or an
+ordered comparison.
+
+Flagged: ``==`` / ``!=`` where either operand is a non-integral float
+literal (or a ``float(...)`` cast), inside the replay/equivalence
+surfaces.  Comparisons against ``0.0`` exactly are allowed — testing
+"was this ever set" against the additive identity is well-defined.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis.linter import FileCtx, Finding
+from repro.analysis.rules import Rule, call_name, path_in
+
+_SURFACES = ("src/repro/telemetry", "src/repro/obs",
+             "src/repro/serve/metrics.py", "src/repro/core/escalate.py",
+             "src/repro/core/detect.py")
+
+
+def _float_operand(expr: ast.AST) -> bool:
+    if isinstance(expr, ast.Constant) and isinstance(expr.value, float):
+        return expr.value != 0.0
+    if isinstance(expr, ast.UnaryOp) and isinstance(expr.op, ast.USub):
+        return _float_operand(expr.operand)
+    return call_name(expr) == "float"
+
+
+def _check(ctx: FileCtx) -> Iterator[Finding]:
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Compare):
+            continue
+        ops_operands = zip(node.ops, [node.left] + node.comparators,
+                           node.comparators)
+        for op, left, right in ops_operands:
+            if not isinstance(op, (ast.Eq, ast.NotEq)):
+                continue
+            if _float_operand(left) or _float_operand(right):
+                yield ctx.finding(
+                    "RPL007", node,
+                    "bare float ==/!= against a float literal in a "
+                    "replay/equivalence path — use math.isclose / "
+                    "np.isclose (tolerance) or an ordered comparison")
+                break
+
+
+RPL007 = Rule(
+    id="RPL007",
+    title="bare float equality in replay/equivalence paths",
+    rationale="exact float comparison against a literal encodes an "
+              "operation-order assumption; replay equivalence is defined "
+              "on encoded artifact values, not intermediate arithmetic",
+    scope=path_in(*_SURFACES),
+    check_file=_check,
+)

@@ -1,0 +1,80 @@
+"""RPL004 — iteration over unordered collections in deterministic code.
+
+JSONL artifact rows, metric aggregations and checkpoint discovery must
+not depend on filesystem or hash ordering: ``os.listdir`` order is
+whatever the kernel returns, ``Path.glob`` order is platform-defined,
+and set iteration order varies with insertion history.  Any of those
+feeding an emission path silently reorders artifact bytes between runs
+— the exact class of bug byte-determinism tests can't catch unless the
+environment happens to disagree.  Wrap the producer in ``sorted(...)``.
+
+(Dict iteration is fine — Python dicts preserve insertion order, which
+the writers control.)
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Optional
+
+from repro.analysis.linter import FileCtx, Finding
+from repro.analysis.rules import Rule, call_name, path_not_in
+
+_LISTING_ATTRS = {"listdir", "iterdir", "glob", "rglob", "scandir"}
+
+
+def _under_sorted(ctx: FileCtx, node: ast.AST) -> bool:
+    """True when some enclosing expression already sorts the producer."""
+    for anc in ctx.ancestors(node):
+        if isinstance(anc, ast.stmt):
+            return False
+        name = call_name(anc)
+        if name in ("sorted", "min", "max", "len", "set", "frozenset"):
+            return True
+    return False
+
+
+def _listing_call(node: ast.AST) -> Optional[str]:
+    if not isinstance(node, ast.Call):
+        return None
+    fn = node.func
+    if isinstance(fn, ast.Attribute) and fn.attr in _LISTING_ATTRS:
+        return fn.attr
+    if isinstance(fn, ast.Name) and fn.id in ("listdir", "scandir"):
+        return fn.id
+    return None
+
+
+def _is_set_expr(node: ast.AST) -> bool:
+    if isinstance(node, (ast.Set, ast.SetComp)):
+        return True
+    return call_name(node) in ("set", "frozenset")
+
+
+def _check(ctx: FileCtx) -> Iterator[Finding]:
+    for node in ast.walk(ctx.tree):
+        attr = _listing_call(node)
+        if attr is not None and not _under_sorted(ctx, node):
+            yield ctx.finding(
+                "RPL004", node,
+                f"{attr}() order is filesystem-defined — wrap the listing "
+                f"in sorted(...) before it feeds artifacts or aggregation")
+        if isinstance(node, (ast.For, ast.AsyncFor, ast.comprehension)):
+            it = node.iter
+            if _is_set_expr(it):
+                anchor = it if hasattr(it, "lineno") else node
+                yield ctx.finding(
+                    "RPL004", anchor,
+                    "iterating a set — order varies with insertion "
+                    "history; iterate sorted(...) of it instead")
+
+
+RPL004 = Rule(
+    id="RPL004",
+    title="unordered collection iteration (set / unsorted directory "
+          "listing)",
+    rationale="JSONL rows and aggregated metrics must not inherit "
+              "filesystem or hash ordering, or artifact bytes reorder "
+              "between runs",
+    scope=path_not_in("tests"),
+    check_file=_check,
+)

@@ -1,0 +1,125 @@
+"""RPL001 — unseeded or wall-clock-seeded RNG outside tests/.
+
+Every random draw in this repo must come from an explicitly seeded
+generator: the ``[seed, k]`` prefix-stability of Monte-Carlo populations
+and the bit-for-bit record/replay guarantee both die the moment a stream
+seeds itself from process entropy or the wall clock.  Flagged:
+
+  * ``np.random.default_rng()`` / ``np.random.Generator`` construction
+    with no seed argument;
+  * any RNG seeded from a call (``default_rng(time.time_ns())``,
+    ``PRNGKey(int(time.time()))``, ``seed=os.getpid()`` ...) — a seed must
+    be a literal or plumbed-through value, never freshly minted entropy;
+  * the stdlib ``random`` module's global functions and unseeded
+    ``random.Random()`` (hidden process-global state);
+  * the legacy numpy global RNG (``np.random.normal`` & co. — global
+    mutable state that any import can perturb);
+  * ``jax.random.PRNGKey`` / ``jax.random.key`` with a float seed.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis.linter import FileCtx, Finding
+from repro.analysis.rules import Rule, call_name, dotted_name, path_not_in
+
+_DEFAULT_RNG = {"np.random.default_rng", "numpy.random.default_rng",
+                "random.default_rng", "default_rng"}
+_STDLIB_GLOBAL = {"random.random", "random.randint", "random.seed",
+                  "random.shuffle", "random.choice", "random.choices",
+                  "random.uniform", "random.sample", "random.randrange",
+                  "random.getrandbits", "random.gauss", "random.normalvariate"}
+_NP_SEEDED_OK = {"default_rng", "Generator", "SeedSequence", "PCG64",
+                 "Philox", "RandomState", "get_state", "set_state"}
+_PRNG_KEY = {"jax.random.PRNGKey", "random.PRNGKey", "PRNGKey",
+             "jax.random.key"}
+_ENTROPY_CALLS = {"time.time", "time.time_ns", "time.monotonic",
+                  "time.monotonic_ns", "time.perf_counter",
+                  "time.perf_counter_ns", "os.getpid", "os.urandom",
+                  "uuid.uuid4", "uuid.uuid1", "secrets.token_bytes",
+                  "secrets.randbits", "datetime.now", "datetime.utcnow",
+                  "datetime.datetime.now", "datetime.datetime.utcnow"}
+
+
+def _seed_args(node: ast.Call):
+    """The expressions that act as the seed: positional[0] and any
+    seed-ish keyword."""
+    if node.args:
+        yield node.args[0]
+    for kw in node.keywords:
+        if kw.arg in ("seed", "key", "rng_seed"):
+            yield kw.value
+
+
+def _entropy_call_inside(expr: ast.AST):
+    for sub in ast.walk(expr):
+        name = call_name(sub)
+        if name in _ENTROPY_CALLS:
+            return name
+    return None
+
+
+def _check(ctx: FileCtx) -> Iterator[Finding]:
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = call_name(node)
+        if name is None:
+            continue
+        if name in _DEFAULT_RNG:
+            if not node.args and not any(kw.arg == "seed" or kw.arg is None
+                                         for kw in node.keywords):
+                yield ctx.finding(
+                    "RPL001", node,
+                    "unseeded np.random.default_rng() — pass an explicit "
+                    "seed so the stream is replayable")
+                continue
+        if name in _DEFAULT_RNG or name in _PRNG_KEY \
+                or name == "random.Random":
+            for seed in _seed_args(node):
+                ent = _entropy_call_inside(seed)
+                if ent is not None:
+                    yield ctx.finding(
+                        "RPL001", node,
+                        f"RNG seeded from {ent}() — wall-clock/entropy "
+                        f"seeds break replay; use a literal or a plumbed "
+                        f"seed")
+                    break
+        if name in _PRNG_KEY:
+            for seed in _seed_args(node):
+                if (isinstance(seed, ast.Constant)
+                        and isinstance(seed.value, float)):
+                    yield ctx.finding(
+                        "RPL001", node,
+                        "float PRNGKey seed — key derivation truncates; "
+                        "use an int literal or plumbed int")
+        if name == "random.Random" and not node.args \
+                and not node.keywords:
+            yield ctx.finding(
+                "RPL001", node,
+                "unseeded random.Random() — pass an explicit seed")
+        if name in _STDLIB_GLOBAL:
+            yield ctx.finding(
+                "RPL001", node,
+                f"{name}() uses the process-global stdlib RNG — construct "
+                f"a seeded random.Random / np.random.default_rng instead")
+        if name and (name.startswith("np.random.")
+                     or name.startswith("numpy.random.")):
+            tail = name.rsplit(".", 1)[1]
+            if tail not in _NP_SEEDED_OK and tail[:1].islower():
+                yield ctx.finding(
+                    "RPL001", node,
+                    f"{name}() draws from numpy's legacy global RNG — use "
+                    f"a seeded np.random.default_rng(...) generator")
+
+
+RPL001 = Rule(
+    id="RPL001",
+    title="unseeded or wall-clock-seeded RNG outside tests/",
+    rationale="[seed, k] prefix-stable Monte-Carlo populations and "
+              "bit-for-bit record/replay require every stream to descend "
+              "from an explicit seed",
+    scope=path_not_in("tests"),
+    check_file=_check,
+)

@@ -1,0 +1,163 @@
+"""RPL003 + RPL006 — artifact serialization discipline.
+
+Every JSON artifact this repo writes (telemetry traces, sweep results,
+metrics/incident logs, checkpoints, CLI reports) participates in two
+contracts:
+
+  * **byte-determinism** — equal payload ⇒ equal bytes, so replay
+    equivalence and CI diffing work.  ``json.dump(s)`` must pass
+    ``sort_keys=True`` (dict insertion order is an implementation detail
+    of the writer, not part of the payload) and ``allow_nan=False``
+    (bare ``NaN``/``Infinity`` tokens are not JSON; readers in other
+    runtimes reject them).  Non-finite floats go through the
+    ``{"$float": "nan" | "inf" | "-inf"}`` envelope (api/spec.py) or a
+    writer-local null encoding — RPL003 additionally flags NaN/Inf
+    *literals* fed straight into a dump call.
+
+  * **schema registration (RPL006)** — any ``{"format": ..., "version":
+    ...}`` envelope a writer emits must name a format declared in
+    ``repro.analysis.schema_registry.SCHEMAS`` at the registered version,
+    so artifact formats cannot fork silently.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, Optional, Tuple
+
+from repro.analysis.linter import FileCtx, Finding
+from repro.analysis.rules import (Rule, call_name, dotted_name,
+                                  module_int_constants,
+                                  module_str_constants, path_not_in)
+from repro.analysis.schema_registry import SCHEMAS
+
+_DUMPS = {"json.dump", "json.dumps"}
+_NONFINITE_NAMES = {"math.nan", "math.inf", "np.nan", "np.inf", "np.NaN",
+                    "np.NAN", "np.Inf", "numpy.nan", "numpy.inf"}
+
+
+def _kwarg(node: ast.Call, name: str) -> Optional[ast.expr]:
+    for kw in node.keywords:
+        if kw.arg == name:
+            return kw.value
+    return None
+
+
+def _is_const(node: Optional[ast.expr], value) -> bool:
+    return (isinstance(node, ast.Constant) and node.value is value)
+
+
+def _nonfinite_literal(expr: ast.AST) -> Optional[str]:
+    """'float("nan")' / 'math.inf' token if expr IS a non-finite literal."""
+    if (isinstance(expr, ast.Call) and call_name(expr) == "float"
+            and expr.args and isinstance(expr.args[0], ast.Constant)
+            and isinstance(expr.args[0].value, str)
+            and expr.args[0].value.lower().lstrip("+-") in ("nan", "inf",
+                                                            "infinity")):
+        return f'float("{expr.args[0].value}")'
+    name = dotted_name(expr)
+    if name in _NONFINITE_NAMES:
+        return name
+    return None
+
+
+def _check_dump_calls(ctx: FileCtx) -> Iterator[Finding]:
+    for node in ast.walk(ctx.tree):
+        if call_name(node) not in _DUMPS:
+            continue
+        fn = call_name(node)
+        if not _is_const(_kwarg(node, "allow_nan"), False):
+            yield ctx.finding(
+                "RPL003", node,
+                f"{fn}() without allow_nan=False — a NaN/Inf that slips "
+                f"into the payload becomes a bare non-JSON token; escape "
+                f"non-finite floats via the {{\"$float\": ...}} envelope "
+                f"and dump with allow_nan=False")
+        if not _is_const(_kwarg(node, "sort_keys"), True):
+            yield ctx.finding(
+                "RPL003", node,
+                f"{fn}() without sort_keys=True — dict insertion order "
+                f"leaks into artifact bytes and breaks byte-determinism")
+        for sub in ast.walk(node):
+            tok = _nonfinite_literal(sub)
+            if tok is not None:
+                yield ctx.finding(
+                    "RPL003", sub,
+                    f"non-finite literal {tok} fed to {fn}() — encode it "
+                    f"through the {{\"$float\": ...}} envelope instead")
+
+
+RPL003 = Rule(
+    id="RPL003",
+    title="json.dump(s) missing allow_nan=False/sort_keys=True, or raw "
+          "NaN/Inf in the payload",
+    rationale="artifact bytes must be deterministic and strictly-valid "
+              "JSON: replay equivalence diffs them, and non-Python "
+              "readers reject bare NaN tokens",
+    scope=path_not_in("tests"),
+    check_file=_check_dump_calls,
+)
+
+
+def _envelope_values(ctx: FileCtx,
+                     d: ast.Dict) -> Optional[Tuple[object, object,
+                                                    ast.AST]]:
+    """(format_value, version_value, anchor_node) for a dict literal that
+    carries both a "format" and a "version" key; Name values resolve
+    through module-level constants, unresolvable values come back as
+    Ellipsis (checked for registration by name only)."""
+    strs = module_str_constants(ctx.tree)
+    ints = module_int_constants(ctx.tree)
+
+    def resolve(expr: ast.expr, consts: Dict) -> object:
+        if isinstance(expr, ast.Constant):
+            return expr.value
+        if isinstance(expr, ast.Name) and expr.id in consts:
+            return consts[expr.id]
+        return Ellipsis
+
+    fmt = ver = None
+    for k, v in zip(d.keys, d.values):
+        if isinstance(k, ast.Constant) and k.value == "format":
+            fmt = resolve(v, strs)
+        elif isinstance(k, ast.Constant) and k.value == "version":
+            ver = resolve(v, ints)
+    if fmt is None or ver is None:
+        return None
+    return fmt, ver, d
+
+
+def _check_envelopes(ctx: FileCtx) -> Iterator[Finding]:
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Dict):
+            continue
+        env = _envelope_values(ctx, node)
+        if env is None:
+            continue
+        fmt, ver, anchor = env
+        if fmt is Ellipsis:
+            continue                    # dynamic format: reader-side code
+        if fmt not in SCHEMAS:
+            yield ctx.finding(
+                "RPL006", anchor,
+                f"artifact envelope declares format {fmt!r} which is not "
+                f"registered in repro.analysis.schema_registry.SCHEMAS",
+                snippet=f"format={fmt}")
+        elif ver is not Ellipsis and ver != SCHEMAS[fmt]:
+            yield ctx.finding(
+                "RPL006", anchor,
+                f"artifact envelope writes {fmt!r} version {ver}, but the "
+                f"schema registry declares version {SCHEMAS[fmt]} — bump "
+                f"both together",
+                snippet=f"format={fmt} version={ver}")
+
+
+RPL006 = Rule(
+    id="RPL006",
+    title="artifact format/version envelope not declared in the schema "
+          "registry",
+    rationale="every on-disk artifact format is declared once in "
+              "schema_registry.SCHEMAS; writers drifting from it fork "
+              "the format silently",
+    scope=path_not_in("tests"),
+    check_file=_check_envelopes,
+)

@@ -1,0 +1,43 @@
+"""Central registry of artifact schemas: every ``format`` string a writer
+may put in a JSON/JSONL envelope, with its current version.
+
+This is the single source of truth rule RPL006 checks artifact writers
+against: a dict literal ``{"format": X, "version": Y}`` anywhere in the
+linted tree must resolve to an entry here, at the registered version.
+Runtime modules keep their own constants (``TRACE_FORMAT`` & co.) for
+import-cycle hygiene; ``tests/test_analysis.py`` pins each of them to this
+table so the two cannot drift.
+
+Adding a new artifact kind is a two-line change here (name + version) —
+which is the point: the diff review sees every new on-disk schema in one
+place, next to the versions readers already promise to support.
+"""
+from __future__ import annotations
+
+SCHEMAS = {
+    # telemetry JSONL traces (repro.telemetry.trace_io) and the Chrome
+    # trace export's otherData stamp
+    "lit-silicon-telemetry": 1,
+    # declarative scenario specs (repro.api.spec)
+    "lit-silicon-scenario": 1,
+    # Monte-Carlo sweep specs and their result artifacts (repro.api.sweep)
+    "lit-silicon-sweep-spec": 1,
+    "lit-silicon-sweep": 1,
+    # observability snapshots (repro.obs.metrics / repro.obs.incidents)
+    "lit-silicon-metrics": 1,
+    "lit-silicon-incidents": 1,
+    # repro-lint's own artifacts (repro.analysis.report / .baseline)
+    "repro-lint-report": 1,
+    "repro-lint-baseline": 1,
+}
+
+
+def schema_version(name: str) -> int:
+    """Registered version for ``name``; KeyError with the catalog when the
+    format is not declared (the runtime mirror of rule RPL006)."""
+    try:
+        return SCHEMAS[name]
+    except KeyError:
+        raise KeyError(f"artifact format {name!r} is not declared in "
+                       f"repro.analysis.schema_registry (known: "
+                       f"{sorted(SCHEMAS)})") from None

@@ -11,9 +11,12 @@ Commands:
   monitor NAME|--trace FILE  run with metrics + alert rules (or evaluate
                              the rules offline over a recorded trace) and
                              emit dashboards / incident timelines
+  lint [PATHS...]            check the repo's determinism / replay /
+                             engine-parity invariants (repro.analysis)
 
-Exit codes: 0 success, 1 runtime failure, 2 unknown scenario / bad usage
-(matching ``benchmarks/run.py --only``).
+Exit codes: 0 success, 1 runtime failure (for ``lint``: findings or stale
+baseline entries), 2 unknown scenario / bad usage (matching
+``benchmarks/run.py --only``).
 """
 from __future__ import annotations
 
@@ -69,7 +72,8 @@ def cmd_list(args) -> int:
     rows = list_scenarios()
     if args.json:
         print(json.dumps([{"name": n, "scope": s, "description": d}
-                          for n, s, d in rows], indent=2))
+                          for n, s, d in rows], indent=2,
+                         sort_keys=True, allow_nan=False))
         return 0
     width = max(len(n) for n, _, _ in rows)
     for name, scope, desc in rows:
@@ -93,9 +97,10 @@ def cmd_run(args) -> int:
     payload = res.to_json_dict()
     if args.out:
         with open(args.out, "w") as f:
-            json.dump(payload, f, indent=2, sort_keys=True)
+            json.dump(payload, f, indent=2, sort_keys=True, allow_nan=False)
     if args.json:
-        print(json.dumps(payload, indent=2, sort_keys=True))
+        print(json.dumps(payload, indent=2, sort_keys=True,
+                         allow_nan=False))
     else:
         from repro.api.reports import format_result
         print(format_result(res))
@@ -127,10 +132,10 @@ def cmd_sweep(args) -> int:
             brief = "  ".join(f"{k}={res.metrics[k]:.4f}" for k in keys)
             print(f"{label:<48s} {brief}")
     if args.json:
-        print(json.dumps(rows, indent=2, sort_keys=True))
+        print(json.dumps(rows, indent=2, sort_keys=True, allow_nan=False))
     if args.out:
         with open(args.out, "w") as f:
-            json.dump(rows, f, indent=2, sort_keys=True)
+            json.dump(rows, f, indent=2, sort_keys=True, allow_nan=False)
     return 0
 
 
@@ -248,7 +253,7 @@ def cmd_replay(args) -> int:
     except ValueError:
         pass
     if args.json:
-        print(json.dumps(out, indent=2, sort_keys=True))
+        print(json.dumps(out, indent=2, sort_keys=True, allow_nan=False))
     else:
         for k, v in out.items():
             print(f"{k}: {v}")
@@ -336,9 +341,11 @@ def cmd_monitor(args) -> int:
         out["metrics_file"] = args.metrics
     if args.out:
         with open(args.out, "w") as f:
-            json.dump(_nanless(out), f, indent=2, sort_keys=True)
+            json.dump(_nanless(out), f, indent=2, sort_keys=True,
+                      allow_nan=False)
     if args.json:
-        print(json.dumps(_nanless(out), indent=2, sort_keys=True))
+        print(json.dumps(_nanless(out), indent=2, sort_keys=True,
+                         allow_nan=False))
     else:
         print(terminal_summary(trace, patience_s=patience))
         for key in ("dashboard", "incidents_file", "metrics_file",
@@ -346,6 +353,39 @@ def cmd_monitor(args) -> int:
             if key in out:
                 print(f"{key.replace('_file', '')} written to {out[key]}")
     return 1 if out.get("replay_matches") is False else 0
+
+
+def cmd_lint(args) -> int:
+    from pathlib import Path
+
+    from repro.analysis import (RULES, lint_paths, render_json, render_text,
+                                update_baseline)
+    if args.list_rules:
+        for rid in sorted(RULES):
+            print(f"{rid}  {RULES[rid].title}")
+        return 0
+    rules = ([s.strip() for s in args.rules.split(",") if s.strip()]
+             if args.rules else None)
+    result, baseline = lint_paths(paths=args.paths or None, root=args.root,
+                                  rules=rules, baseline_path=args.baseline)
+    if args.update_baseline:
+        raw = sorted(result.findings + result.suppressed)
+        refreshed = update_baseline(baseline, raw)
+        path = baseline.path or str(Path(result.root) / "lint_baseline.json")
+        refreshed.save(path)
+        print(f"baseline rewritten: {path} ({len(refreshed.entries)} "
+              f"entr{'y' if len(refreshed.entries) == 1 else 'ies'}; review "
+              f"any UNREVIEWED reasons before committing)")
+        return 0
+    report = render_json(result)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(report + "\n")
+    if args.json:
+        print(report)
+    else:
+        print(render_text(result))
+    return result.exit_code()
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -429,6 +469,31 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--json", action="store_true")
     p.add_argument("--out", help="also write the JSON payload to a file")
     p.set_defaults(fn=cmd_monitor)
+
+    p = sub.add_parser("lint",
+                       help="check the repo's determinism / replay / "
+                            "engine-parity invariants (static analysis)")
+    p.add_argument("paths", nargs="*",
+                   help="files or directories to lint (default: src/repro, "
+                        "scripts, benchmarks, examples under the repo root)")
+    p.add_argument("--root", help="repo root for scope/baseline path "
+                                  "resolution (default: auto-detected)")
+    p.add_argument("--baseline", metavar="FILE|none",
+                   help="baseline file of reviewed, accepted findings "
+                        "(default: <root>/lint_baseline.json if present; "
+                        "'none' disables suppression)")
+    p.add_argument("--update-baseline", action="store_true",
+                   help="rewrite the baseline from the current findings: "
+                        "keep still-matching entries, drop stale ones, add "
+                        "UNREVIEWED entries for new findings")
+    p.add_argument("--rules", metavar="CSV",
+                   help="comma-separated rule ids to run (default: all)")
+    p.add_argument("--list-rules", action="store_true",
+                   help="print the rule catalog and exit")
+    p.add_argument("--json", action="store_true",
+                   help="print the JSON report instead of text")
+    p.add_argument("--out", help="also write the JSON report to a file")
+    p.set_defaults(fn=cmd_lint)
     return ap
 
 

@@ -282,7 +282,7 @@ class Scenario:
         """Versioned spec document: ``{format, version, scenario}``."""
         return json.dumps({"format": SPEC_FORMAT, "version": SPEC_VERSION,
                            "scenario": self.to_dict()},
-                          indent=indent, allow_nan=False)
+                          indent=indent, sort_keys=True, allow_nan=False)
 
     @classmethod
     def from_dict(cls, d: dict) -> "Scenario":

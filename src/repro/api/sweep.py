@@ -141,7 +141,7 @@ class SweepSpec:
         return json.dumps({"format": SWEEP_SPEC_FORMAT,
                            "version": SWEEP_VERSION,
                            "sweep": self.to_dict()},
-                          indent=indent, allow_nan=False)
+                          indent=indent, sort_keys=True, allow_nan=False)
 
     @classmethod
     def from_dict(cls, d: dict) -> "SweepSpec":

@@ -160,7 +160,8 @@ class PowerManager:
         caps = self.backend.get_power_caps()
         with open(path, "w") as f:
             json.dump({"use_case": self.cfg.use_case,
-                       "caps": caps.tolist()}, f)
+                       "caps": caps.tolist()}, f,
+                      sort_keys=True, allow_nan=False)
 
     def import_caps(self, path: str) -> None:
         with open(path) as f:

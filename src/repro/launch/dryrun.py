@@ -30,7 +30,10 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
              scan_layers: bool = True, fsdp_over_pod=None,
              grad_compression: str = "none", variant: str = "",
              attention: str = "chunked", moe_dispatch: str = "scatter",
-             verbose: bool = True) -> dict:
+             verbose: bool = True,
+             clock=time.perf_counter) -> dict:
+    # clock is injectable so the lower/compile latency fields stay
+    # testable without real elapsed time (RPL002)
     from repro.models.attention import set_attention_impl
     from repro.parallel.moe_shard_map import set_moe_dispatch
     set_attention_impl(attention)
@@ -75,7 +78,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
                         scan_layers=scan_layers)
     rules = ShardingRules(mesh, eff, parallel)
     specs = input_specs(eff, shape)
-    t0 = time.time()
+    t0 = clock()
 
     with mesh:
         if shape.kind == "train":
@@ -95,9 +98,9 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
                 lambda: model.init_cache(shape.global_batch))
             step, _, _ = build_decode_step(model, rules, cache)
             lowered = step.lower(params, specs["tokens"], cache)
-        t_lower = time.time() - t0
+        t_lower = clock() - t0
         compiled = lowered.compile()
-        t_compile = time.time() - t0 - t_lower
+        t_compile = clock() - t0 - t_lower
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
@@ -204,7 +207,7 @@ def main(argv=None):
             traceback.print_exc()
             continue
         with open(path, "w") as f:
-            json.dump(rec, f, indent=1)
+            json.dump(rec, f, indent=1, sort_keys=True, allow_nan=False)
     return 1 if failures else 0
 
 

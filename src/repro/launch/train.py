@@ -71,7 +71,7 @@ def main(argv=None):
               f"{np.round(caps, 0).tolist()}")
     if args.metrics_out:
         with open(args.metrics_out, "w") as f:
-            json.dump(log, f, indent=1)
+            json.dump(log, f, indent=1, sort_keys=True, allow_nan=False)
     return 0
 
 

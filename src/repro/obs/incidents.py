@@ -247,13 +247,14 @@ def save_incidents(trace, path: str,
                          if k != "per_fault"}
         f.write(json.dumps({"format": INCIDENTS_FORMAT,
                             "version": INCIDENTS_VERSION,
-                            "meta": meta}) + "\n")
+                            "meta": meta},
+                           sort_keys=True, allow_nan=False) + "\n")
         lines += 1
         for ev in timeline:
             d = asdict(ev)
             d = {k: _nn(v) for k, v in d.items()}
             d["type"] = "timeline"
-            f.write(json.dumps(d) + "\n")
+            f.write(json.dumps(d, sort_keys=True, allow_nan=False) + "\n")
             lines += 1
         for inc in incidents:
             f.write(json.dumps({
@@ -262,6 +263,7 @@ def save_incidents(trace, path: str,
                 "n_events": len(inc.events),
                 "fault_kinds": inc.fault_kinds,
                 "alert_rules": inc.alert_rules,
-                "drained": inc.drained}) + "\n")
+                "drained": inc.drained},
+                               sort_keys=True, allow_nan=False) + "\n")
             lines += 1
     return lines

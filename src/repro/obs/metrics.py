@@ -370,10 +370,12 @@ class MetricsRegistry:
         with open(path, "w") as f:
             f.write(json.dumps({"format": METRICS_FORMAT,
                                 "version": METRICS_VERSION,
-                                "meta": meta}) + "\n")
+                                "meta": meta},
+                               sort_keys=True, allow_nan=False) + "\n")
             lines += 1
             for name in sorted(self._families):
                 for row in self._families[name].snapshot_rows():
-                    f.write(json.dumps(row) + "\n")
+                    f.write(json.dumps(row, sort_keys=True,
+                                       allow_nan=False) + "\n")
                     lines += 1
         return lines

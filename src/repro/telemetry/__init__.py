@@ -12,6 +12,7 @@ sensor fidelity drops.
 from repro.telemetry.collector import (FaultRecord, FleetSample,
                                        ManagerAction, NodeSample,
                                        TelemetryCollector)
+from repro.telemetry.lead import estimate_fleet_lead, topology_params
 from repro.telemetry.replay import (DetectionReport, EscalationReplay,
                                     FleetLeadReport,
                                     FleetReplay, NodeReplay,
@@ -39,4 +40,5 @@ __all__ = [
     "replay_node", "replay_fleet", "fleet_replay_matches", "degrade",
     "DetectionReport", "detection_report",
     "FleetLeadReport", "fleet_lead_report",
+    "estimate_fleet_lead", "topology_params",
 ]

@@ -26,6 +26,7 @@ from typing import Deque, Dict, List, Optional
 
 import numpy as np
 
+from repro.telemetry.lead import estimate_fleet_lead, topology_params
 from repro.telemetry.sensors import LOSSLESS, SensorConfig, SensorModel
 
 # seed_offset of the fleet-scope sensor (the poller that observes per-node
@@ -244,6 +245,7 @@ class TelemetryCollector:
             self.attach_node(node, n)
         self.meta["n_nodes"] = cluster.N
         self.meta["topology"] = cluster.topology.name
+        self.meta["topology_params"] = topology_params(cluster.topology)
         self.meta["node_tdps"] = [float(p.tdp) for p in cluster.presets]
         self.meta["straggler_node"] = int(cluster.cfg.straggler_node)
         return self
@@ -294,24 +296,21 @@ class TelemetryCollector:
         if not self._sampled(iteration):
             return
         # what a real fleet manager sees: per-node iteration times through
-        # the (possibly lossy) fleet sensor, folded into a barrier-wait lead
-        # estimate max(t) - t.  Exact for DP; for PP/TP the gap to the true
-        # topology lead is the estimator's model bias, which
-        # fleet_lead_report quantifies alongside the sensor noise.  A
-        # lossless sensor draws nothing, so recording stays bit-for-bit.
+        # the (possibly lossy) fleet sensor, folded into the topology-aware
+        # lead estimate (telemetry/lead.py): exact for DP, exact 1F1B
+        # arithmetic for PP, jitter-corrected barrier for TP — the residual
+        # gap to the true lead is what fleet_lead_report quantifies
+        # alongside the sensor noise.  A dead sensor reads as NaN; the
+        # estimate degrades to the nodes still reporting (NaN where blind).
+        # A lossless sensor draws nothing, so recording stays bit-for-bit.
         t_obs = np.asarray(self.fleet_sensor().observe_times(
             np.asarray(h["t_local"], float)), float).copy()
         dead = h.get("sensor_dead")
         if dead is not None and np.any(dead):
-            # a dead sensor reads as NaN; the lead estimate degrades to the
-            # max over the nodes still reporting (NaN where blind).  The
-            # fault-free path is untouched (same floats as before).
             t_obs[np.asarray(dead, bool)] = np.nan
-            finite = np.isfinite(t_obs)
-            lead_obs = (np.max(t_obs[finite]) - t_obs if finite.any()
-                        else np.full_like(t_obs, np.nan))
-        else:
-            lead_obs = t_obs.max() - t_obs
+        lead_obs = estimate_fleet_lead(
+            t_obs, topology=str(h["topology"]),
+            params=self.meta.get("topology_params"))
         self.fleet.append(FleetSample(
             iteration=iteration, t_fleet=float(h["t_fleet"]),
             lead=np.asarray(h["lead"], float).copy(),
@@ -363,9 +362,7 @@ class TelemetryCollector:
         t_local = np.asarray(t_local, float).copy()
         t_obs = np.asarray(self.fleet_sensor().observe_times(t_local),
                            float).copy()
-        lead_obs = (np.nanmax(t_obs) - t_obs
-                    if np.isfinite(t_obs).any()
-                    else np.full_like(t_obs, np.nan))
+        lead_obs = estimate_fleet_lead(t_obs, topology=str(topology))
         self.fleet.append(FleetSample(
             iteration=int(round_index), t_fleet=float(np.max(t_local)),
             lead=t_local.max() - t_local, t_local=t_local,

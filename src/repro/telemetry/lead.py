@@ -1,0 +1,111 @@
+"""Topology-aware fleet lead estimation from observed iteration times.
+
+What a real fleet manager has is the per-node iteration times through a
+(possibly lossy, possibly dead) sensor — what it wants is each node's
+*lead*: how much slack the node has before it becomes the fleet's
+critical path.  The true lead depends on the parallelism topology
+(``core/topology.py``), which the manager does not get to re-run; this
+module is the observer-side counterpart, estimating the lead from
+``t_obs`` plus the small static parameter block the collector records at
+attach time (``meta["topology_params"]``).
+
+  dp / serve   barrier:  lead = max(t) - t over the finite readings.
+               Exact for a lossless sensor (bit-for-bit the topology's
+               own arithmetic) — the original estimator, unchanged.
+
+  pp           the bubble structure is deterministic given the stage
+               times, so the estimator mirrors the 1F1B arithmetic
+               exactly:  t_fleet = sum(t/M) + (M-1)*max(t/M) + comm,
+               lead = t_fleet - t.  With a lossless sensor the estimate
+               is bit-identical to the recorded true lead — the PP model
+               bias of the plain barrier estimator goes to zero.
+
+  tp           the per-sync jitter draws are private to the simulator,
+               so exactness is impossible; the estimator corrects the
+               barrier estimate's structural bias instead.  Under
+               per-segment jitter the sum of per-segment maxima exceeds
+               the max of sums: nodes whose totals tie near the top keep
+               exchanging the per-segment lead, and everyone — including
+               the apparent slowest — waits.  The correction inflates
+               the rendezvous point by ``max(t) * jitter * E[max of n
+               standard normals]`` with ``n`` the count of nodes within
+               the jitter band of the top; a lone straggler (n = 1)
+               leaves the barrier estimate untouched.
+
+Old traces carry no ``topology_params``; every estimator degrades to the
+barrier form, so replay of existing artifacts is unchanged.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional
+
+import numpy as np
+
+# E[max of n iid standard normals]; the sqrt(2 ln n) asymptote is used
+# past the tabulated range (Blom's approximation drifts there anyway)
+_EXP_MAX_STD_NORMAL = {2: 0.5642, 3: 0.8463, 4: 1.0294, 5: 1.1630,
+                       6: 1.2672, 7: 1.3522, 8: 1.4236}
+
+
+def _expected_max_std_normal(n: int) -> float:
+    if n <= 1:
+        return 0.0
+    if n in _EXP_MAX_STD_NORMAL:
+        return _EXP_MAX_STD_NORMAL[n]
+    return math.sqrt(2.0 * math.log(n))
+
+
+def topology_params(topo) -> Dict[str, object]:
+    """The static parameter block the lead estimator needs, extracted from
+    a ``core.topology.Topology`` at attach time (duck-typed: any object
+    with a ``name`` and the matching attributes works).  Everything in the
+    block is a JSON scalar so it survives the trace meta round trip
+    exactly."""
+    params: Dict[str, object] = {"kind": str(topo.name)}
+    if getattr(topo, "M", None) is not None and topo.name == "pp":
+        params["microbatches"] = int(topo.M)
+        params["comm_time"] = float(topo.comm_time())
+    if topo.name == "tp":
+        params["n_syncs"] = int(topo.K)
+        params["jitter"] = float(topo.jitter)
+        params["comm_time"] = float(topo.comm_time())
+    return params
+
+
+def estimate_fleet_lead(t_obs: np.ndarray, topology: str = "dp",
+                        params: Optional[Dict] = None) -> np.ndarray:
+    """Per-node lead estimate from observed iteration times.
+
+    ``t_obs`` may carry NaN where a sensor is dead; estimates are computed
+    over the nodes still reporting and NaN propagates to the blind slots.
+    ``params`` is the collector's ``meta["topology_params"]`` block (or
+    None for legacy traces — barrier fallback).
+    """
+    t_obs = np.asarray(t_obs, float)
+    finite = np.isfinite(t_obs)
+    if not finite.any():
+        return np.full_like(t_obs, np.nan)
+    p = params if params and params.get("kind") == topology else None
+
+    if topology == "pp" and p is not None and "microbatches" in p:
+        m = int(p["microbatches"])
+        comm = float(p.get("comm_time", 0.0))
+        tau = t_obs[finite] / m
+        t_fleet = float(tau.sum() + (m - 1) * tau.max()) + comm
+        return t_fleet - t_obs
+
+    if topology == "tp" and p is not None and float(p.get("jitter", 0.0)) > 0:
+        jitter = float(p["jitter"])
+        vals = t_obs[finite]
+        tmax = float(np.max(vals))
+        # nodes whose totals sit within ~2 sigma of the top keep trading
+        # the per-segment lead; a lone straggler leaves n_tied = 1 and the
+        # correction vanishes
+        n_tied = int(np.sum(vals >= tmax * (1.0 - 2.0 * jitter)))
+        inflation = tmax * jitter * _expected_max_std_normal(n_tied)
+        return (tmax + inflation) - t_obs
+
+    # dp / serve / unknown / legacy trace: barrier wait over the finite
+    # readings (bit-for-bit the original estimator)
+    return np.max(t_obs[finite]) - t_obs

@@ -35,6 +35,7 @@ from repro.core.detect import lead_value_detect
 from repro.core.manager import (FleetManagerConfig, FleetPowerManager,
                                 ManagerConfig, PowerManager)
 from repro.telemetry.collector import NodeSample
+from repro.telemetry.lead import estimate_fleet_lead
 from repro.telemetry.sensors import SensorModel
 from repro.telemetry.trace_io import TelemetryTrace
 
@@ -399,9 +400,11 @@ def degrade(trace: TelemetryTrace, sensor: SensorModel) -> TelemetryTrace:
             np.asarray(fs.t_local, float)), float).copy()
         if fs.t_obs is not None:
             t_obs[np.isnan(np.asarray(fs.t_obs, float))] = np.nan
-        finite = np.isfinite(t_obs)
-        lead_obs = (np.max(t_obs[finite]) - t_obs if finite.any()
-                    else np.full_like(t_obs, np.nan))
+        # same topology-aware estimator the live collector runs, driven
+        # from the trace meta (legacy traces fall back to the barrier)
+        lead_obs = estimate_fleet_lead(
+            t_obs, topology=str(fs.topology),
+            params=trace.meta.get("topology_params"))
         out.fleet.append(dataclasses.replace(
             fs, t_obs=t_obs, lead_obs=lead_obs))
     out.actions = list(trace.actions)

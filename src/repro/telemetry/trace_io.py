@@ -52,6 +52,13 @@ def _enc(a) -> object:
     return np.where(np.isnan(arr), None, arr.astype(object)).tolist()
 
 
+def _dumps(obj: dict) -> str:
+    """One artifact line: key-sorted, strictly-finite JSON — equal payload
+    means equal bytes, and a NaN that dodges _enc raises instead of
+    emitting a bare non-JSON token."""
+    return json.dumps(obj, sort_keys=True, allow_nan=False)
+
+
 def _dec(x, ndmin: int = 1) -> Optional[np.ndarray]:
     """JSON nested lists (null = NaN) -> float ndarray."""
     if x is None:
@@ -109,11 +116,11 @@ def save_trace(src, path: str, extra_meta: Optional[Dict] = None) -> int:
                                   in meta["straggler_hint"].items()}
     lines = 0
     with open(path, "w") as f:
-        f.write(json.dumps({"format": TRACE_FORMAT,
-                            "version": TRACE_VERSION, "meta": meta}) + "\n")
+        f.write(_dumps({"format": TRACE_FORMAT,
+                        "version": TRACE_VERSION, "meta": meta}) + "\n")
         lines += 1
         for s in trace.samples:
-            f.write(json.dumps({
+            f.write(_dumps({
                 "type": "node", "it": s.iteration, "node": s.node,
                 "t_local": s.t_local, "t_wall": s.t_wall,
                 "start": _enc(s.comp_start), "end": _enc(s.comp_end),
@@ -123,7 +130,7 @@ def save_trace(src, path: str, extra_meta: Optional[Dict] = None) -> int:
                 "truth_start": _enc(s.truth_start)}) + "\n")
             lines += 1
         for fs in trace.fleet:
-            f.write(json.dumps({
+            f.write(_dumps({
                 "type": "fleet", "it": fs.iteration, "t_fleet": fs.t_fleet,
                 "lead": _enc(fs.lead), "t_local": _enc(fs.t_local),
                 "node_power": _enc(fs.node_power),
@@ -133,13 +140,13 @@ def save_trace(src, path: str, extra_meta: Optional[Dict] = None) -> int:
                 "tail": _enc(fs.tail)}) + "\n")
             lines += 1
         for a in trace.actions:
-            f.write(json.dumps({
+            f.write(_dumps({
                 "type": "action", "it": a.iteration, "kind": a.kind,
                 "node": a.node, "values": _enc(a.values)}) + "\n")
             lines += 1
         for ev in trace.events:
             val = ev.value
-            f.write(json.dumps({
+            f.write(_dumps({
                 "type": "event", "it": ev.iteration, "t_sim": ev.t_sim,
                 "kind": ev.kind, "node": ev.node, "device": ev.device,
                 "value": (None if val != val else val),
@@ -149,7 +156,7 @@ def save_trace(src, path: str, extra_meta: Optional[Dict] = None) -> int:
         def _t(x: float):                   # NaN timestamps encode as null
             return None if x != x else x
         for rq in trace.requests:
-            f.write(json.dumps({
+            f.write(_dumps({
                 "type": "request", "rid": rq.rid, "node": rq.node,
                 "t_arrival": _t(rq.t_arrival), "t_admit": _t(rq.t_admit),
                 "t_first": _t(rq.t_first), "t_done": _t(rq.t_done),
@@ -318,5 +325,6 @@ def export_chrome_trace(src, path: str, max_samples: Optional[int] = None,
         json.dump({"traceEvents": events,
                    "displayTimeUnit": "ms",
                    "otherData": {"format": TRACE_FORMAT,
-                                 "version": TRACE_VERSION}}, f)
+                                 "version": TRACE_VERSION}}, f,
+                  sort_keys=True, allow_nan=False)
     return len(events)

@@ -85,7 +85,7 @@ class CheckpointManager:
             np.savez(os.path.join(tmp, "shard_0.npz"),
                      **{k.replace("/", "|"): v for k, v in arrays.items()})
             with open(os.path.join(tmp, "manifest.json"), "w") as f:
-                json.dump(manifest, f)
+                json.dump(manifest, f, sort_keys=True, allow_nan=False)
             shutil.rmtree(final, ignore_errors=True)
             os.replace(tmp, final)
             lat_tmp = os.path.join(self.dir, ".LATEST.tmp")
@@ -116,7 +116,7 @@ class CheckpointManager:
     def _clean_stale_tmp(self) -> None:
         """Remove ``.tmp-step_*`` leftovers from writers that crashed
         mid-save (the completed ``os.replace`` means none belong to us)."""
-        for d in os.listdir(self.dir):
+        for d in sorted(os.listdir(self.dir)):
             if d.startswith(".tmp-step_"):
                 shutil.rmtree(os.path.join(self.dir, d), ignore_errors=True)
 

@@ -16,7 +16,6 @@ adds the rest of the production story:
 from __future__ import annotations
 
 import math
-import time
 from dataclasses import dataclass, field
 from typing import List, Optional
 
@@ -32,28 +31,34 @@ class WatchdogConfig:
 
 
 class Watchdog:
-    """Step-health monitor.  Timing is injectable two ways so a simulator
-    (or a test) can drive it deterministically: pass ``clock`` (a
-    ``time.monotonic``-shaped callable) at construction, or hand
-    ``end_step`` an explicit ``dt`` in simulated seconds.  The default is
-    the wall clock, unchanged."""
+    """Step-health monitor.  Timing is injected, never defaulted: pass
+    ``clock`` (a ``time.monotonic``-shaped callable) at construction, or
+    hand ``end_step`` an explicit ``dt`` in simulated seconds.  With
+    neither, ``end_step`` raises — a watchdog that silently binds the
+    wall clock would make an argless construction nondeterministic
+    (train_loop passes ``clock=time.monotonic`` explicitly for real
+    runs)."""
 
     def __init__(self, cfg: WatchdogConfig = WatchdogConfig(), clock=None):
         self.cfg = cfg
-        self.clock = time.monotonic if clock is None else clock
+        self.clock = clock
         self.step_times: List[float] = []
         self.rollbacks = 0
         self.stalls = 0
         self._t0: Optional[float] = None
 
     def start_step(self) -> None:
-        self._t0 = self.clock()
+        self._t0 = self.clock() if self.clock is not None else None
 
     def end_step(self, loss: float, grad_norm: float,
                  dt: Optional[float] = None) -> str:
         """Returns 'ok' | 'stall' | 'rollback'.  ``dt`` overrides the
         measured step duration (simulated time drives the stall check)."""
         if dt is None:
+            if self.clock is None:
+                raise ValueError(
+                    "Watchdog has no clock: pass dt= to end_step or "
+                    "construct with clock= (e.g. time.monotonic)")
             dt = self.clock() - (self._t0 or self.clock())
         verdict = "ok"
         if self.step_times:

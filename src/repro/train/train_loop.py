@@ -78,7 +78,7 @@ class Trainer:
         self.data = SyntheticTokens(cfg.data, cfg.model)
         self.ckpt = CheckpointManager(cfg.train.checkpoint_dir,
                                       keep=cfg.train.keep_checkpoints)
-        self.watchdog = Watchdog(WatchdogConfig())
+        self.watchdog = Watchdog(WatchdogConfig(), clock=time.monotonic)
         self.hooks = hooks or []
         self.metrics_log: List[Dict[str, Any]] = []
         self.state: Optional[TrainState] = None

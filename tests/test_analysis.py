@@ -1,0 +1,397 @@
+"""repro.analysis: the AST invariant checker (repro lint).
+
+Each rule gets a planted-violation fixture (positive) and a compliant
+twin (negative) in a throwaway repo-shaped tree; the baseline gets an
+add/expire round trip; the JSON report is schema-checked against the
+registry; and the end-to-end test asserts the real repo lints clean —
+the checked-in ``lint_baseline.json`` is part of that contract.
+"""
+from __future__ import annotations
+
+import json
+import textwrap
+
+import pytest
+
+from repro.analysis import (RULES, SCHEMAS, lint_paths, load_baseline,
+                            render_json, run_lint, schema_version,
+                            update_baseline)
+from repro.analysis.baseline import (BASELINE_FORMAT, BASELINE_VERSION,
+                                     Baseline, BaselineEntry)
+from repro.analysis.report import REPORT_FORMAT, REPORT_VERSION
+from repro.api.cli import main as cli_main
+
+
+def _plant(tmp_path, rel, code):
+    p = tmp_path / rel
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(textwrap.dedent(code))
+    return rel
+
+
+def _findings(tmp_path, rel_or_rels, rules=None):
+    rels = [rel_or_rels] if isinstance(rel_or_rels, str) else rel_or_rels
+    res = run_lint(rels, root=str(tmp_path), rules=rules)
+    return res.findings
+
+
+# --------------------------------------------------------------- rule catalog
+def test_rule_catalog_shape():
+    assert sorted(RULES) == [f"RPL00{i}" for i in range(1, 9)]
+    for rid, rule in RULES.items():
+        assert rule.id == rid
+        assert rule.title and rule.rationale
+        assert rule.check_file or rule.check_project
+
+
+# ------------------------------------------------------------------- RPL001
+def test_rpl001_flags_unseeded_and_entropy_seeded_rng(tmp_path):
+    rel = _plant(tmp_path, "src/repro/foo.py", """\
+        import random
+        import time
+        import numpy as np
+
+        a = np.random.default_rng()
+        b = np.random.default_rng(time.time_ns())
+        c = random.random()
+        d = np.random.normal(0.0, 1.0)
+        """)
+    found = _findings(tmp_path, rel, rules=["RPL001"])
+    assert len(found) == 4
+    assert all(f.rule == "RPL001" for f in found)
+
+
+def test_rpl001_negative_and_tests_scope(tmp_path):
+    code = """\
+        import numpy as np
+        ok1 = np.random.default_rng(0)
+        ok2 = np.random.default_rng(seed=123)
+        """
+    rel = _plant(tmp_path, "src/repro/foo.py", code)
+    assert _findings(tmp_path, rel, rules=["RPL001"]) == []
+    # tests/ may use whatever RNG it likes
+    rel = _plant(tmp_path, "tests/test_foo.py", "import random\n"
+                 "x = random.random()\n")
+    assert _findings(tmp_path, rel, rules=["RPL001"]) == []
+
+
+def test_rpl001_prngkey_float_seed(tmp_path):
+    rel = _plant(tmp_path, "src/repro/foo.py", """\
+        import jax
+        bad = jax.random.PRNGKey(1.5)
+        ok = jax.random.PRNGKey(0)
+        """)
+    found = _findings(tmp_path, rel, rules=["RPL001"])
+    assert len(found) == 1 and "float" in found[0].message
+
+
+# ------------------------------------------------------------------- RPL002
+def test_rpl002_wall_clock_in_clocked_layer(tmp_path):
+    code = """\
+        import time
+        t = time.time()
+        """
+    rel = _plant(tmp_path, "src/repro/core/foo.py", code)
+    found = _findings(tmp_path, rel, rules=["RPL002"])
+    assert len(found) == 1 and "time.time" in found[0].message
+    # same code outside the clocked layers: legal
+    rel = _plant(tmp_path, "src/repro/models/foo.py", code)
+    assert _findings(tmp_path, rel, rules=["RPL002"]) == []
+
+
+def test_rpl002_reference_is_not_a_call(tmp_path):
+    rel = _plant(tmp_path, "src/repro/serve/foo.py", """\
+        import time
+
+        def run(clock=time.perf_counter):
+            return clock()
+        """)
+    assert _findings(tmp_path, rel, rules=["RPL002"]) == []
+
+
+# ------------------------------------------------------------------- RPL003
+def test_rpl003_missing_kwargs_and_nan_literal(tmp_path):
+    rel = _plant(tmp_path, "src/repro/foo.py", """\
+        import json
+        a = json.dumps({"x": 1})
+        b = json.dumps({"x": float("nan")}, sort_keys=True,
+                       allow_nan=False)
+        """)
+    found = _findings(tmp_path, rel, rules=["RPL003"])
+    msgs = [f.message for f in found]
+    assert sum("allow_nan" in m for m in msgs) == 1
+    assert sum("sort_keys" in m for m in msgs) == 1
+    assert sum("non-finite literal" in m for m in msgs) == 1
+
+
+def test_rpl003_negative(tmp_path):
+    rel = _plant(tmp_path, "src/repro/foo.py", """\
+        import json
+        a = json.dumps({"x": 1}, sort_keys=True, allow_nan=False)
+        """)
+    assert _findings(tmp_path, rel, rules=["RPL003"]) == []
+
+
+# ------------------------------------------------------------------- RPL004
+def test_rpl004_unsorted_listing_and_set_iteration(tmp_path):
+    rel = _plant(tmp_path, "src/repro/foo.py", """\
+        import os
+        for f in os.listdir("."):
+            print(f)
+        for x in {1, 2, 3}:
+            print(x)
+        """)
+    found = _findings(tmp_path, rel, rules=["RPL004"])
+    assert len(found) == 2
+
+
+def test_rpl004_sorted_listing_is_legal(tmp_path):
+    rel = _plant(tmp_path, "src/repro/foo.py", """\
+        import os
+        for f in sorted(os.listdir(".")):
+            print(f)
+        for x in sorted({1, 2, 3}):
+            print(x)
+        """)
+    assert _findings(tmp_path, rel, rules=["RPL004"]) == []
+
+
+# ------------------------------------------------------------------- RPL005
+_PARITY_DECL = """\
+    from dataclasses import dataclass
+
+    @dataclass
+    class SimConfig:
+        alpha: float = 1.0
+        beta: float = 2.0
+
+    def run(cfg):
+        return cfg.alpha + cfg.beta
+    """
+
+
+def test_rpl005_one_sided_field_read(tmp_path):
+    rels = [
+        _plant(tmp_path, "src/repro/core/c3sim.py", _PARITY_DECL),
+        _plant(tmp_path, "src/repro/core/jax_engine.py", """\
+            def run(cfg):
+                return cfg.alpha        # beta is silently ignored
+            """),
+    ]
+    found = _findings(tmp_path, rels, rules=["RPL005"])
+    assert len(found) == 1
+    assert found[0].snippet == "SimConfig.beta"
+    assert found[0].path == "src/repro/core/c3sim.py"
+
+
+def test_rpl005_both_sides_read_is_clean(tmp_path):
+    rels = [
+        _plant(tmp_path, "src/repro/core/c3sim.py", _PARITY_DECL),
+        _plant(tmp_path, "src/repro/core/jax_engine.py", """\
+            def run(cfg):
+                return cfg.alpha * cfg.beta
+            """),
+    ]
+    assert _findings(tmp_path, rels, rules=["RPL005"]) == []
+
+
+def test_rpl005_partial_lint_run_skips_contract(tmp_path):
+    rel = _plant(tmp_path, "src/repro/core/c3sim.py", _PARITY_DECL)
+    assert _findings(tmp_path, rel, rules=["RPL005"]) == []
+
+
+# ------------------------------------------------------------------- RPL006
+def test_rpl006_unregistered_format_and_version_drift(tmp_path):
+    rel = _plant(tmp_path, "src/repro/foo.py", """\
+        rogue = {"format": "totally-new-format", "version": 1}
+        drift = {"format": "lit-silicon-telemetry", "version": 99}
+        ok = {"format": "lit-silicon-telemetry", "version": 1}
+        """)
+    found = _findings(tmp_path, rel, rules=["RPL006"])
+    assert len(found) == 2
+    assert any("not registered" in f.message for f in found)
+    assert any("registry declares version" in f.message for f in found)
+
+
+def test_rpl006_resolves_module_constants(tmp_path):
+    rel = _plant(tmp_path, "src/repro/foo.py", """\
+        MY_FORMAT = "lit-silicon-metrics"
+        MY_VERSION = 1
+        doc = {"format": MY_FORMAT, "version": MY_VERSION}
+        """)
+    assert _findings(tmp_path, rel, rules=["RPL006"]) == []
+
+
+# ------------------------------------------------------------------- RPL007
+def test_rpl007_bare_float_equality(tmp_path):
+    rel = _plant(tmp_path, "src/repro/telemetry/foo.py", """\
+        def check(x):
+            if x == 1.5:
+                return True
+            return x == 0.0     # additive identity: allowed
+        """)
+    found = _findings(tmp_path, rel, rules=["RPL007"])
+    assert len(found) == 1
+    # the same comparison outside the replay surfaces is not flagged
+    rel = _plant(tmp_path, "src/repro/models/foo.py",
+                 "def f(x):\n    return x == 1.5\n")
+    assert _findings(tmp_path, rel, rules=["RPL007"]) == []
+
+
+# ------------------------------------------------------------------- RPL008
+def test_rpl008_wall_clock_default_and_body_fallback(tmp_path):
+    rel = _plant(tmp_path, "src/repro/foo.py", """\
+        import time
+
+        class A:
+            def __init__(self, clock=time.monotonic):
+                self.clock = clock
+
+        class B:
+            def __init__(self, clock=None):
+                self.clock = time.monotonic if clock is None else clock
+
+        class C:
+            def __init__(self, clock=None):
+                self.clock = clock
+        """)
+    found = _findings(tmp_path, rel, rules=["RPL008"])
+    assert len(found) == 2
+    assert {f.snippet for f in found} == {"A.__init__.clock",
+                                          "B.__init__.clock"}
+
+
+# ------------------------------------------------------------------ baseline
+def test_baseline_add_expire_roundtrip(tmp_path):
+    rel = _plant(tmp_path, "src/repro/core/foo.py",
+                 "import time\nt = time.time()\n")
+    res = run_lint([rel], root=str(tmp_path), rules=["RPL002"])
+    assert len(res.findings) == 1 and res.exit_code() == 1
+
+    # add: --update-baseline captures the finding as UNREVIEWED
+    bl_path = str(tmp_path / "lint_baseline.json")
+    bl = update_baseline(Baseline.empty(), res.findings)
+    assert all("UNREVIEWED" in e.reason for e in bl.entries)
+    bl.save(bl_path)
+    back = load_baseline(bl_path)
+    assert len(back.entries) == 1
+
+    # suppressed now, and byte-deterministic on re-save
+    res2 = run_lint([rel], root=str(tmp_path), rules=["RPL002"],
+                    baseline=back)
+    assert res2.findings == [] and len(res2.suppressed) == 1
+    assert res2.exit_code() == 0
+    back.save(bl_path + ".2")
+    assert (tmp_path / "lint_baseline.json").read_text() == \
+        (tmp_path / "lint_baseline.json.2").read_text()
+
+    # expire: fix the violation -> the entry is stale and fails the run
+    _plant(tmp_path, "src/repro/core/foo.py", "t = 0.0\n")
+    res3 = run_lint([rel], root=str(tmp_path), rules=["RPL002"],
+                    baseline=back)
+    assert res3.findings == [] and len(res3.stale_baseline) == 1
+    assert res3.exit_code() == 1
+
+    # --update-baseline prunes it
+    pruned = update_baseline(back, res3.findings + res3.suppressed)
+    assert pruned.entries == []
+
+
+def test_baseline_file_scope_suppresses_whole_file(tmp_path):
+    rel = _plant(tmp_path, "benchmarks/bench.py",
+                 "import time\na = time.time()\nb = time.monotonic()\n")
+    bl = Baseline(entries=[BaselineEntry(rule="RPL002", path=rel,
+                                         scope="file", reason="by design")])
+    res = run_lint([rel], root=str(tmp_path), rules=["RPL002"], baseline=bl)
+    assert res.findings == [] and len(res.suppressed) == 2
+    assert res.exit_code() == 0
+
+
+def test_baseline_rejects_malformed_documents(tmp_path):
+    p = tmp_path / "bl.json"
+    p.write_text(json.dumps({"format": "something-else", "version": 1},
+                            sort_keys=True, allow_nan=False))
+    with pytest.raises(ValueError, match=BASELINE_FORMAT):
+        load_baseline(str(p))
+    p.write_text(json.dumps({"format": BASELINE_FORMAT,
+                             "version": BASELINE_VERSION,
+                             "entries": [{"rule": "RPL001"}]},
+                            sort_keys=True, allow_nan=False))
+    with pytest.raises(ValueError, match="missing"):
+        load_baseline(str(p))
+    with pytest.raises(FileNotFoundError):
+        load_baseline(str(tmp_path / "nope.json"))
+
+
+# -------------------------------------------------------------- JSON report
+def test_json_report_schema_and_registry_pins(tmp_path):
+    rel = _plant(tmp_path, "src/repro/foo.py", "import json\n"
+                 "x = json.dumps({})\n")
+    res = run_lint([rel], root=str(tmp_path))
+    doc = json.loads(render_json(res))
+    assert doc["format"] == REPORT_FORMAT
+    assert doc["version"] == REPORT_VERSION
+    assert doc["exit_code"] == 1 and doc["clean"] is False
+    assert doc["counts"] == {"RPL003": 2}
+    assert [f["rule"] for f in doc["findings"]] == ["RPL003", "RPL003"]
+    for f in doc["findings"]:
+        assert set(f) == {"rule", "path", "line", "col", "message",
+                          "snippet"}
+    # the report and baseline formats are themselves registered artifacts
+    assert schema_version(REPORT_FORMAT) == REPORT_VERSION
+    assert schema_version(BASELINE_FORMAT) == BASELINE_VERSION
+    with pytest.raises(KeyError):
+        schema_version("no-such-format")
+
+
+def test_registry_pins_runtime_format_constants():
+    """Every writer-side FORMAT/VERSION constant matches the registry —
+    the invariant RPL006 enforces statically, checked live."""
+    from repro.api.spec import SPEC_FORMAT, SPEC_VERSION
+    from repro.api.sweep import (SWEEP_FORMAT, SWEEP_SPEC_FORMAT,
+                                 SWEEP_VERSION)
+    from repro.obs.incidents import INCIDENTS_FORMAT, INCIDENTS_VERSION
+    from repro.obs.metrics import METRICS_FORMAT, METRICS_VERSION
+    from repro.telemetry.trace_io import TRACE_FORMAT, TRACE_VERSION
+    pairs = [(TRACE_FORMAT, TRACE_VERSION), (SPEC_FORMAT, SPEC_VERSION),
+             (SWEEP_FORMAT, SWEEP_VERSION),
+             (SWEEP_SPEC_FORMAT, SWEEP_VERSION),
+             (METRICS_FORMAT, METRICS_VERSION),
+             (INCIDENTS_FORMAT, INCIDENTS_VERSION)]
+    for fmt, ver in pairs:
+        assert schema_version(fmt) == ver
+    assert set(SCHEMAS) >= {fmt for fmt, _ in pairs}
+
+
+# --------------------------------------------------------------- CLI + e2e
+def test_cli_lint_exit_codes_and_update_baseline(tmp_path, capsys):
+    _plant(tmp_path, "src/repro/core/foo.py",
+           "import time\nt = time.time()\n")
+    argv = ["lint", "--root", str(tmp_path), "--baseline", "none", "src"]
+    assert cli_main(argv) == 1
+    assert cli_main(argv + ["--json"]) == 1
+    out = capsys.readouterr().out
+    doc = json.loads(out.splitlines()[-1] and out[out.index("{"):])
+    assert doc["counts"] == {"RPL002": 1}
+
+    assert cli_main(["lint", "--root", str(tmp_path), "src",
+                     "--update-baseline"]) == 0
+    assert (tmp_path / "lint_baseline.json").exists()
+    assert cli_main(["lint", "--root", str(tmp_path), "src"]) == 0
+
+    assert cli_main(["lint", "--root", str(tmp_path), "src",
+                     "--rules", "RPL999"]) == 2
+    assert cli_main(["lint", "--root", str(tmp_path), "no/such/dir"]) == 2
+    assert cli_main(["lint", "--list-rules"]) == 0
+
+
+def test_repo_lints_clean_end_to_end():
+    """The whole tree passes its own invariants: zero non-baselined
+    findings, zero stale baseline entries, against the committed
+    lint_baseline.json."""
+    result, baseline = lint_paths()
+    assert result.findings == []
+    assert result.stale_baseline == []
+    assert result.clean and result.exit_code() == 0
+    # the shipped baseline is reviewed: no UNREVIEWED placeholders
+    assert all("UNREVIEWED" not in e.reason for e in baseline.entries)

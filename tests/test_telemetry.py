@@ -522,10 +522,11 @@ def test_degrade_through_imputing_sensor_leaves_no_nan_rows(recorded_node):
 # --------------------------------------------------------------------------- #
 # fleet lead sensor (FleetSample.lead_obs + fleet_lead_report)
 # --------------------------------------------------------------------------- #
-def _recorded_cluster(topology="dp", noise_time_s=0.0, iters=12):
+def _recorded_cluster(topology="dp", noise_time_s=0.0, iters=12,
+                      straggler_boost=1.28):
     wl = small_workload(n_layers=8)
     cl = ClusterSim(wl, MI300X_PRESET, SimConfig(seed=1, comm_gbps=40.0),
-                    ClusterConfig(n_nodes=4, straggler_boost=1.28,
+                    ClusterConfig(n_nodes=4, straggler_boost=straggler_boost,
                                   topology=topology),
                     devices_per_node=8, seed=5)
     col = TelemetryCollector(
@@ -548,12 +549,42 @@ def test_fleet_lead_estimate_exact_for_lossless_dp():
     assert "fleet_lead_err=0.0000" in rep.row()
 
 
-def test_fleet_lead_estimator_bias_under_pp():
-    """PP's true lead is bubble time, not a barrier wait: even a lossless
-    sensor shows the estimator's model bias — but the *ranking* (who is
-    the straggler) survives, which is what a fleet manager acts on."""
-    rep = fleet_lead_report(_recorded_cluster("pp"))
-    assert rep.lead_rel_error > 0.0
+def test_fleet_lead_estimate_exact_for_lossless_pp():
+    """PP's bubble structure is deterministic given the stage times, so
+    the topology-aware estimator (telemetry/lead.py) mirrors the 1F1B
+    arithmetic bit-for-bit from a lossless sensor: the barrier
+    estimator's PP model bias is gone, not just reduced."""
+    trace = _recorded_cluster("pp")
+    assert trace.meta["topology_params"]["kind"] == "pp"
+    for fs in trace.fleet:
+        np.testing.assert_array_equal(fs.lead_obs, fs.lead)
+    rep = fleet_lead_report(trace)
+    assert rep.lead_rel_error == 0.0
+    assert rep.majority_correct
+
+
+def test_fleet_lead_estimator_tp_beats_barrier():
+    """TP's per-sync jitter makes even *tied* nodes wait on each other
+    (sum of per-segment maxima > max of sums): a plain barrier estimate
+    reads ~0 lead for a uniform fleet, while the true exposed wait is
+    positive.  The jitter-aware correction closes most of that gap and
+    never does worse."""
+    trace = _recorded_cluster("tp", straggler_boost=1.0)
+    params = trace.meta["topology_params"]
+    assert params["kind"] == "tp" and params["jitter"] > 0
+    err_est = err_barrier = 0.0
+    for fs in trace.fleet:
+        barrier = np.max(fs.t_obs) - fs.t_obs
+        err_est += float(np.abs(fs.lead_obs - fs.lead).sum())
+        err_barrier += float(np.abs(barrier - fs.lead).sum())
+    assert err_est < err_barrier
+
+
+def test_fleet_lead_estimator_tp_straggler_ranking_survives():
+    """With a real straggler the TP correction collapses (n_tied = 1,
+    the straggler alone sets the rendezvous) and the estimate stays a
+    barrier wait — the ranking a fleet manager acts on is preserved."""
+    rep = fleet_lead_report(_recorded_cluster("tp"))
     assert rep.majority_correct
 
 

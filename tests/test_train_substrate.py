@@ -169,11 +169,11 @@ def test_error_feedback_compensates():
 def test_watchdog_rollback_on_nan():
     w = Watchdog()
     w.start_step()
-    assert w.end_step(1.0, 1.0) == "ok"
+    assert w.end_step(1.0, 1.0, dt=1.0) == "ok"
     w.start_step()
-    assert w.end_step(float("nan"), 1.0) == "rollback"
+    assert w.end_step(float("nan"), 1.0, dt=1.0) == "rollback"
     w.start_step()
-    assert w.end_step(1.0, float("inf")) == "rollback"
+    assert w.end_step(1.0, float("inf"), dt=1.0) == "rollback"
 
 
 def test_watchdog_budget_exhaustion():
@@ -181,7 +181,14 @@ def test_watchdog_budget_exhaustion():
     with pytest.raises(RuntimeError):
         for _ in range(10):
             w.start_step()
-            w.end_step(float("nan"), 1.0)
+            w.end_step(float("nan"), 1.0, dt=1.0)
+
+
+def test_watchdog_requires_clock_or_dt():
+    w = Watchdog()                      # no clock injected
+    w.start_step()
+    with pytest.raises(ValueError):
+        w.end_step(1.0, 1.0)            # ... and no dt: must refuse
 
 
 def test_elastic_plan():
